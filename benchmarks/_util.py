@@ -1,0 +1,22 @@
+"""Shared benchmark plumbing: timing + the name,us_per_call,derived CSV row."""
+from __future__ import annotations
+
+import time
+
+
+def timeit(fn, *args, warmup: int = 1, iters: int = 3):
+    for _ in range(warmup):
+        fn(*args)
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args)
+    return (time.time() - t0) / iters * 1e6, out   # us_per_call
+
+
+def row(name: str, us: float, derived) -> dict:
+    return {"name": name, "us_per_call": round(us, 1), "derived": derived}
+
+
+def print_rows(rows):
+    for r in rows:
+        print(f"{r['name']},{r['us_per_call']},{r['derived']}")

@@ -1,0 +1,48 @@
+"""Paper Fig 12 (on-chip energy breakdown) + Fig 13(a) (multi-chip LLaMA
+scaling: speedup/energy vs GPU, C2C share growth 18% -> 35%)."""
+from __future__ import annotations
+
+from repro.perfmodel import gpu_estimate, nldpe_estimate
+from repro.perfmodel.workloads import WORKLOADS
+
+from ._util import row
+
+
+def main(verbose: bool = True):
+    rows = []
+    # Fig 12: component energy breakdown
+    for wl in ("resnet34", "bert_base"):
+        est = nldpe_estimate(WORKLOADS[wl](), batch=16)
+        comp = {k: v for k, v in est.breakdown.items()
+                if k != "chips" and isinstance(v, float)}
+        total = sum(comp.values())
+        shares = {k: v / total for k, v in sorted(comp.items(),
+                                                  key=lambda kv: -kv[1])}
+        if verbose:
+            line = " ".join(f"{k}={v:.1%}" for k, v in shares.items())
+            print(f"fig12/{wl}: {line}")
+        rows.append(row(f"fig12/{wl}", 0.0,
+                        ";".join(f"{k}={v:.3f}" for k, v in shares.items())))
+
+    # Fig 13(a): multi-chip LLaMA scaling
+    for wl in ("llama32_1b", "llama32_3b"):
+        ops = WORKLOADS[wl]()
+        n = nldpe_estimate(ops, batch=8)
+        g = gpu_estimate(ops, batch=8)
+        c2c_share = n.breakdown.get("c2c", 0.0) / n.energy_j
+        if verbose:
+            print(f"fig13a/{wl}: chips={n.breakdown['chips']} "
+                  f"speedup={g.latency_s / n.latency_s:.1f}x "
+                  f"energy_eff={g.energy_j / n.energy_j:.1f}x "
+                  f"c2c_share={c2c_share:.1%} "
+                  f"(paper: ~100x, c2c 18%/35%)")
+        rows.append(row(f"fig13a/{wl}", 0.0,
+                        f"chips={n.breakdown['chips']};"
+                        f"speedup={g.latency_s / n.latency_s:.1f};"
+                        f"energy_eff={g.energy_j / n.energy_j:.1f};"
+                        f"c2c={c2c_share:.3f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Pallas-kernel micro-bench (interpret mode on CPU — wall times are for the
+*simulation*, not TPU; the TPU story is the §Roofline analysis).  Reports
+us_per_call for each kernel and its pure-jnp fast-path twin."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dt
+from repro.core.acam import acam_activation
+from repro.core.crossbar import program_linear
+from repro.core.logdomain import nldpe_matmul
+from repro.kernels.acam_activation.ops import acam_apply
+from repro.kernels.crossbar_vmm.ops import crossbar_matmul
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.nldpe_qmatmul.ops import nldpe_matmul_int8
+
+from ._util import row, timeit
+
+RNG = np.random.default_rng(0)
+
+
+def main(verbose: bool = True):
+    rows = []
+    t = dt.build_table("gelu")
+    x = jnp.asarray(RNG.uniform(-6, 6, (64, 256)).astype(np.float32))
+
+    us_k, _ = timeit(lambda: jax.block_until_ready(acam_apply(x, t)))
+    us_f, _ = timeit(lambda: jax.block_until_ready(acam_activation(x, "gelu")))
+    rows += [row("kernels/acam_activation(interp)", us_k, "16k elems"),
+             row("kernels/acam_piecewise_fastpath", us_f, "16k elems")]
+
+    a = jnp.asarray(RNG.normal(size=(128, 256)).astype(np.float32))
+    b = jnp.asarray(RNG.normal(size=(256, 128)).astype(np.float32))
+    us_k, _ = timeit(lambda: jax.block_until_ready(nldpe_matmul_int8(a, b)))
+    us_f, _ = timeit(lambda: jax.block_until_ready(nldpe_matmul(a, b)))
+    rows += [row("kernels/nldpe_qmatmul(interp)", us_k, "128x256x128"),
+             row("kernels/nldpe_matmul_fused", us_f, "128x256x128")]
+
+    w = jnp.asarray(RNG.normal(size=(256, 128)).astype(np.float32) * 0.1)
+    plan, _ = program_linear(w)
+    xx = jnp.asarray(RNG.normal(size=(64, 256)).astype(np.float32))
+    us_k, _ = timeit(lambda: jax.block_until_ready(crossbar_matmul(xx, plan)))
+    rows.append(row("kernels/crossbar_vmm(interp)", us_k, "64x256x128 A-SL"))
+
+    q = jnp.asarray(RNG.normal(size=(2, 8, 256, 64)).astype(np.float32))
+    k = jnp.asarray(RNG.normal(size=(2, 2, 256, 64)).astype(np.float32))
+    v = jnp.asarray(RNG.normal(size=(2, 2, 256, 64)).astype(np.float32))
+    us_k, _ = timeit(lambda: jax.block_until_ready(
+        flash_attention(q, k, v, bq=64, bk=64)), iters=2)
+    us_f, _ = timeit(lambda: jax.block_until_ready(
+        flash_attention(q, k, v, use_ref=True)), iters=2)
+    rows += [row("kernels/flash_attention(interp)", us_k, "2x8x256x64 GQA"),
+             row("kernels/flash_attention_ref", us_f, "2x8x256x64 GQA")]
+
+    if verbose:
+        for r in rows:
+            print(f"{r['name']:38s} {r['us_per_call']:>12.1f} us  {r['derived']}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

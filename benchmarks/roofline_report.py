@@ -1,0 +1,72 @@
+"""Aggregate experiments/dryrun/*.json into the §Dry-run/§Roofline tables.
+
+Also usable as a generator:
+    python -m benchmarks.roofline_report --markdown > experiments/roofline.md
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from ._util import row
+
+DRYRUN_DIR = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "experiments", "dryrun")
+
+
+def load_reports(directory: str = DRYRUN_DIR, tag: str = ""):
+    out = []
+    for f in sorted(glob.glob(os.path.join(directory, f"*{tag}.json"))):
+        base = os.path.basename(f)[:-5]
+        if tag == "" and not base.endswith(("__16x16", "__2x16x16")):
+            continue                      # skip tagged (hillclimb) variants
+        with open(f) as fh:
+            out.append(json.load(fh))
+    return out
+
+
+def fmt_row(r: dict) -> str:
+    rf = r.get("roofline", {})
+    coll = r.get("collectives", {})
+    return (f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{'ok' if r.get('ok') else 'FAIL'} | "
+            f"{r.get('state_bytes_per_device', 0) / 2**30:.2f} | "
+            f"{rf.get('compute_s', 0):.2e} | {rf.get('analytic_compute_s', 0):.2e} | "
+            f"{rf.get('memory_s', 0):.2e} | {rf.get('collective_s', 0):.2e} | "
+            f"{rf.get('dominant', '-')} | {rf.get('roofline_fraction', 0):.2f} |")
+
+
+HEADER = ("| arch | shape | mesh | ok | state GiB/dev | compute_s | "
+          "analytic_compute_s | memory_s | collective_s | dominant | "
+          "roofline_frac |\n"
+          "|---|---|---|---|---|---|---|---|---|---|---|")
+
+
+def main(verbose: bool = True, markdown: bool = False):
+    reports = load_reports()
+    rows = []
+    lines = [HEADER]
+    n_ok = 0
+    for r in reports:
+        lines.append(fmt_row(r))
+        n_ok += bool(r.get("ok"))
+        rf = r.get("roofline", {})
+        rows.append(row(f"dryrun/{r['arch']}/{r['shape']}/{r['mesh']}",
+                        r.get("compile_s", 0) * 1e6 if r.get("ok") else -1,
+                        f"dom={rf.get('dominant', 'fail')};"
+                        f"frac={rf.get('roofline_fraction', 0):.3f}"))
+    summary = f"{n_ok}/{len(reports)} cells compiled"
+    rows.append(row("dryrun/summary", 0.0, summary))
+    if markdown or verbose:
+        print("\n".join(lines))
+        print(f"\n{summary}")
+    return rows
+
+
+if __name__ == "__main__":
+    p = argparse.ArgumentParser()
+    p.add_argument("--markdown", action="store_true")
+    a = p.parse_args()
+    main(markdown=a.markdown)

@@ -1,0 +1,44 @@
+"""Paper Table I: ACAM rows per bit for 8-bit functions, binary vs Gray."""
+from __future__ import annotations
+
+from repro.core import dt
+from repro.core.functions import TABLE1_FUNCTIONS
+
+from ._util import row, timeit
+
+PAPER_TOTALS = {  # binary / gray from Table I
+    "sigmoid": (248, 128), "tanh": (240, 128), "silu": (228, 128),
+    "gelu": (239, 128), "relu": (248, 128), "identity": (128, 128),
+    "log": (226, 130), "exp": (235, 128),
+}
+
+
+def main(verbose: bool = True):
+    rows = []
+    us, report = timeit(dt.row_count_report, 8, TABLE1_FUNCTIONS,
+                        warmup=0, iters=1)
+    if verbose:
+        print(f"{'fn':9s} {'ours B/G':>12s} {'paper B/G':>12s} "
+              f"{'gray rows MSB->LSB':>24s} {'mse_q':>9s}")
+    for name in TABLE1_FUNCTIONS:
+        e = report[name]
+        t = dt.build_table(name, bits=8, encoding="gray")
+        mse = dt.table_mse(t, vs="quantized")
+        pb, pg = PAPER_TOTALS[name]
+        if verbose:
+            print(f"{name:9s} {e['binary']['total']:5d}/{e['gray']['total']:<5d}"
+                  f" {pb:5d}/{pg:<5d} "
+                  f"{str(list(reversed(e['gray']['rows_per_bit']))):>24s} "
+                  f"{mse:9.1e}")
+        rows.append(row(f"table1/{name}", us / len(TABLE1_FUNCTIONS),
+                        f"B={e['binary']['total']};G={e['gray']['total']};"
+                        f"paper={pb}/{pg};mse_q={mse:.1e}"))
+    sizes = list(reversed(dt.unit_sizing(8)))
+    if verbose:
+        print(f"unit sizing (MSB->LSB): {sizes}  (paper: [1,2,2,5,8,16,32,64])")
+    rows.append(row("table1/unit_sizing", 0.0, f"sizes={sizes}"))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Serve a small LM with batched requests through the NL-DPE numerics mode.
+
+    PYTHONPATH=src python examples/serve_nldpe_attention.py
+
+Prefills a batch of prompts and decodes continuations twice — once in FP32
+and once with the full analog path enabled (log-domain DMMul attention per
+Fig 6c, ACAM activations, ACAM softmax) — and reports agreement between the
+two decodes (greedy token match rate), i.e. the deployment-accuracy story
+of the paper at framework level.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.engine import NLDPEConfig
+from repro.launch.serve import build_decode_step, build_prefill_step
+from repro.models import lm
+from repro.nn.module import param_dtype
+
+
+def main():
+    cfg = dataclasses.replace(get_config("qwen2_5_3b", reduced=True),
+                              activation_dtype=jnp.float32)
+    with param_dtype(jnp.float32):
+        params = lm.init_params(jax.random.key(0), cfg)
+    B, P, G = 4, 24, 24
+    prompts = jax.random.randint(jax.random.key(1), (B, P), 0, cfg.vocab_size)
+
+    def generate(nldpe):
+        cache = lm.init_model_cache(cfg, B, P + G, dtype=jnp.float32)
+        prefill = jax.jit(build_prefill_step(cfg, nldpe=nldpe))
+        decode = jax.jit(build_decode_step(cfg, nldpe=nldpe))
+        logits, cache = prefill(params, cache, prompts)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        toks = [tok]
+        for i in range(G - 1):
+            logits, cache = decode(params, cache, tok, jnp.int32(P + i))
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            toks.append(tok)
+        return jnp.stack(toks, axis=1)
+
+    fp = generate(NLDPEConfig(enabled=False))
+    analog = generate(NLDPEConfig(enabled=True))
+    match = float(jnp.mean((fp == analog).astype(jnp.float32)))
+    print(f"[serve] greedy-token agreement FP32 vs NL-DPE mode: {match:.1%}")
+    print(f"[serve] fp32   row0: {fp[0, :12].tolist()}")
+    print(f"[serve] analog row0: {analog[0, :12].tolist()}")
+    print("serve example OK")
+
+
+if __name__ == "__main__":
+    main()

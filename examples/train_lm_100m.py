@@ -1,0 +1,89 @@
+"""End-to-end driver: train a ~100M-parameter qwen2-style LM for a few
+hundred steps on the synthetic Markov corpus, with checkpointing and the
+WSD schedule.
+
+    PYTHONPATH=src python examples/train_lm_100m.py [--steps 300]
+
+This is the full production path at laptop scale: config -> init -> sharded
+train step (identical code to the 512-chip dry-run, minus the mesh) ->
+fault-tolerant loop -> checkpoints.  Expect the loss to fall from ~ln(V)
+toward the corpus entropy.
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs import get_config
+from repro.data.synthetic import DataConfig, make_batch_fn
+from repro.launch.train import build_train_step
+from repro.models import lm
+from repro.nn.module import param_dtype
+from repro.optim import adamw
+from repro.optim.schedules import wsd
+from repro.runtime.fault_tolerance import resilient_loop
+
+
+def hundred_m_config():
+    base = get_config("qwen2_7b")
+    return dataclasses.replace(
+        base, n_layers=8, d_model=512, n_heads=8, n_kv_heads=4, d_ff=2048,
+        vocab_size=4096, scan_remat=False, activation_dtype=jnp.float32)
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--steps", type=int, default=300)
+    p.add_argument("--batch", type=int, default=8)
+    p.add_argument("--seq", type=int, default=128)
+    p.add_argument("--ckpt-dir", default="/tmp/nldpe_100m_ckpt")
+    args = p.parse_args()
+
+    cfg = hundred_m_config()
+    with param_dtype(jnp.float32):
+        params = lm.init_params(jax.random.key(0), cfg)
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    print(f"[100m] params: {n_params / 1e6:.1f}M")
+
+    opt_cfg = adamw.AdamWConfig(
+        lr=wsd(3e-4, warmup=20, stable=int(args.steps * 0.6),
+               decay=int(args.steps * 0.3)))
+    opt = adamw.init(params)
+    # a 512-symbol Markov corpus is learnable within a few hundred steps
+    # (token ids stay valid for the 4096-entry model vocab)
+    data = DataConfig(vocab_size=512, seq_len=args.seq,
+                      global_batch=args.batch, seed=0)
+    batch_fn = jax.jit(make_batch_fn(data))
+    step_fn = jax.jit(build_train_step(cfg, opt_cfg))
+    manager = CheckpointManager(args.ckpt_dir, keep=2, async_write=True)
+
+    losses = []
+
+    def one_step(state, i):
+        params, opt = state
+        batch = batch_fn(jnp.int32(i))
+        t0 = time.time()
+        params, opt, metrics = step_fn(params, opt, batch)
+        loss = float(metrics["loss"])
+        losses.append(loss)
+        if i % 20 == 0:
+            print(f"[100m] step {i:4d} loss {loss:.4f} lr "
+                  f"{float(metrics['lr']):.2e} "
+                  f"({(time.time() - t0) * 1e3:.0f} ms)")
+        return (params, opt)
+
+    state, report = resilient_loop(one_step, (params, opt), steps=args.steps,
+                                   manager=manager, ckpt_every=100)
+    manager.wait()
+    print(f"[100m] done. loss {losses[0]:.3f} -> {losses[-1]:.3f} "
+          f"(restarts={report.restarts}, stragglers="
+          f"{len(report.straggler_events)})")
+    if args.steps >= 200:
+        assert losses[-1] < losses[0] * 0.8, "training did not learn"
+
+
+if __name__ == "__main__":
+    main()

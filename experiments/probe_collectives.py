@@ -1,0 +1,84 @@
+"""Hillclimb forensics: lower a cell, rank collectives, attribute to loops.
+
+    PYTHONPATH=src python experiments/probe_collectives.py <arch> <shape> [rules]
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import re
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch import dryrun  # noqa: E402  (sets flags again, harmless)
+from repro.utils.hlo import parse_collectives  # noqa: E402
+
+
+def computation_blocks(hlo: str):
+    """Map computation name -> text block."""
+    blocks = {}
+    name = None
+    buf = []
+    for line in hlo.splitlines():
+        m = re.match(r"^(%?[\w\.\-]+)\s.*\{\s*$", line)
+        if m and not line.startswith(" "):
+            name = m.group(1).lstrip("%")
+            buf = [line]
+            continue
+        if name is not None:
+            buf.append(line)
+            if line.startswith("}"):
+                blocks[name] = "\n".join(buf)
+                name = None
+    return blocks
+
+
+def while_bodies(hlo: str):
+    return set(re.findall(r"body=%?([\w\.\-]+)", hlo))
+
+
+def main():
+    arch, shape = sys.argv[1], sys.argv[2]
+    rules = sys.argv[3] if len(sys.argv) > 3 else None
+    import json
+
+    # reuse lower_cell internals but keep the compiled text
+    import repro.launch.dryrun as dr
+    report = {}
+    # monkey-patch to capture hlo
+    orig = dr.collective_summary
+    captured = {}
+
+    def capture(hlo, n, **kw):
+        captured["hlo"] = hlo
+        return orig(hlo, n, **kw)
+
+    dr.collective_summary = capture
+    report = dr.lower_cell(arch, shape, multi_pod=False, rules_name=rules)
+    dr.collective_summary = orig
+    hlo = captured["hlo"]
+
+    bodies = while_bodies(hlo)
+    blocks = computation_blocks(hlo)
+    print(f"\nwhile bodies: {len(bodies)}; computations: {len(blocks)}")
+
+    rows = []
+    for comp, text in blocks.items():
+        in_loop = comp in bodies
+        for op in parse_collectives(text, 256):
+            rows.append((op.wire_bytes, in_loop, comp, op.kind, op.line[:160]))
+    # ENTRY-level ops (not inside any block we matched) — parse whole text too
+    rows.sort(key=lambda r: -r[0])
+    print(f"\ntop collectives (wire bytes/device, loop-scaled not applied):")
+    for wb, in_loop, comp, kind, line in rows[:14]:
+        tag = "LOOP" if in_loop else "once"
+        print(f"  {wb/2**30:8.3f} GiB  {tag}  {kind:18s} {comp[:28]:28s} {line[:110]}")
+    total_loop = sum(r[0] for r in rows if r[1])
+    total_once = sum(r[0] for r in rows if not r[1])
+    print(f"\nloop-body total {total_loop/2**30:.2f} GiB/dev/iter; "
+          f"once total {total_once/2**30:.2f} GiB/dev")
+    print(json.dumps(report.get("roofline"), indent=1))
+
+
+if __name__ == "__main__":
+    main()

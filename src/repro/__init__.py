@@ -1,0 +1,2 @@
+"""repro: NL-DPE (Analog In-memory Non-Linear Dot Product Engine) in JAX."""
+__version__ = "1.0.0"

@@ -1,0 +1,3 @@
+"""Assigned-architecture configs (exact public configurations) + shapes."""
+from .base import (ARCH_NAMES, SHAPES, ArchConfig, ShapeSpec, cells,
+                   get_config, input_specs)

@@ -1,0 +1,159 @@
+"""ArchConfig + the assigned input-shape registry + input_specs().
+
+Every assigned architecture gets one module in this package defining
+``CONFIG`` (exact public configuration) and ``reduced()`` (a tiny same-family
+config for CPU smoke tests).  ``get_config(name)`` resolves either.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+import jax
+import jax.numpy as jnp
+
+from ..nn.moe import MoESpec
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                       # dense | moe | hybrid | ssm | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int | None = None
+    qkv_bias: bool = False
+    act: str = "silu"
+    gated_mlp: bool = True
+    rope_theta: float = 10000.0
+    rope_theta_global: float | None = None
+    tie_embeddings: bool = False
+    layer_pattern: tuple = ("attn",)
+    window: int | None = None
+    moe: MoESpec | None = None
+    d_rnn: int | None = None
+    frontend: str | None = None       # "siglip_stub" | "encodec_stub"
+    n_patches: int = 256              # vlm prefix length
+    qk_norm: bool = False
+    attn_softcap: float | None = None
+    logit_softcap: float | None = None
+    embed_scale: bool = False
+    scan_remat: bool = True
+    supports_long: bool = False       # sub-quadratic -> run long_500k
+    kv_cache_dtype: str = "bf16"      # "int8" = paper-faithful 8-bit cache
+    activation_dtype: object = jnp.bfloat16
+    notes: str = ""
+    source: str = ""
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embeddings + blocks + head)."""
+        d, v = self.d_model, self.vocab_size
+        hd = self.resolved_head_dim
+        per_layer = {}
+        total = v * d                                     # embed
+        if not self.tie_embeddings:
+            total += d * v                                # lm_head
+        pat = self.layer_pattern
+        counts = {t: 0 for t in pat}
+        for i in range(self.n_layers):
+            counts[pat[i % len(pat)]] = counts.get(pat[i % len(pat)], 0) + 1
+        for t, n in counts.items():
+            if t in ("attn", "local", "global", "moe"):
+                attn = d * hd * (self.n_heads + 2 * self.n_kv_heads) + self.n_heads * hd * d
+            else:
+                attn = 0
+            if t == "moe":
+                m = self.moe
+                ffn = m.n_experts * (3 * d * m.d_expert_ff) + d * m.n_experts
+            elif t == "rwkv":
+                ffn = 2 * d * self.d_ff + 6 * d * d       # cm + tm projections
+                attn = 0
+            elif t == "rec":
+                dr = self.d_rnn or d
+                attn = 2 * d * dr + 3 * dr * dr + dr * d  # recurrent block
+                ffn = (3 if self.gated_mlp else 2) * d * self.d_ff
+            else:
+                ffn = (3 if self.gated_mlp else 2) * d * self.d_ff
+            total += n * (attn + ffn + 2 * d)
+        return total
+
+    def active_param_count(self) -> int:
+        """MoE: routed-active params per token (6*N_active*D accounting)."""
+        if self.moe is None:
+            return self.param_count()
+        m = self.moe
+        dense_like = self.param_count() - self.n_layers * m.n_experts * 3 * self.d_model * m.d_expert_ff
+        return dense_like + self.n_layers * m.top_k * 3 * self.d_model * m.d_expert_ff
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str          # train | prefill | decode | long_decode
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "long_decode"),
+}
+
+ARCH_NAMES = [
+    "qwen3_moe_30b_a3b", "llama4_scout_17b_a16e", "qwen2_7b", "gemma3_27b",
+    "minicpm_2b", "qwen2_5_3b", "recurrentgemma_9b", "paligemma_3b",
+    "rwkv6_3b", "musicgen_large",
+]
+
+
+def get_config(name: str, reduced: bool = False) -> ArchConfig:
+    mod = importlib.import_module(f".{name.replace('-', '_')}", __package__)
+    return mod.reduced() if reduced else mod.CONFIG
+
+
+def cells(include_skipped: bool = False):
+    """All (arch, shape) dry-run cells; long_500k only for sub-quadratic."""
+    out = []
+    for a in ARCH_NAMES:
+        cfg = get_config(a)
+        for s in SHAPES.values():
+            skipped = (s.kind == "long_decode" and not cfg.supports_long)
+            if include_skipped or not skipped:
+                out.append((a, s.name, skipped))
+    return out
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec):
+    """ShapeDtypeStruct stand-ins for every model input of the cell.
+
+    train   : tokens + labels (B, S)
+    prefill : tokens (B, S)
+    decode  : token (B,), pos (), cache for seq_len context
+    VLM adds patch_embeds (B, P, d) and shortens tokens accordingly.
+    """
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    specs = {}
+    text_len = s - (cfg.n_patches if cfg.frontend == "siglip_stub" else 0)
+    if shape.kind == "train":
+        specs["tokens"] = jax.ShapeDtypeStruct((b, text_len), i32)
+        specs["labels"] = jax.ShapeDtypeStruct((b, text_len), i32)
+    elif shape.kind == "prefill":
+        specs["tokens"] = jax.ShapeDtypeStruct((b, text_len), i32)
+    else:  # decode / long_decode
+        specs["token"] = jax.ShapeDtypeStruct((b,), i32)
+        specs["pos"] = jax.ShapeDtypeStruct((), i32)
+    if cfg.frontend == "siglip_stub" and shape.kind in ("train", "prefill"):
+        specs["patch_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.n_patches, cfg.d_model), jnp.bfloat16)
+    return specs

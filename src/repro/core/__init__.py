@@ -1,0 +1,18 @@
+"""NL-DPE core: the paper's contribution as composable JAX modules."""
+from .acam import (ACAMUnit, acam_activation, eval_acam, eval_piecewise,
+                   eval_table, eval_table_np, get_piecewise, get_table,
+                   gray_decode_bits, match_bits)
+from .attention import nldpe_attention, reference_attention
+from .differentiable import DiffACAMConfig, diff_acam_forward, hard_acam_forward
+from .dt import ACAMTable, build_table, row_count_report, table_mse, unit_sizing
+from .engine import NLDPEConfig, OFF, ON
+from .functions import FUNCTIONS, JNP_FUNCTIONS, TABLE1_FUNCTIONS
+from .logdomain import (DEFAULT_CFG, LogDomainConfig, log_quantize,
+                        nldpe_log_softmax, nldpe_matmul, nldpe_mul,
+                        nldpe_softmax)
+from .naf import NAFResult, finetune_table, inject_crossbar_noise
+from .noise import DEFAULT, IDEAL, NoiseModel, noisy_thresholds, noisy_weight
+from .quantization import (LogQuantSpec, QuantSpec, binary_to_gray,
+                           fake_quant_ste, gray_to_binary, log_spec_for,
+                           spec_for)
+from .slicing import SlicedWeights, effective_weight, plan_asl, plan_dsl

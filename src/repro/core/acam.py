@@ -1,0 +1,193 @@
+"""ACAM array evaluation — functional simulation of the circuit of Fig 2/4(e).
+
+Three evaluation paths, all semantically identical in the noise-free case:
+
+1. ``eval_table_np``      — numpy oracle (used by tests / Table I MSE).
+2. ``match_bits``/``eval_table`` — jit-safe jnp interval matcher; accepts
+   (possibly noise-perturbed) threshold tensors, so it is also the forward
+   model for inference-under-noise.  This mirrors the hardware exactly:
+   per-bit row match (lo <= DL <= hi), OR across rows (match lines), XOR
+   Gray decode.
+3. ``compile_piecewise``/``eval_piecewise`` — the *fast path*: in the
+   noise-free case the whole 8-bit ACAM unit is a piecewise-constant map of
+   the scalar input, so we compile the intervals into sorted breakpoints and
+   evaluate with a searchsorted gather.  This is what the model-level NL-DPE
+   numerics mode uses; equivalence is asserted in tests.
+
+The Pallas kernel in ``repro/kernels/acam_activation`` implements path (2)
+with VMEM tiling for the TPU target.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .dt import ACAMTable, build_table, unit_sizing
+from .quantization import QuantSpec
+
+# ---------------------------------------------------------------------------
+# Path 2: jit-safe interval matching (hardware-faithful)
+# ---------------------------------------------------------------------------
+
+
+def match_bits(lo: jax.Array, hi: jax.Array, x: jax.Array) -> jax.Array:
+    """Row match + OR: (bits, rows) thresholds, (...,) inputs -> (..., bits) {0,1}.
+
+    Bit index 0 = LSB.  Equivalent to the ML pre-charge/pull-down circuit:
+    a row matches iff lo <= x <= hi; the bit is the OR over its rows.
+    """
+    xe = x[..., None, None]
+    m = (xe >= lo) & (xe <= hi)
+    return jnp.any(m, axis=-1).astype(jnp.int32)
+
+
+def gray_decode_bits(g: jax.Array) -> jax.Array:
+    """(..., bits) Gray bit-planes -> (..., bits) binary planes.
+
+    b_i = XOR(g_{n-1}, ..., g_i): reverse-cumulative XOR — the 7-XOR decode
+    chain of Fig 4(e).
+    """
+    rev = jnp.flip(g, axis=-1)                     # MSB first
+    csum = jnp.cumsum(rev, axis=-1) % 2            # XOR == mod-2 sum of bits
+    return jnp.flip(csum, axis=-1)
+
+
+def eval_table(lo: jax.Array, hi: jax.Array, x: jax.Array,
+               out_lo: float, out_step: float, encoding: str = "gray") -> jax.Array:
+    """Full ACAM unit: thresholds -> dequantized function value."""
+    g = match_bits(lo, hi, x)
+    b = gray_decode_bits(g) if encoding == "gray" else g
+    bits = b.shape[-1]
+    weights = (2 ** jnp.arange(bits)).astype(jnp.float32)
+    code = jnp.sum(b.astype(jnp.float32) * weights, axis=-1)
+    return code * out_step + out_lo
+
+
+def eval_acam(table: ACAMTable, x: jax.Array,
+              lo: jax.Array | None = None, hi: jax.Array | None = None) -> jax.Array:
+    """Convenience wrapper; pass noisy (lo, hi) to simulate device noise."""
+    lo = jnp.asarray(table.lo) if lo is None else lo
+    hi = jnp.asarray(table.hi) if hi is None else hi
+    return eval_table(lo, hi, x, table.out_spec.lo, table.out_spec.step,
+                      table.encoding)
+
+
+# ---------------------------------------------------------------------------
+# Path 1: numpy oracle
+# ---------------------------------------------------------------------------
+
+
+def eval_table_np(table: ACAMTable, x: np.ndarray) -> np.ndarray:
+    x = np.asarray(x, np.float64)
+    xe = x[..., None, None]
+    m = (xe >= table.lo) & (xe <= table.hi)
+    g = np.any(m, axis=-1).astype(np.int64)        # (..., bits) gray/binary
+    if table.encoding == "gray":
+        rev = g[..., ::-1]
+        b = (np.cumsum(rev, axis=-1) % 2)[..., ::-1]
+    else:
+        b = g
+    code = (b * (1 << np.arange(table.bits))).sum(-1)
+    return code * table.out_spec.step + table.out_spec.lo
+
+
+# ---------------------------------------------------------------------------
+# Path 3: compiled piecewise-constant fast path
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class PiecewiseFn:
+    """Sorted breakpoints b_0<...<b_{K-1} and K+1 region values."""
+
+    name: str
+    breakpoints: np.ndarray    # (K,)   float32
+    values: np.ndarray         # (K+1,) float32
+
+    def as_jnp(self):
+        return jnp.asarray(self.breakpoints), jnp.asarray(self.values)
+
+
+def compile_piecewise(table: ACAMTable) -> PiecewiseFn:
+    """Collapse the per-bit intervals into one piecewise-constant map."""
+    bps = np.unique(np.concatenate([
+        table.lo[table.lo < 1e29].ravel(), table.hi[table.hi > -1e29].ravel()]))
+    # midpoints of each region — evaluate via the oracle to get region values
+    edges = np.concatenate([[bps[0] - 1.0], bps, [bps[-1] + 1.0]])
+    mids = 0.5 * (edges[:-1] + edges[1:])
+    vals = eval_table_np(table, mids).astype(np.float32)
+    return PiecewiseFn(table.name, bps.astype(np.float32), vals)
+
+
+def eval_piecewise(breakpoints: jax.Array, values: jax.Array, x: jax.Array) -> jax.Array:
+    """values[searchsorted(breakpoints, x)] — jit/vmap-safe."""
+    idx = jnp.searchsorted(breakpoints, x, side="left")
+    return jnp.take(values, idx, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# ACAM unit: fixed-silicon sizing shared by all functions (paper §III-C end)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ACAMUnit:
+    """One ACAM unit = ``bits`` arrays with fixed per-bit row capacity.
+
+    The paper sizes arrays to the max requirement over its model zoo
+    (1,2,2,5,8,16,32,64 from MSB; 130 cells + 7 XOR gates).  ``fit`` checks a
+    table against capacity; ``program`` pads tables to capacity so that a
+    single jit'd evaluator serves every function.
+    """
+
+    bits: int
+    capacity: tuple[int, ...]            # index 0 = LSB
+
+    @classmethod
+    def profiled(cls, bits: int = 8, functions: list[str] | None = None) -> "ACAMUnit":
+        return cls(bits=bits, capacity=tuple(unit_sizing(bits, functions)))
+
+    @property
+    def total_cells(self) -> int:
+        return int(sum(self.capacity))
+
+    def fits(self, table: ACAMTable) -> bool:
+        return all(r <= c for r, c in zip(table.rows_per_bit, self.capacity))
+
+    def program(self, table: ACAMTable) -> ACAMTable:
+        if not self.fits(table):
+            raise ValueError(f"table {table.name} exceeds unit capacity "
+                             f"{table.rows_per_bit} > {self.capacity}")
+        return table.padded(max(self.capacity))
+
+
+# Default tables for the standard activation zoo (built lazily, cached).
+_TABLE_CACHE: dict[tuple, ACAMTable] = {}
+_PW_CACHE: dict[tuple, PiecewiseFn] = {}
+
+
+def get_table(name: str, bits: int = 8, encoding: str = "gray",
+              in_domain: tuple[float, float] | None = None) -> ACAMTable:
+    key = (name, bits, encoding, in_domain)
+    if key not in _TABLE_CACHE:
+        _TABLE_CACHE[key] = build_table(name, bits=bits, encoding=encoding,
+                                        in_domain=in_domain)
+    return _TABLE_CACHE[key]
+
+
+def get_piecewise(name: str, bits: int = 8,
+                  in_domain: tuple[float, float] | None = None) -> PiecewiseFn:
+    key = (name, bits, in_domain)
+    if key not in _PW_CACHE:
+        _PW_CACHE[key] = compile_piecewise(get_table(name, bits, "gray", in_domain))
+    return _PW_CACHE[key]
+
+
+def acam_activation(x: jax.Array, name: str, bits: int = 8,
+                    in_domain: tuple[float, float] | None = None) -> jax.Array:
+    """Model-level op: apply the ACAM-computed activation (fast path)."""
+    bp, vals = get_piecewise(name, bits, in_domain).as_jnp()
+    return eval_piecewise(bp, vals, x).astype(x.dtype)

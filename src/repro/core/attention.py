@@ -1,0 +1,76 @@
+"""NL-DPE attention (paper Fig 6c): the full analog attention pipeline.
+
+Mapping decisions from the paper:
+
+* Q/K/V linear layers run on crossbars; the ``log`` needed by the DMMuls is
+  fused into them as the activation following the Linear layer, so Q, K, V
+  leave their NL-DPEs already log-quantized (sign-magnitude 8-bit codes).
+* DMMul_1 = exp(logQ + logK) summed over d_k  -> scores.
+* Softmax runs as Fig 6b but stops at step 4: its log-scale output feeds
+  DMMul_2 directly (the exp/log inverse pair is elided).
+* DMMul_2 = exp(log_softmax + logV) summed over L.
+* 1/sqrt(d_k) scaling is fused into W_Q at deployment (paper §II-D note),
+  modeled here by scaling q before encoding.
+
+This module provides the *numerics* of that pipeline over already-projected
+q/k/v tensors; the model-level integration (which swaps this in for the
+reference attention) lives in repro/nn/attention.py behind NLDPEConfig.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .logdomain import (DEFAULT_CFG, LogDomainConfig, log_quantize,
+                        nldpe_log_softmax, nldpe_matmul_loga)
+
+
+def nldpe_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    cfg: LogDomainConfig = DEFAULT_CFG,
+                    causal: bool = True,
+                    mask: jax.Array | None = None) -> jax.Array:
+    """(B, H, Lq, D), (B, H, Lk, D), (B, H, Lk, D) -> (B, H, Lq, D).
+
+    GQA/MQA: callers repeat or reshape K/V heads before entry (the log-K/V
+    codes are shared across the query group — one ACAM output feeds all).
+    """
+    d = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.float32(d))
+
+    # crossbar outputs pass through log ACAMs (fused activation)
+    q_l = log_quantize(q * scale, cfg)     # reconstructed values s*exp(code)
+    k_l = log_quantize(k, cfg)
+    # DMMul_1: matmul over log-quantized reconstructions (fused mode)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q_l, k_l)
+
+    full_mask = None
+    if causal:
+        lq, lk = q.shape[-2], k.shape[-2]
+        full_mask = jnp.tril(jnp.ones((lq, lk), bool), k=lk - lq)[None, None]
+    if mask is not None:
+        full_mask = mask if full_mask is None else (full_mask & mask)
+
+    # Softmax steps 1-4; stays in log domain (step-5 exp elided into DMMul_2).
+    # Masked (future) positions are gated digitally — they are never driven
+    # onto the ACAM word lines in the autoregressive dataflow.
+    logp = nldpe_log_softmax(scores, cfg, axis=-1, mask=full_mask)
+
+    # DMMul_2: exp(logp) contracted against log-quantized V
+    out = nldpe_matmul_loga(logp, v, cfg, mask=full_mask)
+    return out
+
+
+def reference_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                        causal: bool = True,
+                        mask: jax.Array | None = None) -> jax.Array:
+    """FP32 oracle with identical masking semantics."""
+    d = q.shape[-1]
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(jnp.float32(d))
+    if causal:
+        lq, lk = q.shape[-2], k.shape[-2]
+        cm = jnp.tril(jnp.ones((lq, lk), bool), k=lk - lq)
+        scores = jnp.where(cm, scores, -jnp.inf)
+    if mask is not None:
+        scores = jnp.where(mask, scores, -jnp.inf)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v)

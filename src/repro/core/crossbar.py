@@ -1,0 +1,77 @@
+"""Noisy crossbar VMM simulation (paper §II-A, §IV-B).
+
+The analog pipeline per crossbar pass:
+
+  x --DAC(8b)--> word-line voltages --Kirchhoff--> bit-line currents
+    = V_read * x . (G+ - G-)  (+ A-SL residual cells / 10)
+
+We simulate at the *weight* level: conductances from a ``SlicedWeights``
+plan are read with Eq 6 noise, converted back to effective weights, and the
+VMM is an exact matmul of the 8-bit-quantized input against the effective
+weight (input DAC slicing is linear, so shift-and-add over input bit slices
+is algebraically identical to one INT8 pass — we keep a per-slice mode for
+read-noise fidelity, since every analog pass re-reads the cells).
+
+The deterministic fused inner loop is the ``repro/kernels/crossbar_vmm``
+Pallas kernel; this module is the stochastic wrapper around it.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .noise import DEFAULT, NoiseModel
+from .quantization import QuantSpec
+from .slicing import RESIDUAL_GAIN, SlicedWeights, effective_weight, plan_asl
+
+
+def program_linear(w: jax.Array, rng: jax.Array | None = None,
+                   model: NoiseModel = DEFAULT) -> tuple[SlicedWeights, jax.Array]:
+    """Program a weight matrix with analog slicing; returns (plan, eps)."""
+    w_max = float(jnp.max(jnp.abs(w)))
+    if w_max == 0.0:
+        w_max = 1.0
+    return plan_asl(w, w_max, model, prog_rng=rng)
+
+
+def crossbar_vmm(x: jax.Array, plan: SlicedWeights,
+                 rng: jax.Array | None = None,
+                 model: NoiseModel = DEFAULT,
+                 input_spec: QuantSpec | None = None,
+                 dac_slices: int = 1,
+                 saf_rate: float = 0.0) -> jax.Array:
+    """y = DAC(x) @ W_eff with per-pass read noise.
+
+    dac_slices > 1 reproduces the hardware's repeated analog passes (one per
+    input bit slice): each pass sees a fresh read-noise realization, and the
+    shift-and-add recombines them.  dac_slices=1 is the fused fast path.
+    """
+    xq = input_spec.apply(x) if input_spec is not None else x
+    if dac_slices <= 1 or rng is None:
+        w_eff = effective_weight(plan, rng, model, saf_rate)
+        return xq @ w_eff
+
+    # split the quantized input code into dac_slices equal bit groups
+    assert input_spec is not None, "per-slice mode needs an input QuantSpec"
+    bits = input_spec.bits
+    assert bits % dac_slices == 0
+    k = bits // dac_slices
+    code = input_spec.quantize(x)
+    out = None
+    for s in range(dac_slices):
+        digit = (code >> (s * k)) & ((1 << k) - 1)
+        x_s = digit.astype(jnp.float32)
+        w_eff = effective_weight(plan, jax.random.fold_in(rng, s), model, saf_rate)
+        y_s = (x_s @ w_eff) * float(1 << (s * k))
+        out = y_s if out is None else out + y_s
+    # undo the code scaling: x = code * step + lo  => handle affine offset
+    y = out * input_spec.step
+    offset = jnp.sum(w_eff, axis=0) * input_spec.lo  # last pass W as proxy
+    return y + offset
+
+
+def ideal_vmm(x: jax.Array, w: jax.Array,
+              input_spec: QuantSpec | None = None) -> jax.Array:
+    """Digital reference at matching input quantization."""
+    xq = input_spec.apply(x) if input_spec is not None else x
+    return xq @ w

@@ -1,0 +1,135 @@
+"""Differentiable ACAM surrogate — paper Algorithm 1, in JAX.
+
+The comparisons of a DT / the ML pull-downs of an ACAM are non-differentiable;
+Algorithm 1 replaces them so that per-DT threshold fine-tuning (NAF step 4)
+can backpropagate into the stored thresholds:
+
+  line 2-3 : thresholds -> conductances (clip to [g_min, g_max])
+  line 4-5 : inject cell noise (Eq 6)
+  line 6-7 : noisy conductances -> noisy thresholds
+  line 8   : ReLU(x - w_lo) * ReLU(w_hi - x)  — differentiable window match
+  line 9   : Sum over rows                    — differentiable OR
+  line 10  : m / (m + eps)                    — squash to ~{0, 1}
+  line 13-17: Gray->binary via b_i = (m_i - b_{i+1})^2  — differentiable XOR
+  line 18  : y = sum b_i 2^i
+
+Crucially, the threshold <-> conductance map goes through the *measured ACAM
+transfer function* TH(G) = exp(a log G + b) + c (Eq 7, Fig 7c).  TH is
+nonlinear and the conductance noise is value-dependent (Eq 5), so the noise
+seen by a threshold is biased and position-dependent — exactly the
+systematic error that NAF learns to pre-compensate.  (An earlier linear map
+here made the noise zero-mean in threshold units, and fine-tuning had
+nothing to learn; see EXPERIMENTS.md §NAF for the ablation.)
+
+Shapes: x (...,), w_lo/w_hi (bits, rows) -> y (...,).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .noise import DEFAULT, IDEAL, NoiseModel
+
+
+@dataclasses.dataclass(frozen=True)
+class DiffACAMConfig:
+    bits: int = 8
+    eps: float = 1e-6
+    th_lo: float = -8.0            # function-input domain mapped onto TH range
+    th_hi: float = 8.0
+    relu_scale: float = 1.0
+
+
+def _thresholds_through_cells(rng: jax.Array | None, w: jax.Array,
+                              cfg: DiffACAMConfig, model: NoiseModel) -> jax.Array:
+    """Algorithm 1 lines 2-6 + Eq 7 for one threshold tensor.
+
+    domain x -> TH volts (affine) -> G (Eq 7 inverse, clipped) -> Eq 6 noise
+    -> TH volts (Eq 7) -> domain x.  Padding rows (|th|>=1e29) pass through.
+    """
+    pad = jnp.abs(w) >= 1e29
+    th_min = model.threshold_of_g(jnp.float32(model.g_min))
+    th_max = model.threshold_of_g(jnp.float32(model.g_max))
+    span = cfg.th_hi - cfg.th_lo
+    u = (jnp.where(pad, cfg.th_lo, w) - cfg.th_lo) / span
+    v = th_min + jnp.clip(u, 0.0, 1.0) * (th_max - th_min)
+    g = jnp.clip(model.g_of_threshold(v), model.g_min, model.g_max)
+    if rng is not None and model.scale > 0.0:
+        g = model.readout(rng, g)
+    v2 = model.threshold_of_g(g)
+    w2 = cfg.th_lo + (v2 - th_min) / (th_max - th_min) * span
+    return jnp.where(pad, w, w2)
+
+
+def diff_acam_forward(x: jax.Array, w_lo: jax.Array, w_hi: jax.Array,
+                      rng: jax.Array | None = None,
+                      cfg: DiffACAMConfig = DiffACAMConfig(),
+                      model: NoiseModel = IDEAL,
+                      out_lo: float = 0.0, out_step: float = 1.0) -> jax.Array:
+    """Differentiable 8-bit ACAM output for inputs x (soft binary code)."""
+    bits = w_lo.shape[0]
+    if rng is not None:
+        k1, k2 = jax.random.split(rng)
+    else:
+        k1 = k2 = None
+    wl = _thresholds_through_cells(k1, w_lo, cfg, model)
+    wh = _thresholds_through_cells(k2, w_hi, cfg, model)
+
+    xe = x[..., None, None]                                   # (..., 1, 1)
+    m = jax.nn.relu(cfg.relu_scale * (xe - wl)) * jax.nn.relu(cfg.relu_scale * (wh - xe))
+    m = jnp.sum(m, axis=-1)                                   # OR over rows -> (..., bits)
+    m = m / (m + cfg.eps)                                     # ~{0,1}
+
+    # lines 12-19: Gray -> binary, MSB first: b_{n-1}=m_{n-1}; b_i=(m_i-b_{i+1})^2
+    y = jnp.zeros(x.shape, jnp.float32)
+    b_next = None
+    for i in range(bits - 1, -1, -1):
+        m_i = m[..., i]
+        b_i = m_i if b_next is None else (m_i - b_next) ** 2
+        y = y + b_i * (2.0 ** i)
+        b_next = b_i
+    return y * out_step + out_lo
+
+
+def soft_gray_bits(x: jax.Array, w_lo: jax.Array, w_hi: jax.Array,
+                   rng: jax.Array | None = None,
+                   cfg: DiffACAMConfig = DiffACAMConfig(),
+                   model: NoiseModel = IDEAL, beta: float = 20.0) -> jax.Array:
+    """Two-sided surrogate for per-bit NAF (beyond-paper; see module note).
+
+    Algorithm 1's ReLU window has dead gradients outside the stored interval
+    (a displaced threshold can only be pulled back from the covered side) and
+    its XOR-decode chain has zero derivative at exact binary states — the
+    refuted-hypothesis log in EXPERIMENTS.md §NAF quantifies both.  Instead
+    we train each bit-plane directly as the binary classifier the paper
+    defines it to be (§III-C): sigmoid-window row match, exact soft-OR,
+    supervised against the known Gray bit targets.  Returns (..., bits) soft
+    bit probabilities.
+    """
+    if rng is not None:
+        k1, k2 = jax.random.split(rng)
+    else:
+        k1 = k2 = None
+    wl = _thresholds_through_cells(k1, w_lo, cfg, model)
+    wh = _thresholds_through_cells(k2, w_hi, cfg, model)
+    xe = x[..., None, None]
+    sr = jax.nn.sigmoid(beta * (xe - wl)) * jax.nn.sigmoid(beta * (wh - xe))
+    return 1.0 - jnp.prod(1.0 - sr, axis=-1)          # exact soft OR
+
+
+def hard_acam_forward(x: jax.Array, w_lo: jax.Array, w_hi: jax.Array,
+                      rng: jax.Array | None = None,
+                      cfg: DiffACAMConfig = DiffACAMConfig(),
+                      model: NoiseModel = IDEAL,
+                      out_lo: float = 0.0, out_step: float = 1.0) -> jax.Array:
+    """Non-differentiable twin (exact comparisons) for eval — same noise path."""
+    if rng is not None:
+        k1, k2 = jax.random.split(rng)
+    else:
+        k1 = k2 = None
+    wl = _thresholds_through_cells(k1, w_lo, cfg, model)
+    wh = _thresholds_through_cells(k2, w_hi, cfg, model)
+    from .acam import eval_table as _eval
+    return _eval(wl, wh, x, out_lo, out_step, encoding="gray")

@@ -1,0 +1,68 @@
+"""NLDPEConfig: the model-level switch for NL-DPE execution (paper §III-B).
+
+The three hardware modes map to framework behavior:
+
+* dual-compute : Linear/Conv on crossbars (optionally noisy) + ACAM
+                 activations — the default when ``enabled``.
+* crossbar-only: ACAM programmed to identity -> pure 8-bit quantized VMM.
+* acam-only    : crossbars hold identity -> vector-ALU (log/exp/softmax ops).
+
+Model code never branches on the mode directly; it calls the dispatchers
+here (``activation``, ``softmax``, ``dmmul``, ``elementwise_mul``) which pick
+the NL-DPE path or the FP reference according to the config.  That keeps the
+technique a first-class, flag-switchable feature across all ten
+architectures.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .acam import acam_activation
+from .attention import nldpe_attention, reference_attention
+from .functions import JNP_FUNCTIONS
+from .logdomain import (DEFAULT_CFG, LogDomainConfig, nldpe_matmul, nldpe_mul,
+                        nldpe_softmax)
+
+
+@dataclasses.dataclass(frozen=True)
+class NLDPEConfig:
+    enabled: bool = False
+    bits: int = 8
+    logdomain: LogDomainConfig = DEFAULT_CFG
+    # which op classes run on the analog engine (ablation switches)
+    acam_activations: bool = True
+    logdomain_dmmul: bool = True
+    acam_softmax: bool = True
+
+    def activation(self, x: jax.Array, name: str) -> jax.Array:
+        if self.enabled and self.acam_activations:
+            return acam_activation(x, name, bits=self.bits)
+        return JNP_FUNCTIONS[name](x)
+
+    def softmax(self, x: jax.Array, axis: int = -1) -> jax.Array:
+        if self.enabled and self.acam_softmax:
+            return nldpe_softmax(x, self.logdomain, axis=axis)
+        return jax.nn.softmax(x, axis=axis)
+
+    def dmmul(self, a: jax.Array, b: jax.Array) -> jax.Array:
+        if self.enabled and self.logdomain_dmmul:
+            return nldpe_matmul(a, b, self.logdomain, mode="fused")
+        return jnp.matmul(a, b)
+
+    def elementwise_mul(self, a: jax.Array, b: jax.Array) -> jax.Array:
+        if self.enabled and self.logdomain_dmmul:
+            return nldpe_mul(a, b, self.logdomain, mode="fused")
+        return a * b
+
+    def attention(self, q, k, v, causal=True, mask=None):
+        if self.enabled and self.logdomain_dmmul:
+            return nldpe_attention(q, k, v, self.logdomain, causal=causal,
+                                   mask=mask)
+        return reference_attention(q, k, v, causal=causal, mask=mask)
+
+
+OFF = NLDPEConfig(enabled=False)
+ON = NLDPEConfig(enabled=True)

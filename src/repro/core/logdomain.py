@@ -1,0 +1,191 @@
+"""Log-domain DMMul and Softmax (paper §III-D, Fig 6).
+
+Data-dependent multiplication avoids crossbar reprogramming via
+
+    a * b = exp(log a + log b)                       (Eq 3)
+    a / b = exp(log a - log b)                       (Eq 4)
+
+``log`` and ``exp`` are single-variable -> ACAM DTs; adds/subtracts use the
+on-chip digital adders.  With 8-bit ACAMs every log/exp crossing quantizes to
+the 8-bit grid, so the DMMul numeric format is *sign-magnitude 8-bit
+log-quantization*.
+
+Two evaluation modes (see DESIGN.md §2):
+
+* ``exact``  — per-product re-quantization: each product's exp emerges from
+  its own ACAM search as an 8-bit code, i.e. C = sum_k s * q8(exp(la+lb)).
+  Because la, lb live on the same grid, ``la+lb`` takes <= 2*levels-1
+  distinct values, so q8(exp(.)) is a fixed LUT over code sums.  This is the
+  oracle used for the Fig 14 fidelity benchmarks.
+* ``fused``  — MXU-friendly: exp(la+lb) = exp(la)*exp(lb), so the DMMul is a
+  plain matmul over the log-quantized reconstructions.  The only difference
+  from ``exact`` is the missing per-product output re-quantization
+  (<= 1/2 LSB of the exp output grid; measured in benchmarks/fig14).  The
+  Pallas kernel ``repro/kernels/nldpe_qmatmul`` implements this mode.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .quantization import LogQuantSpec, QuantSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class LogDomainConfig:
+    """Quantization grids for the DMMul/Softmax pipeline."""
+
+    bits: int = 8
+    # log-magnitude grid for DMMul operands (activation-scale data)
+    mag_spec: LogQuantSpec = LogQuantSpec(log_lo=math.log(1e-4), log_hi=math.log(16.0), bits=8)
+    # softmax: scores are max-shifted into [-score_range, 0] before exp
+    # (exp(-8) ~= 3e-4 is below the 8-bit exp-output LSB, so 8.0 loses nothing
+    # while halving the input quantization step vs a 16-wide window)
+    score_range: float = 8.0
+
+    def exp_out_spec(self) -> QuantSpec:
+        """Grid for q8(exp(la+lb)) outputs in ``exact`` mode."""
+        hi = math.exp(2 * self.mag_spec.log_hi)
+        return QuantSpec(lo=0.0, hi=hi, bits=self.bits)
+
+
+DEFAULT_CFG = LogDomainConfig()
+
+
+# ---------------------------------------------------------------------------
+# DMMul
+# ---------------------------------------------------------------------------
+
+def log_quantize(x: jax.Array, cfg: LogDomainConfig = DEFAULT_CFG) -> jax.Array:
+    """Round-trip through the ACAM log grid: sign * exp(q8(log|x|)).
+
+    Values with |x| below the grid floor flush to zero (the sign channel of
+    an exact 0 is 0).  This is the value format flowing through NL-DPE DMMul.
+    """
+    code, sign = cfg.mag_spec.encode(x)
+    dead = jnp.abs(x) < math.exp(cfg.mag_spec.log_lo)
+    return jnp.where(dead, 0.0, cfg.mag_spec.decode(code, sign))
+
+
+def nldpe_matmul(a: jax.Array, b: jax.Array,
+                 cfg: LogDomainConfig = DEFAULT_CFG,
+                 mode: str = "fused",
+                 block_k: int = 64) -> jax.Array:
+    """C = A @ B through the log-domain ACAM pipeline (Fig 6a).
+
+    a: (..., M, K), b: (..., K, N).
+    """
+    if mode == "fused":
+        return jnp.matmul(log_quantize(a, cfg), log_quantize(b, cfg))
+    if mode != "exact":
+        raise ValueError(mode)
+
+    spec = cfg.mag_spec
+    out_spec = cfg.exp_out_spec()
+    ca, sa = spec.encode(a)
+    cb, sb = spec.encode(b)
+    za = (jnp.abs(a) < math.exp(spec.log_lo))
+    zb = (jnp.abs(b) < math.exp(spec.log_lo))
+    sa = jnp.where(za, 0.0, sa)
+    sb = jnp.where(zb, 0.0, sb)
+    # LUT over code sums: q8(exp(la+lb))
+    sums = jnp.arange(2 * spec.levels - 1, dtype=jnp.float32)
+    lut = out_spec.apply(jnp.exp(sums * spec.step + 2 * spec.log_lo))
+
+    K = a.shape[-1]
+    out = jnp.zeros((*a.shape[:-1], b.shape[-1]), jnp.float32)
+    for k0 in range(0, K, block_k):
+        k1 = min(k0 + block_k, K)
+        idx = ca[..., :, k0:k1, None] + cb[..., None, k0:k1, :]
+        # idx: (..., M, kb, N); gather per-product quantized exp
+        prod = jnp.take(lut, idx, axis=0)
+        sgn = sa[..., :, k0:k1, None] * sb[..., None, k0:k1, :]
+        out = out + jnp.sum(prod * sgn, axis=-2)
+    return out
+
+
+def nldpe_mul(a: jax.Array, b: jax.Array,
+              cfg: LogDomainConfig = DEFAULT_CFG,
+              mode: str = "fused") -> jax.Array:
+    """Element-wise DMMul (used by gates in RG-LRU / RWKV)."""
+    if mode == "fused":
+        return log_quantize(a, cfg) * log_quantize(b, cfg)
+    spec = cfg.mag_spec
+    out_spec = cfg.exp_out_spec()
+    ca, sa = spec.encode(a)
+    cb, sb = spec.encode(b)
+    za = (jnp.abs(a) < math.exp(spec.log_lo))
+    zb = (jnp.abs(b) < math.exp(spec.log_lo))
+    mag = out_spec.apply(jnp.exp((ca + cb).astype(jnp.float32) * spec.step + 2 * spec.log_lo))
+    s = jnp.where(za, 0.0, sa) * jnp.where(zb, 0.0, sb)
+    return mag * s
+
+
+# ---------------------------------------------------------------------------
+# Softmax (Fig 6b) and log-softmax (Fig 6c bypass)
+# ---------------------------------------------------------------------------
+
+def nldpe_log_softmax(y: jax.Array, cfg: LogDomainConfig = DEFAULT_CFG,
+                      axis: int = -1, mask: jax.Array | None = None) -> jax.Array:
+    """Fig 6b steps 1-4, output still in the log domain (for DMMul_2 bypass).
+
+    Step 0 (hardware: analog winner-take-all comparators, cf. the paper's
+    max-pool note §VII) shifts scores to (-inf, 0] so the 8-bit exp ACAM
+    domain [-score_range, 0] covers them.
+
+    ``mask`` (True = attend): masked positions are zeroed *digitally* before
+    the adder tree — the 8-bit exp ACAM itself cannot emit an exact 0 (its
+    lowest code decodes to exp(-range)), but in the autoregressive dataflow
+    masked (future) operands are simply never driven onto the word lines.
+    """
+    if mask is not None:
+        y = jnp.where(mask, y, -jnp.inf)
+    mx = jnp.max(y, axis=axis, keepdims=True)
+    mx = jnp.where(jnp.isfinite(mx), mx, 0.0)
+    y = y - jax.lax.stop_gradient(mx)
+    in_spec = QuantSpec(lo=-cfg.score_range, hi=0.0, bits=cfg.bits)
+    yq = in_spec.apply(jnp.where(jnp.isfinite(y), y, -cfg.score_range))
+    s = jnp.exp(yq)                                          # step 1: exp ACAM
+    exp_spec = QuantSpec(lo=0.0, hi=1.0, bits=cfg.bits)
+    sq = exp_spec.apply(s)                                   # 8-bit exp output
+    if mask is not None:
+        sq = jnp.where(mask, sq, 0.0)                        # digital gating
+    total = jnp.sum(sq, axis=axis, keepdims=True)            # step 2: adders
+    L = y.shape[axis]
+    log_spec = QuantSpec(lo=-cfg.score_range, hi=float(math.log(L + 1)), bits=cfg.bits)
+    log_total = log_spec.apply(jnp.log(jnp.maximum(total, 1e-9)))  # step 3: log ACAM
+    out = yq - log_total                                     # step 4: subtract
+    if mask is not None:
+        out = jnp.where(mask, out, -jnp.inf)
+    return out
+
+
+def nldpe_softmax(y: jax.Array, cfg: LogDomainConfig = DEFAULT_CFG,
+                  axis: int = -1) -> jax.Array:
+    """Full Fig 6b (step 5 exp ACAM back to linear scale)."""
+    logp = nldpe_log_softmax(y, cfg, axis=axis)
+    out_spec = QuantSpec(lo=0.0, hi=1.0, bits=cfg.bits)
+    p_spec_in = QuantSpec(lo=-2 * cfg.score_range, hi=0.0, bits=cfg.bits)
+    return out_spec.apply(jnp.exp(p_spec_in.apply(logp)))    # step 5
+
+
+# ---------------------------------------------------------------------------
+# Log-domain dot with an externally supplied log operand (attention AV path)
+# ---------------------------------------------------------------------------
+
+def nldpe_matmul_loga(log_a: jax.Array, b: jax.Array,
+                      cfg: LogDomainConfig = DEFAULT_CFG,
+                      mask: jax.Array | None = None) -> jax.Array:
+    """C = exp(log_a) @ B where log_a is already a log-domain tensor
+    (e.g. the log-softmax output of Fig 6c) and B enters through log ACAMs.
+    Masked entries contribute exactly 0 (digital gating, see
+    nldpe_log_softmax)."""
+    la_spec = QuantSpec(lo=-2 * cfg.score_range, hi=0.0, bits=cfg.bits)
+    a_lin = jnp.exp(la_spec.apply(jnp.where(jnp.isfinite(log_a), log_a,
+                                            -2 * cfg.score_range)))
+    if mask is not None:
+        a_lin = jnp.where(mask, a_lin, 0.0)
+    return jnp.matmul(a_lin, log_quantize(b, cfg))

@@ -1,0 +1,246 @@
+"""Noise-Aware Fine-tuning (paper §IV-B, Fig 8).
+
+Four steps, all software-side, pre-deployment:
+
+  (1) crossbar NAF   — a few end-to-end fine-tuning iterations with Eq 6
+                       noise injected into Conv/Linear weights, loss Eq 8
+                       (MSE + lambda1*||W||_inf + lambda2*||eps||_inf).
+  (2) extraction     — non-VMM ops -> single-variable functions, outputs
+                       quantized (our dt.build_table handles quantization).
+  (3) DT training    — per-bit threshold DTs (dt.py builds them exactly).
+  (4) ACAM NAF       — *per-DT independent* threshold fine-tuning through the
+                       differentiable surrogate (Algorithm 1) with ACAM cell
+                       noise injected each iteration.
+
+Step (4) is the paper's headline trick: no end-to-end pass is needed; each
+DT trains on ~5000 sampled inputs for <=10 epochs (Fig 13b).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .acam import eval_table_np
+from .differentiable import DiffACAMConfig, diff_acam_forward, hard_acam_forward
+from .dt import ACAMTable, build_table
+from .functions import FUNCTIONS
+from .noise import DEFAULT, IDEAL, NoiseModel
+
+
+# ---------------------------------------------------------------------------
+# Minimal Adam (self-contained; optax is not available in this environment)
+# ---------------------------------------------------------------------------
+
+def adam_init(params) -> dict:
+    return {"m": jax.tree.map(jnp.zeros_like, params),
+            "v": jax.tree.map(jnp.zeros_like, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adam_update(grads, state: dict, params, lr=1e-3, b1=0.9, b2=0.999,
+                eps=1e-8):
+    step = state["step"] + 1
+    sf = step.astype(jnp.float32)
+    m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+    mh = jax.tree.map(lambda m: m / (1 - b1 ** sf), m)
+    vh = jax.tree.map(lambda v: v / (1 - b2 ** sf), v)
+    params = jax.tree.map(lambda p, m, v: p - lr * m / (jnp.sqrt(v) + eps),
+                          params, mh, vh)
+    return params, {"m": m, "v": v, "step": step}
+
+
+# ---------------------------------------------------------------------------
+# Step 4: per-DT ACAM noise-aware fine-tuning
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class NAFResult:
+    table: ACAMTable
+    mse_before: float          # noisy eval, pre-NAF thresholds
+    mse_after: float           # noisy eval, post-NAF thresholds
+    mse_clean: float           # noise-free eval of the original table
+    epochs: int
+    history: list
+
+
+def finetune_table(table: ACAMTable,
+                   target_fn: Callable | None = None,
+                   rng: jax.Array | None = None,
+                   model: NoiseModel = DEFAULT,
+                   epochs: int = 10,
+                   samples: int = 5000,
+                   batch: int = 512,
+                   lr: float = 5e-3,
+                   noise_draws: int = 4,
+                   objective: str = "per_bit",
+                   beta: float = 20.0) -> NAFResult:
+    """NAF step 4 for one DT (one function).
+
+    Trains the (bits, rows) lo/hi threshold tensors so that the *noisy* hard
+    ACAM matches the quantized target; evaluation uses the hard forward with
+    fresh noise.  Two training objectives:
+
+    * ``per_bit`` (default) — each bit-plane as a value-weighted binary
+      classifier against its Gray bit target, through the two-sided
+      sigmoid-window surrogate (differentiable.soft_gray_bits).  Recovers
+      persistent threshold corruption ~15x (EXPERIMENTS.md §NAF).
+    * ``alg1`` — the paper's Algorithm 1 verbatim (ReLU window + m/(m+eps)
+      + squared-difference XOR decode, value MSE).  Kept as the faithful
+      ablation; its one-sided gradients cannot repair displaced thresholds
+      (refuted-hypothesis log in EXPERIMENTS.md §NAF).
+    """
+    if rng is None:
+        rng = jax.random.key(0)
+    if target_fn is None:
+        target_fn = FUNCTIONS[table.name].fn
+    lo_x, hi_x = table.in_domain
+    cfg = DiffACAMConfig(bits=table.bits, th_lo=float(lo_x), th_hi=float(hi_x))
+
+    xs = np.random.default_rng(0).uniform(lo_x, hi_x, size=samples).astype(np.float32)
+    # target = the quantized digital function — independent of the current
+    # (possibly corrupted) thresholds, so NAF can repair persistent damage
+    spec = table.out_spec
+    f = np.asarray(target_fn(xs), np.float64)
+    levels = np.clip(np.round((f - spec.lo) / spec.step), 0,
+                     spec.levels - 1).astype(np.int64)
+    y_ref = (levels * spec.step + spec.lo).astype(np.float32)
+    gray = levels ^ (levels >> 1)
+    gray_bits = ((gray[:, None] >> np.arange(table.bits)) & 1).astype(np.float32)
+    xs_j, y_j = jnp.asarray(xs), jnp.asarray(y_ref)
+    gb_j = jnp.asarray(gray_bits)
+
+    params = {"lo": jnp.asarray(table.lo), "hi": jnp.asarray(table.hi)}
+    out_lo, out_step = float(table.out_spec.lo), float(table.out_spec.step)
+    bit_w = jnp.asarray([4.0 ** i for i in range(table.bits)])
+    bit_w = bit_w / jnp.sum(bit_w)
+
+    def loss_fn(p, key, xb, yb, gb):
+        """Average over several noise realizations per step (variance control)."""
+        keys = jax.random.split(key, noise_draws)
+
+        def one(k):
+            if objective == "per_bit":
+                from .differentiable import soft_gray_bits
+                sb = soft_gray_bits(xb, p["lo"], p["hi"], rng=k, cfg=cfg,
+                                    model=model, beta=beta)
+                return jnp.mean(jnp.sum(bit_w * (sb - gb) ** 2, axis=-1))
+            y = diff_acam_forward(xb, p["lo"], p["hi"], rng=k, cfg=cfg,
+                                  model=model, out_lo=out_lo, out_step=out_step)
+            return jnp.mean((y - yb) ** 2)
+
+        return jnp.mean(jax.vmap(one)(keys))
+
+    @jax.jit
+    def train_step(p, st, key, xb, yb, gb):
+        l, g = jax.value_and_grad(loss_fn)(p, key, xb, yb, gb)
+        p, st = adam_update(g, st, p, lr=lr)
+        return p, st, l
+
+    def hard_mse(p, key, n_eval=2048, draws=8):
+        xe_np = np.random.default_rng(1).uniform(lo_x, hi_x, n_eval).astype(np.float32)
+        fe = np.asarray(target_fn(xe_np), np.float64)
+        ye_np = (np.clip(np.round((fe - spec.lo) / spec.step), 0,
+                         spec.levels - 1) * spec.step + spec.lo).astype(np.float32)
+        xe, ye = jnp.asarray(xe_np), jnp.asarray(ye_np)
+        keys = jax.random.split(key, draws)
+        vals = [jnp.mean((hard_acam_forward(xe, p["lo"], p["hi"], rng=k, cfg=cfg,
+                                            model=model, out_lo=out_lo,
+                                            out_step=out_step) - ye) ** 2)
+                for k in keys]
+        return float(jnp.mean(jnp.stack(vals)))
+
+    # paired evaluation: before/after/history share one eval key so the
+    # comparison is not washed out by draw-to-draw variance
+    k_eval, rng = jax.random.split(rng)
+    mse_before = hard_mse(params, k_eval)
+    mse_clean = hard_mse(params, k_eval, draws=1) if model.scale == 0 else \
+        float(jnp.mean((hard_acam_forward(xs_j, params["lo"], params["hi"],
+                                          cfg=cfg, model=IDEAL, out_lo=out_lo,
+                                          out_step=out_step) - y_j) ** 2))
+
+    st = adam_init(params)
+    history = []
+    steps_per_epoch = max(1, samples // batch)
+    for e in range(epochs):
+        perm = np.random.default_rng(e).permutation(samples)
+        ep_loss = 0.0
+        for s in range(steps_per_epoch):
+            idx = perm[s * batch:(s + 1) * batch]
+            rng, k = jax.random.split(rng)
+            params, st, l = train_step(params, st, k, xs_j[idx], y_j[idx],
+                                       gb_j[idx])
+            ep_loss += float(l)
+        history.append({"epoch": e, "train_loss": ep_loss / steps_per_epoch,
+                        "hard_mse": hard_mse(params, k_eval)})
+    mse_after = hard_mse(params, k_eval)
+
+    new_table = dataclasses.replace(
+        table, lo=np.asarray(params["lo"]), hi=np.asarray(params["hi"]))
+    return NAFResult(table=new_table, mse_before=mse_before,
+                     mse_after=mse_after, mse_clean=mse_clean,
+                     epochs=epochs, history=history)
+
+
+def corrupt_table(table: ACAMTable, rng: jax.Array,
+                  model: NoiseModel = DEFAULT) -> ACAMTable:
+    """Bake ONE persistent programming realization into the thresholds.
+
+    This is the deployed-device state the paper's Table III row
+    "(3) + ACAM noise" measures: a concrete noisy programming pass, fixed
+    for the lifetime of the chip (read fluctuation still varies per read).
+    NAF step 4 then repairs it in software before (re)programming.
+    """
+    from .differentiable import DiffACAMConfig, _thresholds_through_cells
+
+    cfg = DiffACAMConfig(bits=table.bits, th_lo=float(table.in_domain[0]),
+                         th_hi=float(table.in_domain[1]))
+    prog_only = dataclasses.replace(model, a_fluct=model.a_fluct,
+                                    b_fluct=-30.0)   # fluct sigma ~ 0
+    k1, k2 = jax.random.split(rng)
+    lo = _thresholds_through_cells(k1, jnp.asarray(table.lo), cfg, prog_only)
+    hi = _thresholds_through_cells(k2, jnp.asarray(table.hi), cfg, prog_only)
+    return dataclasses.replace(table, lo=np.asarray(lo), hi=np.asarray(hi))
+
+
+# ---------------------------------------------------------------------------
+# Step 1: crossbar NAF loss (Eq 8) — pieces used by the training substrate
+# ---------------------------------------------------------------------------
+
+def eq8_regularizers(params, eps_tree=None) -> jax.Array:
+    """lambda-weighted terms of Eq 8 are applied by optim/naf_loss.py; this
+    returns (||W||_inf, ||eps||_inf) aggregated over a param pytree."""
+    leaves = [jnp.max(jnp.abs(x)) for x in jax.tree.leaves(params)]
+    w_inf = jnp.max(jnp.stack(leaves)) if leaves else jnp.float32(0)
+    if eps_tree is None:
+        return w_inf, jnp.float32(0.0)
+    eleaves = [jnp.max(jnp.abs(x)) for x in jax.tree.leaves(eps_tree)]
+    e_inf = jnp.max(jnp.stack(eleaves)) if eleaves else jnp.float32(0)
+    return w_inf, e_inf
+
+
+def inject_crossbar_noise(rng: jax.Array, params, model: NoiseModel = DEFAULT,
+                          w_max: float | None = None):
+    """NAF step-1 per-iteration weight perturbation through Eq 6 cells.
+
+    Each leaf is split into +/- polarities, round-tripped through noisy
+    conductances, and recombined — matching how the crossbar stores it.
+    """
+    from .noise import noisy_weight
+
+    leaves, treedef = jax.tree.flatten(params)
+    keys = jax.random.split(rng, len(leaves))
+    out = []
+    for k, w in zip(keys, leaves):
+        # traced-safe scale (this runs inside jitted NAF train steps)
+        wm = w_max if w_max is not None else jnp.maximum(
+            jnp.max(jnp.abs(w.astype(jnp.float32))), 1e-6)
+        k1, k2 = jax.random.split(k)
+        wp = noisy_weight(k1, jnp.maximum(w, 0), wm, model)
+        wn = noisy_weight(k2, jnp.maximum(-w, 0), wm, model)
+        out.append((wp - wn).astype(w.dtype))
+    return jax.tree.unflatten(treedef, out)

@@ -1,0 +1,168 @@
+"""RRAM non-ideality models (paper §IV-A, Eq 5-7, Fig 7) + stuck-at faults.
+
+Two stochastic noise sources, both log-linear-with-saturation in the
+conductance (fit to the fabricated Ta-Ox chip of ref [15]):
+
+  sigma_x(G) = exp(a_x * log(G.clip(0, c_x)) + b_x)            (Eq 5)
+  G_read = G_target + sigma_prog(G_target)*N(0,1) + sigma_fluct(G)*N(0,1)  (Eq 6)
+
+and the conductance -> ACAM threshold transfer function:
+
+  TH(G) = exp(a_acam * log(G) + b_acam) + c_acam               (Eq 7)
+
+The paper reports the fitted constants only inside Fig 7; the defaults below
+are calibrated to the quantities that *are* stated in the text (program-and-
+verify tolerance +-0.55 uS above 1 uS, max sigma_prog ~= 0.4 uS, conductance
+range 0.01-150 uS, saturating log-linear fluctuation) and are all
+config-overridable — see DESIGN.md §2 "Changed assumptions".
+
+Conductances are expressed in micro-Siemens throughout.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+G_MIN_US = 0.01    # 100 Mohm  (paper §V)
+G_MAX_US = 150.0   # 6.7 kohm
+
+
+@dataclasses.dataclass(frozen=True)
+class NoiseModel:
+    """Fitted Eq 5-7 parameters.  ``scale`` multiplies both sigmas (Fig 15)."""
+
+    # sigma_prog(G_target): saturates at ~0.4 uS near G_max
+    a_prog: float = 0.50
+    b_prog: float = -3.22
+    c_prog: float = 100.0
+    # sigma_fluct(G): smaller, saturates earlier
+    a_fluct: float = 0.50
+    b_fluct: float = -3.57
+    c_fluct: float = 50.0
+    # ACAM threshold transfer TH(G) (volts vs uS)
+    a_acam: float = 0.30
+    b_acam: float = -1.20
+    c_acam: float = 0.05
+    # global std multiplier (Fig 15 robustness sweeps)
+    scale: float = 1.0
+    g_min: float = G_MIN_US
+    g_max: float = G_MAX_US
+
+    # -- Eq 5 ---------------------------------------------------------------
+    def sigma_prog(self, g_target: jax.Array) -> jax.Array:
+        g = jnp.clip(g_target, 1e-6, self.c_prog)
+        return self.scale * jnp.exp(self.a_prog * jnp.log(g) + self.b_prog)
+
+    def sigma_fluct(self, g: jax.Array) -> jax.Array:
+        gc = jnp.clip(g, 1e-6, self.c_fluct)
+        return self.scale * jnp.exp(self.a_fluct * jnp.log(gc) + self.b_fluct)
+
+    # -- Eq 6 ---------------------------------------------------------------
+    def program(self, rng: jax.Array, g_target: jax.Array) -> jax.Array:
+        """One programming event: persistent write error."""
+        n = jax.random.normal(rng, g_target.shape, dtype=jnp.float32)
+        g = g_target + self.sigma_prog(g_target) * n
+        return jnp.clip(g, self.g_min, self.g_max)
+
+    def read(self, rng: jax.Array, g_programmed: jax.Array) -> jax.Array:
+        """One read event: fresh fluctuation noise per read."""
+        n = jax.random.normal(rng, g_programmed.shape, dtype=jnp.float32)
+        g = g_programmed + self.sigma_fluct(g_programmed) * n
+        return jnp.clip(g, 0.0, self.g_max)
+
+    def readout(self, rng: jax.Array, g_target: jax.Array) -> jax.Array:
+        """Eq 6 composite: program once then read once."""
+        k1, k2 = jax.random.split(rng)
+        return self.read(k2, self.program(k1, g_target))
+
+    # -- Eq 7 ---------------------------------------------------------------
+    def threshold_of_g(self, g: jax.Array) -> jax.Array:
+        g = jnp.clip(g, 1e-6, None)
+        return jnp.exp(self.a_acam * jnp.log(g) + self.b_acam) + self.c_acam
+
+    def g_of_threshold(self, th: jax.Array) -> jax.Array:
+        """Inverse of Eq 7 (used when programming a desired threshold)."""
+        t = jnp.clip(th - self.c_acam, 1e-9, None)
+        return jnp.exp((jnp.log(t) - self.b_acam) / self.a_acam)
+
+    def rescale(self, s: float) -> "NoiseModel":
+        return dataclasses.replace(self, scale=s)
+
+
+IDEAL = NoiseModel(scale=0.0)
+DEFAULT = NoiseModel()
+
+
+# ---------------------------------------------------------------------------
+# Weight <-> conductance mapping helpers (shared by crossbar + ACAM paths)
+# ---------------------------------------------------------------------------
+
+def weight_to_g(w: jax.Array, w_max: float, model: NoiseModel = DEFAULT) -> jax.Array:
+    """Map |w| in [0, w_max] linearly onto [g_min, g_max] (Algorithm 1 l.2-3)."""
+    g_ratio = (model.g_max - model.g_min) / w_max
+    return jnp.clip(jnp.abs(w) * g_ratio + model.g_min, model.g_min, model.g_max)
+
+
+def g_to_weight(g: jax.Array, w_max: float, model: NoiseModel = DEFAULT) -> jax.Array:
+    g_ratio = (model.g_max - model.g_min) / w_max
+    return (g - model.g_min) / g_ratio
+
+
+def noisy_weight(rng: jax.Array, w: jax.Array, w_max: float,
+                 model: NoiseModel = DEFAULT) -> jax.Array:
+    """Round-trip a (non-negative) weight through a noisy cell (Eq 6)."""
+    g = model.readout(rng, weight_to_g(w, w_max, model))
+    return g_to_weight(g, w_max, model)
+
+
+def noisy_thresholds(rng: jax.Array, lo: jax.Array, hi: jax.Array,
+                     th_range: tuple[float, float],
+                     model: NoiseModel = DEFAULT) -> tuple[jax.Array, jax.Array]:
+    """Round-trip ACAM interval thresholds through noisy cells + Eq 7.
+
+    Threshold values (in function-input units, spanning ``th_range``) are
+    normalized to the TH voltage window, inverted through Eq 7 to target
+    conductances, perturbed per Eq 6, and mapped back.  Padding rows
+    (|th| >= 1e29) pass through untouched so they can never match.
+    """
+    t_lo, t_hi = th_range
+    th_min = model.threshold_of_g(jnp.float32(model.g_min))
+    th_max = model.threshold_of_g(jnp.float32(model.g_max))
+
+    def fwd(th):
+        u = (th - t_lo) / (t_hi - t_lo)              # -> [0, 1]
+        return th_min + u * (th_max - th_min)        # -> TH volts
+
+    def inv(v):
+        u = (v - th_min) / (th_max - th_min)
+        return t_lo + u * (t_hi - t_lo)
+
+    def roundtrip(key, th):
+        pad = jnp.abs(th) >= 1e29
+        g = model.g_of_threshold(fwd(jnp.where(pad, t_lo, th)))
+        g_noisy = model.readout(key, g)
+        th_noisy = inv(model.threshold_of_g(g_noisy))
+        return jnp.where(pad, th, th_noisy)
+
+    k1, k2 = jax.random.split(rng)
+    return roundtrip(k1, lo), roundtrip(k2, hi)
+
+
+# ---------------------------------------------------------------------------
+# Stuck-at faults (paper §VI-G3)
+# ---------------------------------------------------------------------------
+
+def stuck_at_faults(rng: jax.Array, g: jax.Array, rate: float,
+                    model: NoiseModel = DEFAULT) -> tuple[jax.Array, jax.Array]:
+    """Inject SAFs: each cell sticks (p=rate) at g_min or g_max (50/50).
+
+    Returns (faulty_g, fault_mask).  The mask supports the paper's NAF
+    mitigations (skip/freeze faulty cells).
+    """
+    k1, k2 = jax.random.split(rng)
+    mask = jax.random.bernoulli(k1, rate, g.shape)
+    high = jax.random.bernoulli(k2, 0.5, g.shape)
+    stuck = jnp.where(high, model.g_max, model.g_min).astype(g.dtype)
+    return jnp.where(mask, stuck, g), mask

@@ -1,0 +1,175 @@
+"""Quantizers and Gray-code utilities used throughout NL-DPE.
+
+NL-DPE operates on n-bit (default 8) quantized values everywhere an analog
+signal crosses an ACAM boundary:
+
+* crossbar inputs are DAC'd from n-bit codes (paper §II-A),
+* every ACAM output bit-plane together forms an n-bit output code (§III-C),
+* ACAM outputs are Gray-coded to halve the row count (Table I) and decoded
+  back to binary with XOR gates.
+
+All functions here are pure jnp and jit-safe.  ``levels = 2**bits``; a
+``QuantSpec`` maps float values on ``[lo, hi]`` to integer codes
+``[0, levels-1]`` with a uniform grid (the paper's Fig 5 scheme; arbitrary
+schemes are supported by overriding the grid).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantSpec:
+    """Uniform affine quantizer on [lo, hi] with ``bits`` bits."""
+
+    lo: float
+    hi: float
+    bits: int = 8
+
+    @property
+    def levels(self) -> int:
+        return 1 << self.bits
+
+    @property
+    def step(self) -> float:
+        return (self.hi - self.lo) / (self.levels - 1)
+
+    def quantize(self, x: jax.Array) -> jax.Array:
+        """float -> integer code in [0, levels-1] (round-to-nearest, clipped)."""
+        q = jnp.round((x - self.lo) / self.step)
+        return jnp.clip(q, 0, self.levels - 1).astype(jnp.int32)
+
+    def dequantize(self, code: jax.Array) -> jax.Array:
+        return code.astype(jnp.float32) * self.step + self.lo
+
+    def apply(self, x: jax.Array) -> jax.Array:
+        """Quantize-dequantize (the value an ideal n-bit ACAM/ADC would emit)."""
+        return self.dequantize(self.quantize(x))
+
+    def grid(self) -> np.ndarray:
+        """All representable values, ascending (host-side)."""
+        return np.arange(self.levels, dtype=np.float64) * float(self.step) + self.lo
+
+
+def spec_for(values, bits: int = 8, symmetric: bool = False) -> QuantSpec:
+    """Fit a QuantSpec to observed values (host-side helper)."""
+    v = np.asarray(values, dtype=np.float64)
+    lo, hi = float(v.min()), float(v.max())
+    if symmetric:
+        m = max(abs(lo), abs(hi))
+        lo, hi = -m, m
+    if hi <= lo:
+        hi = lo + 1e-6
+    return QuantSpec(lo=lo, hi=hi, bits=bits)
+
+
+# ---------------------------------------------------------------------------
+# Gray code
+# ---------------------------------------------------------------------------
+
+def binary_to_gray(code: jax.Array) -> jax.Array:
+    """Integer binary code -> integer Gray code.  g = b ^ (b >> 1)."""
+    code = code.astype(jnp.int32)
+    return code ^ (code >> 1)
+
+
+def gray_to_binary(gray: jax.Array, bits: int) -> jax.Array:
+    """Integer Gray code -> integer binary code (prefix-XOR from the MSB).
+
+    b_i = XOR(g_{n-1}, ..., g_i)  — exactly the paper's XOR decode chain.
+    """
+    b = gray.astype(jnp.int32)
+    shift = 1
+    while shift < bits:
+        b = b ^ (b >> shift)
+        shift <<= 1
+    return b & ((1 << bits) - 1)
+
+
+def int_to_bits(code: jax.Array, bits: int) -> jax.Array:
+    """(...,) int32 -> (..., bits) {0,1} int32, bit 0 = LSB."""
+    shifts = jnp.arange(bits, dtype=jnp.int32)
+    return (code[..., None] >> shifts) & 1
+
+
+def bits_to_int(bitplanes: jax.Array) -> jax.Array:
+    """(..., bits) {0,1} -> (...,) int32, bit 0 = LSB."""
+    bits = bitplanes.shape[-1]
+    weights = (1 << jnp.arange(bits, dtype=jnp.int32))
+    return jnp.sum(bitplanes.astype(jnp.int32) * weights, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Log-grid ("mu-law like") quantization — the numeric format of NL-DPE DMMul.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LogQuantSpec:
+    """Sign-magnitude log-domain quantizer.
+
+    The NL-DPE DMMul path (paper Eq 3) stores ``log|x|`` as an n-bit code on a
+    uniform grid over ``[log(eps), log(max)]`` and the sign digitally.  A value
+    reconstructs as ``sign * exp(code)``; magnitudes below ``eps`` flush to
+    zero (carried as a zero flag, here: code semantics reserve nothing — the
+    reconstruction of the lowest code is ~eps which we treat as 0 when the
+    input was exactly 0 via the sign channel sign=0).
+    """
+
+    log_lo: float
+    log_hi: float
+    bits: int = 8
+
+    @property
+    def levels(self) -> int:
+        return 1 << self.bits
+
+    @property
+    def step(self) -> float:
+        return (self.log_hi - self.log_lo) / (self.levels - 1)
+
+    def encode(self, x: jax.Array) -> tuple[jax.Array, jax.Array]:
+        """x -> (code int32, sign float {-1,0,+1})."""
+        sign = jnp.sign(x)
+        mag = jnp.abs(x)
+        logm = jnp.log(jnp.maximum(mag, jnp.exp(self.log_lo)))
+        code = jnp.clip(jnp.round((logm - self.log_lo) / self.step), 0,
+                        self.levels - 1).astype(jnp.int32)
+        return code, sign
+
+    def decode(self, code: jax.Array, sign: jax.Array) -> jax.Array:
+        return sign * jnp.exp(code.astype(jnp.float32) * self.step + self.log_lo)
+
+    def apply(self, x: jax.Array) -> jax.Array:
+        return self.decode(*self.encode(x))
+
+
+def log_spec_for(values, bits: int = 8, eps: float = 1e-6) -> LogQuantSpec:
+    v = np.abs(np.asarray(values, dtype=np.float64))
+    hi = float(v.max()) if v.size else 1.0
+    hi = max(hi, eps * 10)
+    return LogQuantSpec(log_lo=float(np.log(eps)), log_hi=float(np.log(hi)), bits=bits)
+
+
+# ---------------------------------------------------------------------------
+# Stochastic-free fake-quant for NAF training (straight-through estimator)
+# ---------------------------------------------------------------------------
+
+@partial(jax.custom_vjp, nondiff_argnums=(1,))
+def fake_quant_ste(x: jax.Array, spec: QuantSpec) -> jax.Array:
+    return spec.apply(x)
+
+
+def _fq_fwd(x, spec):
+    return spec.apply(x), None
+
+
+def _fq_bwd(spec, _, g):
+    return (g,)
+
+
+fake_quant_ste.defvjp(_fq_fwd, _fq_bwd)

@@ -1,0 +1,160 @@
+"""Weight-to-cell mapping: digital slicing (D-SL) vs analog slicing (A-SL).
+
+Paper §IV-B / Fig 9.  A signed weight is split into positive/negative
+crossbars (differential pair, §V: "two for positive and two for negative").
+Within a polarity:
+
+* D-SL: quantize to n bits, store each k-bit slice in its own cell; outputs
+  recombine by shift-and-add.  Discrete programmed values.
+* A-SL: program one cell with the continuous value; the *residual*
+  programming error eps is measured and a second cell stores 10*eps; an
+  analog current mirror divides its output by 10 at read time.  Continuous
+  values -> eps is differentiable -> Eq 8's ||eps||_inf regularizer.
+
+These return the *conductance plan* for a weight tensor plus a simulator of
+the effective weight seen at compute time (with optional Eq 6 noise / SAFs).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .noise import DEFAULT, NoiseModel, g_to_weight, stuck_at_faults, weight_to_g
+
+RESIDUAL_GAIN = 10.0  # second cell stores 10*eps (paper Fig 9b)
+
+
+@dataclasses.dataclass
+class SlicedWeights:
+    """Conductance plan: (pos|neg) x (main|residual) target conductances."""
+
+    g_pos_main: jax.Array
+    g_neg_main: jax.Array
+    g_pos_res: jax.Array
+    g_neg_res: jax.Array
+    w_max: float
+
+
+def plan_asl(w: jax.Array, w_max: float, model: NoiseModel = DEFAULT,
+             prog_rng: jax.Array | None = None) -> tuple[SlicedWeights, jax.Array]:
+    """Analog slicing.  Returns (plan, eps).
+
+    The plan holds the *post-programming* device state: the main cells carry
+    one program-and-verify realization (so their sigma_prog-scale residual
+    eps is baked in), and the residual cells are programmed (with their own,
+    second-order, error) to -10*eps so that ``main + res/10`` cancels the
+    first-order error at read time — Fig 9(b).  With ``prog_rng=None``
+    programming is ideal.  eps (weight units, per cell pair) feeds Eq 8's
+    ||eps||_inf regularizer.
+    """
+    w_pos = jnp.maximum(w, 0.0)
+    w_neg = jnp.maximum(-w, 0.0)
+
+    def program_main(key, wp):
+        g_t = weight_to_g(wp, w_max, model)
+        if prog_rng is None:
+            return g_t
+        return model.program(key, g_t)
+
+    def program_res(key, target):
+        g_t = weight_to_g(jnp.clip(target, 0.0, w_max), w_max, model)
+        if prog_rng is None:
+            return g_t
+        return model.program(key, g_t)
+
+    if prog_rng is not None:
+        k1, k2, k3, k4 = jax.random.split(prog_rng, 4)
+    else:
+        k1 = k2 = k3 = k4 = None
+    g_pos = program_main(k1, w_pos)
+    g_neg = program_main(k2, w_neg)
+    # signed residual of the differential pair; a positive error is corrected
+    # through the NEGATIVE residual cell (conductances can only add)
+    eps_signed = (g_to_weight(g_pos, w_max, model)
+                  - g_to_weight(g_neg, w_max, model)) - w
+    plan = SlicedWeights(
+        g_pos_main=g_pos,
+        g_neg_main=g_neg,
+        g_pos_res=program_res(k3, -eps_signed * RESIDUAL_GAIN),
+        g_neg_res=program_res(k4, eps_signed * RESIDUAL_GAIN),
+        w_max=w_max,
+    )
+    return plan, jnp.abs(eps_signed)
+
+
+def plan_dsl(w: jax.Array, w_max: float, bits: int = 8, cell_bits: int = 2,
+             model: NoiseModel = DEFAULT) -> list[SlicedWeights]:
+    """Digital slicing: one plan per k-bit slice (LSB slice first).
+
+    Slice s stores integer digits in [0, 2^cell_bits - 1] mapped linearly to
+    conductance; compute-time recombination is sum_s (2^cell_bits)^s * y_s.
+    """
+    levels = (1 << bits) - 1
+    scale = levels / w_max
+    plans = []
+    w_pos_q = jnp.round(jnp.clip(w, 0, w_max) * scale).astype(jnp.int32)
+    w_neg_q = jnp.round(jnp.clip(-w, 0, w_max) * scale).astype(jnp.int32)
+    n_slices = (bits + cell_bits - 1) // cell_bits
+    digit_max = (1 << cell_bits) - 1
+    for s in range(n_slices):
+        shift = s * cell_bits
+        dp = (w_pos_q >> shift) & digit_max
+        dn = (w_neg_q >> shift) & digit_max
+        plans.append(SlicedWeights(
+            g_pos_main=weight_to_g(dp.astype(jnp.float32) / digit_max * w_max, w_max, model),
+            g_neg_main=weight_to_g(dn.astype(jnp.float32) / digit_max * w_max, w_max, model),
+            g_pos_res=jnp.full_like(w, model.g_min),
+            g_neg_res=jnp.full_like(w, model.g_min),
+            w_max=w_max,
+        ))
+    return plans
+
+
+def effective_weight(plan: SlicedWeights, rng: jax.Array | None = None,
+                     model: NoiseModel = DEFAULT,
+                     saf_rate: float = 0.0) -> jax.Array:
+    """The signed weight the crossbar actually computes with, after noise.
+
+    W_eff = (w+ - w-) + (w+_res - w-_res) / 10, each cell independently
+    perturbed by Eq 6 (and optionally stuck-at faults).
+    """
+    cells = [plan.g_pos_main, plan.g_neg_main, plan.g_pos_res, plan.g_neg_res]
+    if rng is not None:
+        # the plan already carries the persistent programming realization;
+        # each compute pass adds fresh READ fluctuation (Eq 6 second term)
+        keys = jax.random.split(rng, len(cells))
+        noisy = []
+        for k, g in zip(keys, cells):
+            g_n = model.read(k, g)
+            if saf_rate > 0.0:
+                k_s = jax.random.fold_in(k, 7)
+                g_n, _ = stuck_at_faults(k_s, g_n, saf_rate, model)
+            noisy.append(g_n)
+        cells = noisy
+    wp, wn, rp, rn = (g_to_weight(g, plan.w_max, model) for g in cells)
+    return (wp - wn) + (rp - rn) / RESIDUAL_GAIN
+
+
+def effective_weight_dsl(plans: list[SlicedWeights], cell_bits: int, bits: int,
+                         rng: jax.Array | None = None,
+                         model: NoiseModel = DEFAULT,
+                         saf_rate: float = 0.0) -> jax.Array:
+    """Shift-and-add recombination of D-SL slices (discrete levels -> more
+    noise-sensitive; reproduced in the Fig 16 benchmark).
+
+    Each slice cell stores a digit d in [0, digit_max] as conductance; the
+    readout digit is w_s * digit_max / w_max and the weight reconstructs as
+    (sum_s digit_s * 2^(s*cell_bits)) / (2^bits - 1) * w_max.
+    """
+    levels = float((1 << bits) - 1)
+    digit_max = float((1 << cell_bits) - 1)
+    total = None
+    for s, plan in enumerate(plans):
+        k = None if rng is None else jax.random.fold_in(rng, s)
+        w_s = effective_weight(plan, k, model, saf_rate)  # signed digit value in weight units
+        digit = w_s * digit_max / plan.w_max
+        contrib = digit * float(1 << (s * cell_bits))
+        total = contrib if total is None else total + contrib
+    return total / levels * plans[0].w_max

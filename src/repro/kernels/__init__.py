@@ -1,0 +1,10 @@
+"""TPU Pallas kernels for NL-DPE compute hot-spots.
+
+Each subpackage: kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+public wrapper), ref.py (pure-jnp oracle).  Kernels target TPU; on this
+CPU-only container they are validated with interpret=True.
+"""
+from .acam_activation.ops import acam_apply
+from .crossbar_vmm.ops import crossbar_matmul
+from .flash_attention.ops import flash_attention
+from .nldpe_qmatmul.ops import nldpe_matmul_int8

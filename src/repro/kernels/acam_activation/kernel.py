@@ -1,0 +1,63 @@
+"""Pallas TPU kernel: 8-bit ACAM activation (interval match -> Gray decode).
+
+Hardware-faithful simulation of one ACAM unit (paper Fig 4(e)): for every
+element x, each output bit i is OR over rows r of (lo[i,r] <= x <= hi[i,r]);
+the Gray bit-planes are XOR-decoded and the binary code dequantized.
+
+TPU mapping: this is pure VPU work.  Elements are processed in
+(block_rows, 128)-shaped VMEM tiles (lane dimension 128-aligned); the
+threshold table (bits, rows) is tiny (<= 8 x 128 floats = 4 KB) and is
+broadcast to every grid step.  The compare-reduce runs vectorized over the
+trailing table axes; the Gray decode is an unrolled 8-step mod-2 cumulative
+sum (XOR chain of Fig 4(e)).
+
+VMEM budget per grid step (defaults, f32): x tile 8*128*4 = 4 KB, table
+2 * 8*128*4 = 8 KB, out 4 KB -> well under the ~16 MB VMEM of a TPU core;
+block_rows can scale to ~4096 before VMEM pressure matters.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _acam_kernel(x_ref, lo_ref, hi_ref, o_ref, *, bits: int,
+                 out_lo: float, out_step: float):
+    x = x_ref[...]                                     # (bm, bn)
+    lo = lo_ref[...]                                   # (bits, rows)
+    hi = hi_ref[...]
+    xe = x[..., None, None]                            # (bm, bn, 1, 1)
+    m = (xe >= lo) & (xe <= hi)                        # (bm, bn, bits, rows)
+    g = jnp.any(m, axis=-1).astype(jnp.float32)        # Gray planes, LSB first
+    # XOR decode: b_i = XOR(g_{n-1}..g_i)  == reverse cumulative mod-2 sum
+    code = jnp.zeros(x.shape, jnp.float32)
+    b = jnp.zeros(x.shape, jnp.float32)
+    for i in range(bits - 1, -1, -1):
+        b = jnp.abs(b - g[..., i])                     # XOR on {0,1} floats
+        code = code + b * (2.0 ** i)
+    o_ref[...] = code * out_step + out_lo
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "out_lo", "out_step",
+                                             "block_rows", "interpret"))
+def acam_activation_kernel(x: jax.Array, lo: jax.Array, hi: jax.Array,
+                           bits: int = 8, out_lo: float = 0.0,
+                           out_step: float = 1.0, block_rows: int = 8,
+                           interpret: bool = True) -> jax.Array:
+    """x: (R, 128k) f32 2-D (callers flatten/pad), lo/hi: (bits, rows)."""
+    r, c = x.shape
+    assert r % block_rows == 0, (r, block_rows)
+    table_spec = pl.BlockSpec(lo.shape, lambda i: (0, 0))
+    return pl.pallas_call(
+        functools.partial(_acam_kernel, bits=bits, out_lo=out_lo,
+                          out_step=out_step),
+        grid=(r // block_rows,),
+        in_specs=[pl.BlockSpec((block_rows, c), lambda i: (i, 0)),
+                  table_spec, table_spec],
+        out_specs=pl.BlockSpec((block_rows, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, c), jnp.float32),
+        interpret=interpret,
+    )(x, lo, hi)

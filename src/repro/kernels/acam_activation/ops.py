@@ -1,0 +1,35 @@
+"""Jit'd public wrapper: apply an ACAM table to an arbitrary-shape tensor."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ...core.dt import ACAMTable
+from .kernel import acam_activation_kernel
+from .ref import acam_activation_ref
+
+_LANE = 128
+
+
+def acam_apply(x: jax.Array, table: ACAMTable, block_rows: int = 8,
+               interpret: bool = True, use_ref: bool = False) -> jax.Array:
+    """Flatten -> pad to (rows, 128) tiles -> kernel -> restore shape."""
+    lo = jnp.asarray(table.lo)
+    hi = jnp.asarray(table.hi)
+    out_lo = float(table.out_spec.lo)
+    out_step = float(table.out_spec.step)
+    if use_ref:
+        return acam_activation_ref(x, lo, hi, table.bits, out_lo, out_step)
+
+    shape = x.shape
+    flat = x.reshape(-1).astype(jnp.float32)
+    n = flat.shape[0]
+    per_block = block_rows * _LANE
+    pad = (-n) % per_block
+    flat = jnp.pad(flat, (0, pad))
+    x2 = flat.reshape(-1, _LANE)
+    y = acam_activation_kernel(x2, lo, hi, bits=table.bits, out_lo=out_lo,
+                               out_step=out_step, block_rows=block_rows,
+                               interpret=interpret)
+    return y.reshape(-1)[:n].reshape(shape)

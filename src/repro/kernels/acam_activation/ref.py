@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the acam_activation kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def acam_activation_ref(x: jax.Array, lo: jax.Array, hi: jax.Array,
+                        bits: int = 8, out_lo: float = 0.0,
+                        out_step: float = 1.0) -> jax.Array:
+    xe = x[..., None, None]
+    m = (xe >= lo) & (xe <= hi)
+    g = jnp.any(m, axis=-1).astype(jnp.int32)          # (..., bits) LSB first
+    rev = jnp.flip(g, axis=-1)
+    b = jnp.flip(jnp.cumsum(rev, axis=-1) % 2, axis=-1)
+    code = jnp.sum(b * (1 << jnp.arange(bits)), axis=-1).astype(jnp.float32)
+    return code * out_step + out_lo

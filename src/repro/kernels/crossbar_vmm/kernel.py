@@ -1,0 +1,60 @@
+"""Pallas TPU kernel: fused A-SL dual-conductance crossbar VMM.
+
+Simulates one analog pass over the four physical crossbars of a core
+(paper §V: two positive + two negative; with A-SL each polarity also has a
+residual cell bank read through a /10 current mirror):
+
+  y = x @ [ (G+ - G-) + (G+res - G-res)/10 ] / g_ratio
+
+The conductance->weight affine offset (g_min) cancels between polarities,
+so the combine is a pure scale — fused in VMEM so the four G tiles are read
+once and a single MXU matmul runs per (i, j, k) step.
+
+Tiles: x (bm, bk) f32, four G tiles (bk, bn) f32, out (bm, bn) f32.
+Defaults bm=bn=bk=128: ~0.4 MB VMEM.  The stochastic read-noise/SAF
+perturbation of G happens *outside* (core/noise.py) so the kernel stays
+deterministic and bit-reproducible.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _xbar_kernel(x_ref, gp_ref, gn_ref, rp_ref, rn_ref, o_ref, *,
+                 inv_g_ratio: float, res_gain: float):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    w = (gp_ref[...] - gn_ref[...]) + (rp_ref[...] - rn_ref[...]) * (1.0 / res_gain)
+    o_ref[...] += jnp.dot(x_ref[...], w * inv_g_ratio,
+                          preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("inv_g_ratio", "res_gain", "bm",
+                                             "bn", "bk", "interpret"))
+def crossbar_vmm_kernel(x: jax.Array, g_pos: jax.Array, g_neg: jax.Array,
+                        g_pos_res: jax.Array, g_neg_res: jax.Array,
+                        inv_g_ratio: float, res_gain: float = 10.0,
+                        bm: int = 128, bn: int = 128, bk: int = 128,
+                        interpret: bool = True) -> jax.Array:
+    m, k = x.shape
+    k2, n = g_pos.shape
+    assert k == k2 and m % bm == 0 and n % bn == 0 and k % bk == 0
+    g_spec = pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j))
+    return pl.pallas_call(
+        functools.partial(_xbar_kernel, inv_g_ratio=inv_g_ratio,
+                          res_gain=res_gain),
+        grid=(m // bm, n // bn, k // bk),
+        in_specs=[pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+                  g_spec, g_spec, g_spec, g_spec],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x, g_pos, g_neg, g_pos_res, g_neg_res)

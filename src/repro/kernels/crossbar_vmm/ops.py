@@ -1,0 +1,44 @@
+"""Public op: SlicedWeights plan -> fused noisy crossbar VMM."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ...core.noise import DEFAULT, NoiseModel
+from ...core.slicing import RESIDUAL_GAIN, SlicedWeights
+from .kernel import crossbar_vmm_kernel
+from .ref import crossbar_vmm_ref
+
+
+def _pad2(a, pr, pc):
+    return jnp.pad(a, ((0, pr), (0, pc)))
+
+
+def crossbar_matmul(x: jax.Array, plan: SlicedWeights,
+                    rng: jax.Array | None = None,
+                    model: NoiseModel = DEFAULT,
+                    interpret: bool = True,
+                    use_ref: bool = False) -> jax.Array:
+    """y = x @ W_eff with optional per-call read noise applied to the plan.
+
+    The noise draw happens here (outside the kernel) so the kernel itself is
+    deterministic; padding cells are set to g_min (weight 0).
+    """
+    cells = [plan.g_pos_main, plan.g_neg_main, plan.g_pos_res, plan.g_neg_res]
+    if rng is not None:
+        keys = jax.random.split(rng, 4)
+        cells = [model.read(k, g) for k, g in zip(keys, cells)]
+    g_ratio = (model.g_max - model.g_min) / plan.w_max
+    inv = 1.0 / g_ratio
+    if use_ref:
+        return crossbar_vmm_ref(x, *cells, inv, RESIDUAL_GAIN)
+    m, k = x.shape
+    n = cells[0].shape[1]
+    pm, pk, pn = (-m) % 128, (-k) % 128, (-n) % 128
+    xp = _pad2(x.astype(jnp.float32), pm, pk)
+    # pad conductances with g_min so padded cells decode to weight 0
+    cells_p = [jnp.pad(g, ((0, pk), (0, pn)), constant_values=model.g_min)
+               for g in cells]
+    out = crossbar_vmm_kernel(xp, *cells_p, inv, RESIDUAL_GAIN,
+                              interpret=interpret)
+    return out[:m, :n]

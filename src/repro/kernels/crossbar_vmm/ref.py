@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for crossbar_vmm."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def crossbar_vmm_ref(x, g_pos, g_neg, g_pos_res, g_neg_res,
+                     inv_g_ratio: float, res_gain: float = 10.0) -> jax.Array:
+    w = (g_pos - g_neg) + (g_pos_res - g_neg_res) / res_gain
+    return jnp.matmul(x, w * inv_g_ratio)

@@ -1,0 +1,38 @@
+"""Public op: jit'd flash attention wrapper.
+
+Rather than zero-padding K/V (zero keys score 0, not -inf, and would leak
+into the softmax), the wrapper shrinks block sizes to divisors of the
+sequence lengths.  All production shapes in this framework are 128-multiples,
+so the MXU-aligned defaults survive; odd test shapes fall back to smaller
+blocks automatically.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_kernel
+from .ref import flash_attention_ref
+
+
+def _divisor_block(n: int, target: int) -> int:
+    for b in range(min(target, n), 0, -1):
+        if n % b == 0:
+            return b
+    return 1
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True, bq: int = 128, bk: int = 128,
+                    interpret: bool = True, use_ref: bool = False) -> jax.Array:
+    if use_ref:
+        return flash_attention_ref(q, k, v, causal)
+    lq, lk = q.shape[2], k.shape[2]
+    bq_eff = _divisor_block(lq, bq)
+    bk_eff = _divisor_block(lk, bk)
+    out = flash_attention_kernel(q.astype(jnp.float32),
+                                 k.astype(jnp.float32),
+                                 v.astype(jnp.float32),
+                                 causal=causal, bq=bq_eff, bk=bk_eff,
+                                 interpret=interpret)
+    return out.astype(q.dtype)

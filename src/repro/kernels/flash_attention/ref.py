@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for flash_attention (materialized-scores GQA attention)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                        causal: bool = True) -> jax.Array:
+    b, h, lq, d = q.shape
+    _, hkv, lk, _ = k.shape
+    group = h // hkv
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(jnp.float32(d))
+    if causal:
+        q_pos = jnp.arange(lq)[:, None] + (lk - lq)
+        k_pos = jnp.arange(lk)[None, :]
+        s = jnp.where(q_pos >= k_pos, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v)

@@ -1,0 +1,66 @@
+"""Pallas TPU kernel: log-domain DMMul over 8-bit ACAM codes (paper Eq 3).
+
+NL-DPE computes data-dependent products as exp(log a + log b) with 8-bit
+log/exp ACAMs.  On the 8-bit log grid exp(la+lb) = exp(la) * exp(lb), so the
+whole DMMul collapses to a matmul over *log-quantized reconstructions* —
+which is exactly what the MXU wants (see DESIGN.md §2: the per-product
+output re-quantization is the only difference vs the exact oracle and is
+bounded by 1/2 LSB of the exp grid).
+
+Inputs are the wire format of the analog engine: centered int8 codes
+(code - 128) plus int8 signs.  The kernel dequantizes in VMEM
+(sign * exp(code*step + log_lo), VPU transcendental) and accumulates f32
+tiles on the MXU over the K grid axis.
+
+Tile sizing: bm=bn=bk=128 -> A,B tiles 2*(128*128) int8 = 32 KB in, one
+f32 dequant copy each (128 KB) + out tile 64 KB: ~0.3 MB VMEM, MXU-aligned
+(128x128x128 dots).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _qmm_kernel(ac_ref, as_ref, bc_ref, bs_ref, o_ref, *, step: float,
+                log_lo: float):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    def dequant(code_ref, sign_ref):
+        code = code_ref[...].astype(jnp.float32) + 128.0
+        mag = jnp.exp(code * step + log_lo)
+        return sign_ref[...].astype(jnp.float32) * mag
+
+    a = dequant(ac_ref, as_ref)
+    b = dequant(bc_ref, bs_ref)
+    o_ref[...] += jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("step", "log_lo", "bm", "bn",
+                                             "bk", "interpret"))
+def nldpe_qmatmul_kernel(a_code: jax.Array, a_sign: jax.Array,
+                         b_code: jax.Array, b_sign: jax.Array,
+                         step: float, log_lo: float,
+                         bm: int = 128, bn: int = 128, bk: int = 128,
+                         interpret: bool = True) -> jax.Array:
+    """a_*: (M, K) int8, b_*: (K, N) int8 -> (M, N) f32."""
+    m, k = a_code.shape
+    k2, n = b_code.shape
+    assert k == k2 and m % bm == 0 and n % bn == 0 and k % bk == 0
+    a_spec = pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk))
+    b_spec = pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j))
+    return pl.pallas_call(
+        functools.partial(_qmm_kernel, step=step, log_lo=log_lo),
+        grid=(m // bm, n // bn, k // bk),
+        in_specs=[a_spec, a_spec, b_spec, b_spec],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(a_code, a_sign, b_code, b_sign)

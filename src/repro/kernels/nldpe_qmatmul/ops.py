@@ -1,0 +1,45 @@
+"""Public op: float tensors -> log-domain codes -> kernel matmul."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from ...core.logdomain import DEFAULT_CFG, LogDomainConfig
+from .kernel import nldpe_qmatmul_kernel
+from .ref import nldpe_qmatmul_ref
+
+
+def encode_int8(x: jax.Array, cfg: LogDomainConfig = DEFAULT_CFG):
+    """Float -> (centered int8 code, int8 sign); zeros get sign 0."""
+    spec = cfg.mag_spec
+    code, sign = spec.encode(x)
+    dead = jnp.abs(x) < math.exp(spec.log_lo)
+    sign = jnp.where(dead, 0, sign).astype(jnp.int8)
+    return (code - 128).astype(jnp.int8), sign
+
+
+def nldpe_matmul_int8(a: jax.Array, b: jax.Array,
+                      cfg: LogDomainConfig = DEFAULT_CFG,
+                      interpret: bool = True,
+                      use_ref: bool = False) -> jax.Array:
+    """C = A @ B through the NL-DPE log-quantized path (2-D operands).
+
+    Pads M/N/K up to 128-multiples for MXU alignment, then crops.
+    """
+    spec = cfg.mag_spec
+    ac, as_ = encode_int8(a, cfg)
+    bc, bs = encode_int8(b, cfg)
+    if use_ref:
+        return nldpe_qmatmul_ref(ac, as_, bc, bs, spec.step, spec.log_lo)
+    m, k = a.shape
+    _, n = b.shape
+    pm, pk, pn = (-m) % 128, (-k) % 128, (-n) % 128
+    ac = jnp.pad(ac, ((0, pm), (0, pk)))
+    as_ = jnp.pad(as_, ((0, pm), (0, pk)))   # pad sign=0 -> contributes 0
+    bc = jnp.pad(bc, ((0, pk), (0, pn)))
+    bs = jnp.pad(bs, ((0, pk), (0, pn)))
+    out = nldpe_qmatmul_kernel(ac, as_, bc, bs, spec.step, spec.log_lo,
+                               interpret=interpret)
+    return out[:m, :n]

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for nldpe_qmatmul: dequantize codes then matmul."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dequant_ref(code: jax.Array, sign: jax.Array, step: float,
+                log_lo: float) -> jax.Array:
+    c = code.astype(jnp.float32) + 128.0
+    return sign.astype(jnp.float32) * jnp.exp(c * step + log_lo)
+
+
+def nldpe_qmatmul_ref(a_code, a_sign, b_code, b_sign, step: float,
+                      log_lo: float) -> jax.Array:
+    a = dequant_ref(a_code, a_sign, step, log_lo)
+    b = dequant_ref(b_code, b_sign, step, log_lo)
+    return jnp.matmul(a, b)

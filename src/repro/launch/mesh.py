@@ -1,0 +1,27 @@
+"""Production mesh construction.
+
+A FUNCTION (not module-level state) so importing never touches jax device
+initialization.  The dry-run process sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import; smoke tests and benches see the real single device.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: tuple, axes: tuple):
+    """Arbitrary mesh for tests/elastic configs (device-count permitting)."""
+    return jax.make_mesh(shape, axes)
+
+
+def single_device_mesh():
+    return Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))

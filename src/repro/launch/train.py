@@ -1,0 +1,152 @@
+"""Training step builder + fault-tolerant CLI driver.
+
+``build_train_step`` returns a pure (params, opt_state, batch) -> (params,
+opt_state, metrics) function used identically by the CPU smoke driver, the
+examples, and the 512-device dry-run.  The PRNG for NAF noise injection is
+derived from the optimizer step counter (no key plumbing through shardings).
+
+NAF mode (paper §IV-B step 1): every iteration round-trips Conv/Linear
+weights through the Eq-6 noisy-cell model and adds the Eq-8 regularizers —
+the paper's crossbar noise-aware fine-tuning as a first-class training flag.
+
+The CLI driver (python -m repro.launch.train) runs reduced configs on CPU
+with checkpointing, restart recovery and optional failure injection; it is
+the same loop the multi-pod launcher would drive per-process.
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import SHAPES, get_config
+from ..core.engine import NLDPEConfig, OFF
+from ..data.synthetic import DataConfig, make_batch_fn
+from ..models import lm
+from ..optim import adamw
+from ..optim.naf_loss import eq8_loss
+from ..optim.schedules import warmup_cosine, wsd
+
+
+def build_train_step(cfg, opt_cfg: adamw.AdamWConfig, *,
+                     nldpe: NLDPEConfig = OFF, batch_groups: int = 1,
+                     naf: bool = False, naf_lambda1: float = 1e-5,
+                     naf_lambda2: float = 1e-5,
+                     cast_compute_dtype: bool = True):
+    def loss_fn(params, batch, step):
+        run_params = params
+        eps_tree = None
+        if naf:
+            from ..core.naf import inject_crossbar_noise
+            key = jax.random.fold_in(jax.random.key(17), step)
+            noisy = inject_crossbar_noise(key, params)
+            eps_tree = jax.tree.map(lambda a, b: a - b, noisy, params)
+            run_params = jax.tree.map(
+                lambda p, n: p + jax.lax.stop_gradient(n - p), params, noisy)
+        if cast_compute_dtype:
+            # cast f32 masters to the compute dtype ONCE, outside the layer
+            # scan: the per-layer FSDP all-gathers then move bf16, not f32
+            # (2x collective bytes — §Perf iteration 2; XLA otherwise hoists
+            # the gather above the in-layer .astype casts)
+            run_params = jax.tree.map(
+                lambda x: x.astype(cfg.activation_dtype)
+                if x.dtype == jnp.float32 else x, run_params)
+        kwargs = {}
+        if "patch_embeds" in batch:
+            kwargs["patch_embeds"] = batch["patch_embeds"]
+        logits, _ = lm.forward(run_params, batch["tokens"], cfg, mode="train",
+                               nldpe=nldpe, batch_groups=batch_groups, **kwargs)
+        if "patch_embeds" in batch:
+            logits = logits[:, batch["patch_embeds"].shape[1]:]
+        loss = lm.lm_loss(logits, batch["labels"])
+        if naf:
+            loss, reg = eq8_loss(loss, params, eps_tree,
+                                 lambda1=naf_lambda1, lambda2=naf_lambda2)
+        return loss
+
+    def train_step(params, opt_state, batch):
+        step = opt_state["step"]
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch, step)
+        params, opt_state, metrics = adamw.update(opt_cfg, grads, opt_state, params)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# CPU smoke driver with checkpoint/restart (the per-process production loop)
+# ---------------------------------------------------------------------------
+
+def run(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default="qwen2_7b")
+    p.add_argument("--steps", type=int, default=50)
+    p.add_argument("--batch", type=int, default=8)
+    p.add_argument("--seq", type=int, default=64)
+    p.add_argument("--reduced", action="store_true", default=True)
+    p.add_argument("--nldpe", action="store_true")
+    p.add_argument("--naf", action="store_true")
+    p.add_argument("--schedule", default="cosine", choices=["cosine", "wsd"])
+    p.add_argument("--lr", type=float, default=1e-3)
+    p.add_argument("--ckpt-dir", default=None)
+    p.add_argument("--ckpt-every", type=int, default=20)
+    p.add_argument("--fail-at-step", type=int, default=None,
+                   help="simulate a node failure (raises) at this step")
+    p.add_argument("--seed", type=int, default=0)
+    args = p.parse_args(argv)
+
+    cfg = get_config(args.arch, reduced=True)
+    sched = (wsd(args.lr, 5, int(args.steps * 0.6), int(args.steps * 0.3))
+             if args.schedule == "wsd"
+             else warmup_cosine(args.lr, 5, args.steps))
+    opt_cfg = adamw.AdamWConfig(lr=sched)
+    nldpe = NLDPEConfig(enabled=args.nldpe)
+
+    from ..nn.module import param_dtype
+    with param_dtype(jnp.float32):
+        params = lm.init_params(jax.random.key(args.seed), cfg)
+    opt_state = adamw.init(params)
+
+    data_cfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                          global_batch=args.batch, seed=args.seed)
+    batch_fn = jax.jit(make_batch_fn(data_cfg))
+    step_fn = jax.jit(build_train_step(cfg, opt_cfg, nldpe=nldpe, naf=args.naf))
+
+    start = 0
+    manager = None
+    if args.ckpt_dir:
+        from ..checkpoint.manager import CheckpointManager
+        manager = CheckpointManager(args.ckpt_dir)
+        restored = manager.restore_latest({"params": params, "opt": opt_state})
+        if restored is not None:
+            state, start = restored
+            params, opt_state = state["params"], state["opt"]
+            print(f"[train] restored checkpoint at step {start}")
+
+    losses = []
+    for step in range(start, args.steps):
+        if args.fail_at_step is not None and step == args.fail_at_step:
+            raise RuntimeError(f"injected failure at step {step}")
+        batch = batch_fn(jnp.int32(step))
+        t0 = time.time()
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        loss = float(metrics["loss"])
+        losses.append(loss)
+        if step % 10 == 0 or step == args.steps - 1:
+            print(f"[train] step {step:4d} loss {loss:.4f} "
+                  f"({(time.time() - t0) * 1e3:.0f} ms)")
+        if manager and (step + 1) % args.ckpt_every == 0:
+            manager.save({"params": params, "opt": opt_state}, step + 1)
+    if manager:
+        manager.save({"params": params, "opt": opt_state}, args.steps)
+    print(f"[train] done: first-10 mean {sum(losses[:10]) / max(len(losses[:10]),1):.4f} "
+          f"last-10 mean {sum(losses[-10:]) / max(len(losses[-10:]),1):.4f}")
+    return losses
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,1 @@
+from .lm import (decode_step, forward, init_model_cache, init_params, lm_loss)

@@ -1,0 +1,153 @@
+"""CNN substrate — the paper's other half (ResNet/VGG-class inference).
+
+The paper maps convolutions onto crossbars via im2col (§V: "DMMul is
+modeled as a grouped convolutional layer"), with ACAMs computing the ReLU
+(or any) activation per output column.  This module provides:
+
+* a ResNet-style residual CNN over dict-pytree params (same `param()`
+  machinery as the LMs, so sharding/spec-mode work unchanged);
+* two execution paths per conv: the standard `lax.conv_general_dilated`,
+  and the NL-DPE path — explicit im2col + 8-bit log-quantized matmul
+  (exactly the crossbar + ACAM pipeline) + ACAM activation;
+* `init_params` / `forward` / `cnn_loss` mirroring the LM API, so the NAF
+  pipeline (crossbar noise injection + Eq 8) applies as-is.
+
+Reduced configs train on the synthetic pattern-classification task in
+`data/images.py` in a few hundred CPU steps; the Table-III CNN stages are
+exercised in tests/test_cnn.py and benchmarks/table3 (LM variant) — same
+machinery, different substrate.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from ..core.engine import NLDPEConfig, OFF
+from ..nn.basic import rmsnorm_apply, rmsnorm_init
+from ..nn.module import param
+
+
+@dataclasses.dataclass(frozen=True)
+class CNNConfig:
+    name: str = "resnet-mini"
+    num_classes: int = 10
+    in_channels: int = 3
+    stem_channels: int = 16
+    stage_channels: tuple = (16, 32, 64)
+    blocks_per_stage: int = 2
+    img_size: int = 32
+    act: str = "relu"
+
+
+def conv_init(key, cin: int, cout: int, k: int = 3):
+    return {"w": param(key, (k, k, cin, cout), (None, None, "embed", "mlp"),
+                       scale=(k * k * cin) ** -0.5),
+            "b": param(key, (cout,), ("mlp",), init="zeros")}
+
+
+def _im2col(x: jax.Array, k: int, stride: int) -> jax.Array:
+    """(B, H, W, C) -> (B, Ho, Wo, k*k*C) patches (the crossbar's input
+    vectors: each output pixel is one word-line activation vector).
+
+    Padding follows XLA's SAME convention exactly (asymmetric for stride>1):
+    pad_total = (out-1)*stride + k - in, split low//2 / rest-high.
+    """
+    b, h, w, c = x.shape
+
+    def same_pads(n):
+        out = -(-n // stride)
+        total = max((out - 1) * stride + k - n, 0)
+        return out, total // 2, total - total // 2
+
+    ho, ph_lo, ph_hi = same_pads(h)
+    wo, pw_lo, pw_hi = same_pads(w)
+    xp = jnp.pad(x, ((0, 0), (ph_lo, ph_hi), (pw_lo, pw_hi), (0, 0)))
+    patches = []
+    for dy in range(k):
+        for dx in range(k):
+            patches.append(xp[:, dy:dy + (ho - 1) * stride + 1:stride,
+                              dx:dx + (wo - 1) * stride + 1:stride, :])
+    return jnp.concatenate(patches, axis=-1)
+
+
+def conv_apply(p, x: jax.Array, stride: int = 1,
+               nldpe: NLDPEConfig = OFF) -> jax.Array:
+    """3x3 conv; NL-DPE mode = im2col + log-quantized crossbar matmul."""
+    k = p["w"].shape[0]
+    if nldpe.enabled and nldpe.logdomain_dmmul:
+        cols = _im2col(x, k, stride)                        # (B,Ho,Wo,kkC)
+        b, ho, wo, kk = cols.shape
+        wmat = p["w"].astype(jnp.float32).reshape(kk, -1)
+        y = nldpe.dmmul(cols.reshape(-1, kk).astype(jnp.float32), wmat)
+        y = y.reshape(b, ho, wo, -1)
+    else:
+        y = jax.lax.conv_general_dilated(
+            x, p["w"].astype(x.dtype), window_strides=(stride, stride),
+            padding="SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + p["b"].astype(y.dtype)
+
+
+def block_init(key, cin: int, cout: int):
+    k1, k2, k3, kn1, kn2 = jax.random.split(key, 5)
+    p = {"conv1": conv_init(k1, cin, cout),
+         "conv2": conv_init(k2, cout, cout),
+         "norm1": rmsnorm_init(kn1, cout),
+         "norm2": rmsnorm_init(kn2, cout)}
+    if cin != cout:
+        p["proj"] = conv_init(k3, cin, cout, k=1)
+    return p
+
+
+def block_apply(p, x, stride: int, cfg: CNNConfig, nldpe: NLDPEConfig = OFF):
+    h = conv_apply(p["conv1"], x, stride=stride, nldpe=nldpe)
+    h = nldpe.activation(rmsnorm_apply(p["norm1"], h), cfg.act).astype(x.dtype)
+    h = conv_apply(p["conv2"], h, nldpe=nldpe)
+    h = rmsnorm_apply(p["norm2"], h)
+    if "proj" in p:
+        x = conv_apply(p["proj"], x, stride=stride, nldpe=nldpe)
+    elif stride > 1:
+        x = x[:, ::stride, ::stride, :]
+    return nldpe.activation(x + h.astype(x.dtype), cfg.act).astype(x.dtype)
+
+
+def init_params(key, cfg: CNNConfig):
+    ks = jax.random.split(key, 3 + len(cfg.stage_channels) * cfg.blocks_per_stage)
+    params = {"stem": conv_init(ks[0], cfg.in_channels, cfg.stem_channels)}
+    cin = cfg.stem_channels
+    i = 1
+    for s, cout in enumerate(cfg.stage_channels):
+        for b in range(cfg.blocks_per_stage):
+            params[f"s{s}b{b}"] = block_init(ks[i], cin, cout)
+            cin = cout
+            i += 1
+    params["head"] = {"w": param(ks[-1], (cin, cfg.num_classes),
+                                 ("embed", "vocab"), scale=cin ** -0.5),
+                      "b": param(ks[-1], (cfg.num_classes,), ("vocab",),
+                                 init="zeros")}
+    return params
+
+
+def forward(params, images: jax.Array, cfg: CNNConfig,
+            nldpe: NLDPEConfig = OFF) -> jax.Array:
+    """images: (B, H, W, C) -> logits (B, num_classes)."""
+    x = conv_apply(params["stem"], images, nldpe=nldpe)
+    x = nldpe.activation(x, cfg.act).astype(images.dtype)
+    for s in range(len(cfg.stage_channels)):
+        for b in range(cfg.blocks_per_stage):
+            stride = 2 if (b == 0 and s > 0) else 1
+            x = block_apply(params[f"s{s}b{b}"], x, stride, cfg, nldpe)
+    x = jnp.mean(x, axis=(1, 2))                              # global avg pool
+    return (x.astype(jnp.float32) @ params["head"]["w"].astype(jnp.float32)
+            + params["head"]["b"].astype(jnp.float32))
+
+
+def cnn_loss(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(lse - gold)
+
+
+def accuracy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    return jnp.mean((jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32))

@@ -1,0 +1,7 @@
+"""Model substrate: pure init/apply layers over dict pytrees."""
+from .attention import AttnSpec, attn_apply, attn_init, blockwise_attention
+from .basic import (apply_rope, embedding_apply, embedding_init, linear_apply,
+                    linear_init, rmsnorm_apply, rmsnorm_init)
+from .mlp import mlp_apply, mlp_init
+from .module import param, param_dtype, spec_mode, spec_tree, stacked
+from .moe import MoESpec, moe_apply, moe_init

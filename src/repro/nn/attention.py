@@ -1,0 +1,383 @@
+"""Attention: GQA/MQA, causal/prefix/sliding-window, KV cache, NL-DPE mode.
+
+Three compute paths chosen by shape/mode:
+
+* ``blockwise`` — training & prefill: pure-JAX flash (online softmax over KV
+  blocks, scan over Q blocks) so 32k-token scores never materialize.  This
+  is the lax twin of kernels/flash_attention (which is the TPU Pallas path,
+  validated in interpret mode; the lax version is what the CPU dry-run
+  lowers).
+* ``banded``   — sliding-window layers (gemma3 local, recurrentgemma):
+  per-Q-block dynamic slice of the KV band -> O(S * window) compute.
+* ``decode``   — single-token step against a (possibly ring-buffered) cache.
+
+GQA is computed grouped ('bkgqd,bkld->bkgql'), never materializing repeated
+KV heads.  NL-DPE numerics route through core.attention.nldpe_attention
+(log-domain DMMuls + ACAM softmax) when enabled.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from ..core.engine import NLDPEConfig, OFF
+from ..parallel.context import shard
+from .basic import apply_rope, linear_apply, param, rmsnorm_apply, rmsnorm_init
+from .module import param as _param
+
+NEG_INF = float(jnp.finfo(jnp.float32).min)
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnSpec:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    window: int | None = None          # sliding-window size (None = global)
+    qk_norm: bool = False              # gemma3-style per-head RMS on q/k
+    softcap: float | None = None
+
+    @property
+    def group(self) -> int:
+        return self.n_heads // self.n_kv_heads
+
+
+def attn_init(key, s: AttnSpec):
+    kq, kk, kv, ko, kn = jax.random.split(key, 5)
+    p = {
+        "wq": _param(kq, (s.d_model, s.n_heads, s.head_dim),
+                     ("embed", "heads", None)),
+        "wk": _param(kk, (s.d_model, s.n_kv_heads, s.head_dim),
+                     ("embed", "kv_heads", None)),
+        "wv": _param(kv, (s.d_model, s.n_kv_heads, s.head_dim),
+                     ("embed", "kv_heads", None)),
+        "wo": _param(ko, (s.n_heads, s.head_dim, s.d_model),
+                     ("heads", None, "embed"),
+                     scale=(s.n_heads * s.head_dim) ** -0.5),
+    }
+    if s.qkv_bias:
+        p["bq"] = _param(key, (s.n_heads, s.head_dim), ("heads", None), init="zeros")
+        p["bk"] = _param(key, (s.n_kv_heads, s.head_dim), ("kv_heads", None), init="zeros")
+        p["bv"] = _param(key, (s.n_kv_heads, s.head_dim), ("kv_heads", None), init="zeros")
+    if s.qk_norm:
+        p["q_norm"] = rmsnorm_init(kn, s.head_dim)
+        p["k_norm"] = rmsnorm_init(kn, s.head_dim)
+    return p
+
+
+def _project_qkv(p, s: AttnSpec, x: jax.Array, positions: jax.Array):
+    """x: (B, S, d) -> q (B, Hq, S, Dh), k/v (B, Hkv, S, Dh), rope applied."""
+    q = jnp.einsum("bsd,dhk->bhsk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bhsk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bhsk", x, p["wv"].astype(x.dtype))
+    if "bq" in p:
+        q = q + p["bq"].astype(x.dtype)[None, :, None, :]
+        k = k + p["bk"].astype(x.dtype)[None, :, None, :]
+        v = v + p["bv"].astype(x.dtype)[None, :, None, :]
+    if "q_norm" in p:
+        q = rmsnorm_apply(p["q_norm"], q)
+        k = rmsnorm_apply(p["k_norm"], k)
+    q = apply_rope(q, positions, s.rope_theta)
+    k = apply_rope(k, positions, s.rope_theta)
+    q = shard(q, "batch", "heads", None, None)
+    k = shard(k, "batch", "kv_heads", None, None)
+    v = shard(v, "batch", "kv_heads", None, None)
+    return q, k, v
+
+
+def _mask(q_pos, k_pos, *, causal: bool, window: int | None,
+          prefix_len: jax.Array | None):
+    """q_pos (..., Q), k_pos (..., K) -> bool (..., Q, K)."""
+    qp = q_pos[..., :, None]
+    kp = k_pos[..., None, :]
+    m = (qp >= kp) if causal else jnp.ones(jnp.broadcast_shapes(qp.shape, kp.shape), bool)
+    if window is not None:
+        m = m & (qp - kp < window)
+    if prefix_len is not None:
+        m = m | (kp < prefix_len)
+    return m
+
+
+def _sdpa(q, k, v, mask, softcap=None):
+    """Grouped GQA attention with materialized scores (small extents only).
+
+    q: (B, Hkv, G, Q, D); k/v: (B, Hkv, K, D); mask broadcastable (B,1,1,Q,K).
+    """
+    d = q.shape[-1]
+    s = jnp.einsum("bkgqd,bkld->bkgql", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(d)
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bkgql,bkld->bkgqd", p, v.astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# blockwise flash (train / prefill)
+# ---------------------------------------------------------------------------
+
+def blockwise_attention(q, k, v, *, causal=True, window=None, prefix_len=None,
+                        softcap=None, q_block=512, k_block=1024):
+    """q: (B,Hq,S,D), k/v: (B,Hkv,S,D) -> (B,Hq,S,D).  Online softmax."""
+    b, hq, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    g = hq // hkv
+    qb = min(q_block, sq)
+    while sq % qb:
+        qb //= 2
+    kb = min(k_block, sk)
+    while sk % kb:
+        kb //= 2
+    nq, nk = sq // qb, sk // kb
+    qg = q.reshape(b, hkv, g, nq, qb, d).astype(jnp.float32) / math.sqrt(d)
+    kg = k.reshape(b, hkv, nk, kb, d).astype(jnp.float32)
+    vg = v.reshape(b, hkv, nk, kb, d).astype(jnp.float32)
+
+    def q_step(iq):
+        q_i = qg[:, :, :, iq]                               # (B,Hkv,G,qb,D)
+        q_pos = iq * qb + jnp.arange(qb)
+
+        def kv_step(carry, ik):
+            m_run, l_run, acc = carry
+            k_j = jax.lax.dynamic_index_in_dim(kg, ik, axis=2, keepdims=False)
+            v_j = jax.lax.dynamic_index_in_dim(vg, ik, axis=2, keepdims=False)
+            s = jnp.einsum("bkgqd,bkld->bkgql", q_i, k_j)
+            if softcap:
+                s = jnp.tanh(s / softcap) * softcap
+            k_pos = ik * kb + jnp.arange(kb)
+            msk = _mask(q_pos, k_pos, causal=causal, window=window,
+                        prefix_len=prefix_len)
+            s = jnp.where(msk[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
+            m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            pj = jnp.exp(s - m_safe[..., None])
+            corr = jnp.where(jnp.isfinite(m_run), jnp.exp(m_run - m_safe), 0.0)
+            l_new = l_run * corr + jnp.sum(pj, axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum("bkgql,bkld->bkgqd", pj, v_j)
+            return (m_new, l_new, acc), None
+
+        init = (jnp.full((b, hkv, g, qb), NEG_INF, jnp.float32),
+                jnp.zeros((b, hkv, g, qb), jnp.float32),
+                jnp.zeros((b, hkv, g, qb, d), jnp.float32))
+        (m_f, l_f, acc), _ = jax.lax.scan(kv_step, init, jnp.arange(nk))
+        l_f = jnp.where(l_f == 0.0, 1.0, l_f)
+        return acc / l_f[..., None]
+
+    # remat per Q block: backward recomputes one block's KV scan at a time,
+    # so training never holds more than one (qb x S) score stripe.
+    out = jax.lax.map(jax.checkpoint(q_step), jnp.arange(nq))  # (nq,B,Hkv,G,qb,D)
+    out = jnp.moveaxis(out, 0, 3).reshape(b, hkv, g, sq, d)
+    return out.reshape(b, hq, sq, d).astype(q.dtype)
+
+
+def banded_attention(q, k, v, *, window: int, q_block=512, softcap=None):
+    """Sliding-window causal attention, O(S*window).
+
+    For each Q block, slices the KV band [blk_end - window - qb, blk_end)
+    with a static size, so compute scales with the window, not the sequence.
+    """
+    b, hq, sq, d = q.shape
+    _, hkv, _, _ = k.shape
+    g = hq // hkv
+    qb = min(q_block, sq)
+    while sq % qb:
+        qb //= 2
+    band = min(window + qb, sq)
+    nq = sq // qb
+    qg = q.reshape(b, hkv, g, nq, qb, d).astype(jnp.float32) / math.sqrt(d)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+
+    def q_step(iq):
+        q_i = qg[:, :, :, iq]
+        start = jnp.clip(iq * qb + qb - band, 0, sq - band)
+        k_j = jax.lax.dynamic_slice_in_dim(kf, start, band, axis=2)
+        v_j = jax.lax.dynamic_slice_in_dim(vf, start, band, axis=2)
+        s = jnp.einsum("bkgqd,bkld->bkgql", q_i, k_j)
+        if softcap:
+            s = jnp.tanh(s / softcap) * softcap
+        q_pos = iq * qb + jnp.arange(qb)
+        k_pos = start + jnp.arange(band)
+        msk = _mask(q_pos, k_pos, causal=True, window=window, prefix_len=None)
+        s = jnp.where(msk[None, None, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        return jnp.einsum("bkgql,bkld->bkgqd", p, v_j)
+
+    out = jax.lax.map(jax.checkpoint(q_step), jnp.arange(nq))
+    out = jnp.moveaxis(out, 0, 3).reshape(b, hkv, g, sq, d)
+    return out.reshape(b, hq, sq, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# KV cache
+# ---------------------------------------------------------------------------
+
+def init_cache(s: AttnSpec, batch: int, max_len: int, dtype=jnp.bfloat16,
+               quantized: bool = False):
+    """Ring-buffered when the layer is windowed (cache_len = window).
+
+    quantized=True stores K/V as int8 with per-(batch, head, position)
+    scales — the paper's 8-bit numerics applied to the cache (§Perf cell C):
+    halves the decode-step HBM traffic, which is the dominant roofline term
+    of every decode shape.
+    """
+    length = min(max_len, s.window) if s.window else max_len
+    kv_shape = (batch, s.n_kv_heads, length, s.head_dim)
+    cache = {"pos": jnp.full((length,), -1, jnp.int32)}
+    if quantized:
+        cache.update({
+            "k": jnp.zeros(kv_shape, jnp.int8),
+            "v": jnp.zeros(kv_shape, jnp.int8),
+            "k_scale": jnp.zeros(kv_shape[:3], jnp.float32),
+            "v_scale": jnp.zeros(kv_shape[:3], jnp.float32),
+        })
+    else:
+        cache.update({"k": jnp.zeros(kv_shape, dtype),
+                      "v": jnp.zeros(kv_shape, dtype)})
+    return cache
+
+
+def _quantize_kv(x: jax.Array):
+    """(B, H, S, D) -> int8 codes + per-(B, H, S) scale."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequantize_kv(cache, name: str) -> jax.Array:
+    if f"{name}_scale" in cache:
+        return (cache[name].astype(jnp.float32)
+                * cache[f"{name}_scale"][..., None])
+    return cache[name].astype(jnp.float32)
+
+
+def cache_specs(s: AttnSpec, batch: int, max_len: int, mesh, rules,
+                dtype=jnp.bfloat16):
+    """PartitionSpecs mirroring init_cache (kv-head or sequence sharded)."""
+    from ..parallel.sharding import resolve
+    length = min(max_len, s.window) if s.window else max_len
+    kv_shape = (batch, s.n_kv_heads, length, s.head_dim)
+    # prefer kv-head sharding; resolver falls back per divisibility
+    kv_axes = ("batch", "kv_heads", None, None)
+    if mesh is not None and s.n_kv_heads % mesh.shape.get("model", 1) != 0:
+        kv_axes = ("batch", None, "kv_seq", None)
+    spec = resolve(rules, kv_axes, kv_shape, mesh)
+    from jax.sharding import PartitionSpec as P
+    return {"k": spec, "v": spec, "pos": P()}
+
+
+def update_cache(cache, k_new, v_new, pos: jax.Array):
+    """Insert one step (decode) at ring slot pos % len."""
+    length = cache["k"].shape[2]
+    slot = pos % length
+    out = dict(cache)
+    if "k_scale" in cache:
+        kq, ks = _quantize_kv(k_new)
+        vq, vs = _quantize_kv(v_new)
+        out["k"] = jax.lax.dynamic_update_slice_in_dim(cache["k"], kq, slot, axis=2)
+        out["v"] = jax.lax.dynamic_update_slice_in_dim(cache["v"], vq, slot, axis=2)
+        out["k_scale"] = jax.lax.dynamic_update_slice_in_dim(cache["k_scale"], ks, slot, axis=2)
+        out["v_scale"] = jax.lax.dynamic_update_slice_in_dim(cache["v_scale"], vs, slot, axis=2)
+    else:
+        out["k"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k_new.astype(cache["k"].dtype), slot, axis=2)
+        out["v"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v_new.astype(cache["v"].dtype), slot, axis=2)
+    out["pos"] = jax.lax.dynamic_update_slice_in_dim(
+        cache["pos"], pos[None].astype(jnp.int32), slot, axis=0)
+    return out
+
+
+def decode_attention(q, cache, pos: jax.Array, s: AttnSpec, softcap=None):
+    """q: (B, Hq, 1, D) against the full cache with validity masking."""
+    b, hq, _, d = q.shape
+    g = s.group
+    qg = q.reshape(b, s.n_kv_heads, g, 1, d).astype(jnp.float32)
+    k, v = _dequantize_kv(cache, "k"), _dequantize_kv(cache, "v")
+    scores = jnp.einsum("bkgqd,bkld->bkgql", qg, k) / math.sqrt(d)
+    if softcap:
+        scores = jnp.tanh(scores / softcap) * softcap
+    kp = cache["pos"]
+    valid = (kp >= 0) & (kp <= pos)
+    if s.window:
+        valid = valid & (pos - kp < s.window)
+    scores = jnp.where(valid[None, None, None, None, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgql,bkld->bkgqd", p, v)
+    return out.reshape(b, hq, 1, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Block-level entry point
+# ---------------------------------------------------------------------------
+
+def attn_apply(p, s: AttnSpec, x: jax.Array, *, positions: jax.Array,
+               mode: str = "train", cache=None, prefix_len=None,
+               nldpe: NLDPEConfig = OFF):
+    """x: (B, S, d) -> (y, new_cache).
+
+    mode: "train"/"prefill" (full sequence, optional cache fill) or
+          "decode" (S == 1, cache required).
+    """
+    b, seq, _ = x.shape
+    q, k, v = _project_qkv(p, s, x, positions)
+
+    if mode == "decode":
+        assert cache is not None and seq == 1
+        pos = positions[0] if positions.ndim == 1 else positions[0, 0]
+        cache = update_cache(cache, k, v, pos)
+        if nldpe.enabled:
+            # NL-DPE decode: log-domain DMMul over the cached keys/values
+            valid = (cache["pos"] >= 0) & (cache["pos"] <= pos)
+            if s.window:
+                valid = valid & (pos - cache["pos"] < s.window)
+            kr = jnp.repeat(_dequantize_kv(cache, "k"), s.group, axis=1)
+            vr = jnp.repeat(_dequantize_kv(cache, "v"), s.group, axis=1)
+            o = nldpe.attention(q, kr.astype(q.dtype), vr.astype(q.dtype),
+                                causal=False, mask=valid[None, None, None, :])
+        else:
+            o = decode_attention(q, cache, pos, s, s.softcap)
+    else:
+        if nldpe.enabled:
+            kr = jnp.repeat(k, s.group, axis=1)
+            vr = jnp.repeat(v, s.group, axis=1)
+            msk = _mask(positions if positions.ndim > 1 else positions[None, :],
+                        positions if positions.ndim > 1 else positions[None, :],
+                        causal=True, window=s.window, prefix_len=prefix_len)
+            o = nldpe.attention(q, kr, vr, causal=False,
+                                mask=msk[:, None] if msk.ndim == 3 else msk)
+        elif s.window is not None and seq > s.window:
+            o = banded_attention(q, k, v, window=s.window, softcap=s.softcap)
+        else:
+            o = blockwise_attention(q, k, v, causal=True, window=s.window,
+                                    prefix_len=prefix_len, softcap=s.softcap)
+        if cache is not None:  # prefill populates the cache (ring-consistent)
+            length = cache["k"].shape[2]
+            take = min(seq, length)
+            pos_new = jnp.arange(seq - take, seq, dtype=jnp.int32)
+            slots = pos_new % length        # position p lives at slot p % len
+            new = {"pos": cache["pos"].at[slots].set(pos_new)}
+            if "k_scale" in cache:
+                kq, ks = _quantize_kv(k[:, :, -take:])
+                vq, vs = _quantize_kv(v[:, :, -take:])
+                new["k"] = cache["k"].at[:, :, slots].set(kq)
+                new["v"] = cache["v"].at[:, :, slots].set(vq)
+                new["k_scale"] = cache["k_scale"].at[:, :, slots].set(ks)
+                new["v_scale"] = cache["v_scale"].at[:, :, slots].set(vs)
+            else:
+                new["k"] = cache["k"].at[:, :, slots].set(k[:, :, -take:].astype(cache["k"].dtype))
+                new["v"] = cache["v"].at[:, :, slots].set(v[:, :, -take:].astype(cache["v"].dtype))
+            cache = new
+
+    o = shard(o, "batch", "heads", None, None)
+    y = jnp.einsum("bhsk,hkd->bsd", o, p["wo"].astype(o.dtype))
+    return shard(y, "batch", None, "act_embed"), cache

@@ -1,0 +1,33 @@
+"""Feed-forward blocks: gated (SwiGLU/GeGLU) and plain; NL-DPE activations."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..core.engine import NLDPEConfig, OFF
+from ..parallel.context import shard
+from .module import param
+
+
+def mlp_init(key, d_model: int, d_ff: int, gated: bool = True):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"up": param(k1, (d_model, d_ff), ("embed", "mlp")),
+         "down": param(k3, (d_ff, d_model), ("mlp", "embed"))}
+    if gated:
+        p["gate"] = param(k2, (d_model, d_ff), ("embed", "mlp"))
+    return p
+
+
+def mlp_apply(p, x: jax.Array, act: str = "silu",
+              nldpe: NLDPEConfig = OFF) -> jax.Array:
+    h = x @ p["up"].astype(x.dtype)
+    h = shard(h, "batch", None, "mlp")
+    if "gate" in p:
+        g = x @ p["gate"].astype(x.dtype)
+        g = shard(g, "batch", None, "mlp")
+        # gate activation runs on the ACAM; the gate*h product is a DMMul
+        h = nldpe.elementwise_mul(nldpe.activation(g, act), h)
+    else:
+        h = nldpe.activation(h, act)
+    y = h.astype(x.dtype) @ p["down"].astype(x.dtype)
+    return shard(y, "batch", None, "act_embed")

@@ -1,0 +1,95 @@
+"""Minimal parameter system: pure init/apply functions over dict pytrees.
+
+Every trainable array is created through ``param(key, shape, axes, ...)``.
+Two evaluation modes:
+
+* array mode (default)   — returns an initialized jnp array.
+* spec mode (``with spec_mode(mesh, rules):``) — returns the PartitionSpec
+  the sharding resolver derives for (axes, shape).  Running the *same* init
+  function in spec mode yields a spec pytree exactly mirroring the param
+  pytree; combined with ``jax.eval_shape`` this gives the dry-run fully
+  sharded in_shardings for 27B-parameter models without ever materializing
+  an array.
+
+``stacked(key, n, init_fn)`` builds scan-over-layers parameter stacks
+(vmapped init in array mode; a leading None spec dim in spec mode).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+_STATE = threading.local()
+
+
+def _spec_ctx():
+    return getattr(_STATE, "spec_ctx", None)
+
+
+@contextlib.contextmanager
+def spec_mode(mesh, rules):
+    prev = _spec_ctx()
+    _STATE.spec_ctx = (mesh, rules)
+    try:
+        yield
+    finally:
+        _STATE.spec_ctx = prev
+
+
+@contextlib.contextmanager
+def param_dtype(dtype):
+    prev = getattr(_STATE, "dtype", jnp.float32)
+    _STATE.dtype = dtype
+    try:
+        yield
+    finally:
+        _STATE.dtype = prev
+
+
+def current_dtype():
+    return getattr(_STATE, "dtype", jnp.float32)
+
+
+def param(key, shape: tuple, axes: tuple, init: str = "normal",
+          scale: float | None = None, dtype=None):
+    """Create one parameter (or its PartitionSpec in spec mode).
+
+    axes: logical axis names, same length as shape (None entries replicate).
+    init: "normal" (truncated-normal, fan-in scaled unless ``scale``),
+          "zeros", "ones", "embed" (normal, 1.0).
+    """
+    ctx = _spec_ctx()
+    if ctx is not None:
+        mesh, rules = ctx
+        from ..parallel.sharding import resolve
+        return resolve(rules, axes, shape, mesh)
+    dtype = dtype or current_dtype()
+    if init == "zeros":
+        return jnp.zeros(shape, dtype)
+    if init == "ones":
+        return jnp.ones(shape, dtype)
+    if scale is None:
+        fan_in = shape[0] if len(shape) > 1 else max(shape[-1], 1)
+        scale = 1.0 if init == "embed" else fan_in ** -0.5
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def stacked(key, n: int, init_fn: Callable):
+    """Stack n copies of init_fn's pytree along a new leading axis."""
+    if _spec_ctx() is not None:
+        inner = init_fn(key)
+        return jax.tree.map(lambda s: P(None, *s), inner,
+                            is_leaf=lambda x: isinstance(x, P))
+    keys = jax.random.split(key, n)
+    return jax.vmap(init_fn)(keys)
+
+
+def spec_tree(init_fn: Callable, key, mesh, rules):
+    """Run init_fn in spec mode -> PartitionSpec pytree."""
+    with spec_mode(mesh, rules):
+        return init_fn(key)

@@ -1,0 +1,134 @@
+"""Mixture-of-Experts FFN: group-local dropless-ish routing, gather-based.
+
+Design for SPMD friendliness (see DESIGN.md §3 "EP"):
+
+* Tokens are reshaped into ``groups`` that align with the batch shards
+  (GShard-style group-limited routing), so every sort/gather/bincount is a
+  *batched* op over the group axis — XLA partitions them shard-locally with
+  zero routing collectives.
+* Dispatch AND combine are pure gathers (no scatter): for buffer slot
+  (e, c) we look up "the c-th token routed to expert e" via the sorted
+  assignment order; the combine inverts the sort.  Over-capacity
+  assignments drop (capacity factor configurable; C >= A would make it
+  fully dropless).
+* Expert weights are sharded on the per-expert FFN dim ("expert-TP"), so
+  the expert einsums partition exactly like a dense TP FFN and the only
+  collective is the usual down-projection reduce.  (Expert-dim EP via
+  shard_map is the §Perf alternative.)
+
+HLO compute = 3 einsums of E*C*d*f ~= tokens * topk * cf * dense-FFN-cost,
+i.e. the *active-parameter* FLOPs the paper's 6*N_active*D accounting
+expects, not the E/topk-times-blowup of a dense-gated MoE.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from ..core.engine import NLDPEConfig, OFF
+from ..parallel.context import shard
+from .module import param
+
+
+@dataclasses.dataclass(frozen=True)
+class MoESpec:
+    n_experts: int
+    top_k: int
+    d_expert_ff: int
+    capacity_factor: float = 1.25
+    min_capacity: int = 8
+    router_norm_topk: bool = True     # qwen3: renormalize top-k gates
+
+
+def moe_init(key, d_model: int, s: MoESpec):
+    kr, k1, k2, k3 = jax.random.split(key, 4)
+    return {
+        "router": param(kr, (d_model, s.n_experts), ("embed", "experts"),
+                        scale=0.02),
+        "gate": param(k1, (s.n_experts, d_model, s.d_expert_ff),
+                      ("experts", "embed", "mlp")),
+        "up": param(k2, (s.n_experts, d_model, s.d_expert_ff),
+                    ("experts", "embed", "mlp")),
+        "down": param(k3, (s.n_experts, s.d_expert_ff, d_model),
+                      ("experts", "mlp", "embed")),
+    }
+
+
+def _capacity(tokens_per_group: int, s: MoESpec) -> int:
+    if s.capacity_factor <= 0:       # fully dropless (cap = all assignments)
+        return tokens_per_group * s.top_k
+    c = math.ceil(tokens_per_group * s.top_k / s.n_experts * s.capacity_factor)
+    return max(min(c, tokens_per_group * s.top_k), s.min_capacity)
+
+
+def moe_apply(p, x: jax.Array, s: MoESpec, act: str = "silu",
+              groups: int = 1, nldpe: NLDPEConfig = OFF) -> jax.Array:
+    """x: (B, S, d) -> (B, S, d)."""
+    b, seq, d = x.shape
+    t = b * seq
+    g = groups if t % groups == 0 else 1
+    tg = t // g
+    a = tg * s.top_k                     # assignments per group
+    cap = _capacity(tg, s)
+    xt = x.reshape(g, tg, d)
+    xt = shard(xt, "expert_group", None, None)
+
+    # --- routing (router softmax runs on the ACAM softmax when enabled) ----
+    logits = jnp.einsum("gtd,de->gte", xt.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = nldpe.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, s.top_k)      # (g, tg, k)
+    if s.router_norm_topk:
+        gate_vals = gate_vals / jnp.maximum(
+            jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    fe = expert_idx.reshape(g, a)                               # flat experts
+    order = jnp.argsort(fe, axis=-1, stable=True)               # (g, a)
+    fe_sorted = jnp.take_along_axis(fe, order, axis=-1)
+    counts = jax.vmap(lambda f: jnp.bincount(f, length=s.n_experts))(fe_sorted)
+    starts = jnp.cumsum(counts, axis=-1) - counts               # (g, E)
+
+    # rank of each sorted assignment within its expert
+    rank_sorted = jnp.arange(a)[None, :] - jnp.take_along_axis(
+        starts, fe_sorted, axis=-1)
+
+    # --- dispatch: buffer slot (e, c) <- sorted position starts[e] + c -----
+    pos = starts[:, :, None] + jnp.arange(cap)[None, None, :]   # (g, E, C)
+    slot_valid = jnp.arange(cap)[None, None, :] < jnp.minimum(counts, cap)[:, :, None]
+    pos_c = jnp.clip(pos, 0, a - 1).reshape(g, s.n_experts * cap)
+    tok_sorted = order // s.top_k                               # token of sorted slot
+    tok_for_slot = jnp.take_along_axis(tok_sorted, pos_c, axis=-1)
+    buf = jnp.take_along_axis(xt, tok_for_slot[..., None], axis=1)
+    buf = buf.reshape(g, s.n_experts, cap, d) * slot_valid[..., None].astype(x.dtype)
+    buf = shard(buf, "expert_group", None, None, None)
+
+    # --- expert FFN (batched einsum; f dim TP-sharded) ----------------------
+    hg = jnp.einsum("gecd,edf->gecf", buf, p["gate"].astype(x.dtype))
+    hu = jnp.einsum("gecd,edf->gecf", buf, p["up"].astype(x.dtype))
+    h = nldpe.elementwise_mul(nldpe.activation(hg, act), hu).astype(x.dtype)
+    y = jnp.einsum("gecf,efd->gecd", h, p["down"].astype(x.dtype))
+    y = shard(y, "expert_group", None, None, None)
+
+    # --- combine: invert the sort, gather each assignment's slot -----------
+    inv = jnp.argsort(order, axis=-1)                           # (g, a)
+    rank = jnp.take_along_axis(rank_sorted, inv, axis=-1)
+    kept = rank < cap
+    slot_of_assign = fe * cap + jnp.clip(rank, 0, cap - 1)      # (g, a)
+    vals = jnp.take_along_axis(
+        y.reshape(g, s.n_experts * cap, d), slot_of_assign[..., None], axis=1)
+    vals = vals * (kept[..., None] & True).astype(x.dtype)
+    vals = vals.reshape(g, tg, s.top_k, d) * gate_vals[..., None].astype(x.dtype)
+    out = jnp.sum(vals, axis=2).reshape(b, seq, d)
+    return shard(out, "batch", None, "act_embed")
+
+
+def load_balance_loss(logits: jax.Array, expert_idx: jax.Array,
+                      n_experts: int) -> jax.Array:
+    """Switch-style auxiliary loss (fraction * prob per expert)."""
+    probs = jax.nn.softmax(logits, axis=-1)
+    frac = jnp.mean(jax.nn.one_hot(expert_idx[..., 0], n_experts), axis=tuple(range(expert_idx.ndim - 1)))
+    imp = jnp.mean(probs, axis=tuple(range(probs.ndim - 1)))
+    return n_experts * jnp.sum(frac * imp)

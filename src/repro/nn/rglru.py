@@ -1,0 +1,131 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Recurrence (per channel):
+    r_t = sigmoid(W_a x_t + b_a)          recurrence gate
+    i_t = sigmoid(W_x x_t + b_x)          input gate
+    a_t = exp(-c * softplus(Lambda) * r_t)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Linear recurrence -> associative scan for train/prefill (TPU-parallel
+evaluation of what the analog engine would run sequentially; numerics
+identical), single fused step for decode.  The sigmoid gates and the
+data-dependent products are exactly the paper's ACAM sigmoid + log-domain
+element-wise DMMul (engine dispatch).
+
+Block layout (Griffin recurrent block): two input projections (gate branch
+with GeLU, recurrent branch -> temporal conv(4) -> RG-LRU), merged
+multiplicatively, projected out.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..core.engine import NLDPEConfig, OFF
+from ..parallel.context import shard
+from .module import param
+
+_C = 8.0  # Griffin's fixed decay temperature
+
+
+def rglru_init(key, d: int):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_a": param(k1, (d, d), ("embed", "mlp"), scale=d ** -0.5),
+        "b_a": param(k1, (d,), ("mlp",), init="zeros"),
+        "w_x": param(k2, (d, d), ("embed", "mlp"), scale=d ** -0.5),
+        "b_x": param(k2, (d,), ("mlp",), init="zeros"),
+        # Lambda init so a^c spans ~(0.9, 0.999) as in the paper
+        "lam": param(k3, (d,), ("mlp",), init="normal", scale=0.5),
+    }
+
+
+def _gates(p, x, nldpe: NLDPEConfig):
+    r = nldpe.activation(x @ p["w_a"].astype(x.dtype) + p["b_a"].astype(x.dtype),
+                         "sigmoid")
+    i = nldpe.activation(x @ p["w_x"].astype(x.dtype) + p["b_x"].astype(x.dtype),
+                         "sigmoid")
+    log_a = -_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r.astype(jnp.float32)
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.clip(1.0 - jnp.exp(2.0 * log_a), 1e-9, None))
+    return a, beta, i
+
+
+def rglru_scan(p, x: jax.Array, h0: jax.Array | None = None,
+               nldpe: NLDPEConfig = OFF):
+    """x: (B, S, d) -> (y, h_last).  Associative scan over the sequence."""
+    a, beta, i = _gates(p, x, nldpe)
+    u = beta * nldpe.elementwise_mul(i, x).astype(jnp.float32)
+    if h0 is not None:
+        # fold the carried state in as a virtual step 0
+        a = jnp.concatenate([jnp.ones_like(a[:, :1]), a], axis=1)
+        u = jnp.concatenate([h0[:, None].astype(jnp.float32), u], axis=1)
+
+    def combine(left, right):
+        al, ul = left
+        ar, ur = right
+        return al * ar, ur + ar * ul
+
+    a_s, h = jax.lax.associative_scan(combine, (a, u), axis=1)
+    if h0 is not None:
+        h = h[:, 1:]
+    return h.astype(x.dtype), h[:, -1]
+
+
+def rglru_step(p, x_t: jax.Array, h: jax.Array, nldpe: NLDPEConfig = OFF):
+    """x_t: (B, 1, d), h: (B, d) -> (y_t, h_new)."""
+    a, beta, i = _gates(p, x_t, nldpe)
+    u = beta * nldpe.elementwise_mul(i, x_t).astype(jnp.float32)
+    h_new = a[:, 0] * h.astype(jnp.float32) + u[:, 0]
+    return h_new[:, None].astype(x_t.dtype), h_new
+
+
+# --- full Griffin recurrent block -------------------------------------------
+
+def recurrent_block_init(key, d_model: int, d_rnn: int, conv_width: int = 4):
+    kg, ki, kc, kr, ko = jax.random.split(key, 5)
+    return {
+        "in_gate": param(kg, (d_model, d_rnn), ("embed", "mlp")),
+        "in_x": param(ki, (d_model, d_rnn), ("embed", "mlp")),
+        "conv": param(kc, (conv_width, d_rnn), (None, "mlp"), scale=0.1),
+        "rglru": rglru_init(kr, d_rnn),
+        "out": param(ko, (d_rnn, d_model), ("mlp", "embed")),
+    }
+
+
+def _causal_conv(w, x, state=None):
+    """Depthwise causal conv, width W.  x: (B,S,d); state: (B,W-1,d)|None."""
+    width = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i].astype(x.dtype)
+              for i in range(width))
+    return out, xp[:, -(width - 1):]
+
+
+def recurrent_block_apply(p, x: jax.Array, state=None, mode: str = "train",
+                          nldpe: NLDPEConfig = OFF):
+    """state: {"h": (B, d_rnn), "conv": (B, W-1, d_rnn)} | None."""
+    gate = nldpe.activation(x @ p["in_gate"].astype(x.dtype), "gelu")
+    u = x @ p["in_x"].astype(x.dtype)
+    u = shard(u, "batch", None, "mlp")
+    conv_state = None if state is None else state["conv"]
+    u, conv_state = _causal_conv(p["conv"], u, conv_state)
+    if mode == "decode":
+        y, h = rglru_step(p["rglru"], u, state["h"], nldpe)
+    else:
+        h0 = None if state is None else state["h"]
+        y, h = rglru_scan(p["rglru"], u, h0, nldpe)
+    y = nldpe.elementwise_mul(gate, y).astype(x.dtype)
+    out = y @ p["out"].astype(x.dtype)
+    new_state = {"h": h, "conv": conv_state}
+    return shard(out, "batch", None, "act_embed"), new_state
+
+
+def recurrent_state_init(batch: int, d_rnn: int, conv_width: int = 4,
+                         dtype=jnp.float32):
+    return {"h": jnp.zeros((batch, d_rnn), dtype),
+            "conv": jnp.zeros((batch, conv_width - 1, d_rnn), dtype)}

@@ -1,0 +1,198 @@
+"""RWKV-6 "Finch" block (arXiv:2404.05892): attention-free time-mix with
+data-dependent decay + channel-mix.
+
+Time-mix recurrence per head (head size N = 64), state S in R^{N x N}:
+
+    S_t = diag(w_t) S_{t-1} + k_t^T (v_t)          w_t = exp(-exp(ww_t))
+    o_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+
+where r, k, v, gate g and the decay ww are projections of token-shifted
+inputs (lerp between x_t and x_{t-1}; Finch makes the decay data-dependent
+through a small LoRA).  This is the best structural fit for NL-DPE: the
+exp(-exp(.)) decay and all r*S products are exactly the paper's ACAM
+exp/log primitives and element-wise DMMuls (DESIGN.md §4).
+
+Two evaluation paths:
+* ``chunked`` (train/prefill): flash-linear-attention style — intra-chunk
+  attention-like term + inter-chunk state passing; O(S/C) sequential steps,
+  MXU-friendly (B, H, C, N) matmuls.
+* ``step`` (decode): the recurrence above, one token.
+
+Simplifications vs the release code (noted in DESIGN.md): static token-shift
+mix ratios (no dynamic-mix LoRA), single decay LoRA; both orthogonal to the
+accelerator-simulation purpose of this framework.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..core.engine import NLDPEConfig, OFF
+from ..parallel.context import shard
+from .module import param
+
+HEAD_SIZE = 64
+
+
+def timemix_init(key, d: int, lora_rank: int = 64):
+    ks = jax.random.split(key, 8)
+    h = d // HEAD_SIZE
+    return {
+        "mu": param(ks[0], (5, d), (None, "act_embed"), init="normal", scale=0.1),
+        "w_r": param(ks[1], (d, d), ("embed", "heads")),
+        "w_k": param(ks[2], (d, d), ("embed", "heads")),
+        "w_v": param(ks[3], (d, d), ("embed", "heads")),
+        "w_g": param(ks[4], (d, d), ("embed", "heads")),
+        "w_o": param(ks[5], (d, d), ("heads", "embed")),
+        # data-dependent decay LoRA: ww = base + (tanh(x A) B)
+        "decay_base": param(ks[6], (d,), ("heads",), init="zeros"),
+        "decay_A": param(ks[6], (d, lora_rank), ("embed", None), scale=0.01),
+        "decay_B": param(ks[7], (lora_rank, d), (None, "heads"), scale=0.01),
+        "bonus_u": param(ks[7], (h, HEAD_SIZE), ("heads", None), init="normal",
+                         scale=0.1),
+    }
+
+
+def _token_shift(x, x_prev_last=None):
+    """x_{t-1} with a carried boundary token (B, d) for chunked/stateful calls."""
+    first = jnp.zeros_like(x[:, :1]) if x_prev_last is None else x_prev_last[:, None]
+    return jnp.concatenate([first, x[:, :-1]], axis=1)
+
+
+def _projections(p, x, x_shift, nldpe: NLDPEConfig):
+    def mix(i):
+        mu = p["mu"][i].astype(x.dtype)
+        return x + nldpe.elementwise_mul(mu * jnp.ones_like(x), (x_shift - x)).astype(x.dtype)
+
+    xr, xk, xv, xw, xg = (mix(i) for i in range(5))
+    r = xr @ p["w_r"].astype(x.dtype)
+    k = xk @ p["w_k"].astype(x.dtype)
+    v = xv @ p["w_v"].astype(x.dtype)
+    g = nldpe.activation(xg @ p["w_g"].astype(x.dtype), "silu")
+    ww = (p["decay_base"].astype(jnp.float32)
+          + jnp.tanh(xw.astype(jnp.float32) @ p["decay_A"].astype(jnp.float32))
+          @ p["decay_B"].astype(jnp.float32))
+    # Finch decay: w = exp(-exp(ww)) in (0, 1) — ACAM exp twice when enabled
+    if nldpe.enabled and nldpe.acam_activations:
+        w = nldpe.activation(-nldpe.activation(ww, "exp"), "exp")
+    else:
+        w = jnp.exp(-jnp.exp(ww))
+    return r, k, v, g, w
+
+
+def _heads(x, b, s, d):
+    return x.reshape(b, s, d // HEAD_SIZE, HEAD_SIZE).transpose(0, 2, 1, 3)
+
+
+def timemix_apply(p, x: jax.Array, state=None, mode: str = "train",
+                  chunk: int = 128, nldpe: NLDPEConfig = OFF):
+    """x: (B, S, d); state: {"S": (B,H,N,N), "x_last": (B,d)} | None."""
+    b, s, d = x.shape
+    h = d // HEAD_SIZE
+    x_last = None if state is None else state["x_last"]
+    xs = _token_shift(x, x_last)
+    r, k, v, g, w = _projections(p, x, xs, nldpe)
+    rh, kh, vh = _heads(r, b, s, d), _heads(k, b, s, d), _heads(v, b, s, d)
+    wh = _heads(w.astype(jnp.float32), b, s, d)
+    u = p["bonus_u"].astype(jnp.float32)
+    s0 = jnp.zeros((b, h, HEAD_SIZE, HEAD_SIZE), jnp.float32) if state is None \
+        else state["S"].astype(jnp.float32)
+
+    if mode == "decode":
+        assert s == 1
+        rt, kt, vt, wt = (t[:, :, 0].astype(jnp.float32) for t in (rh, kh, vh, wh))
+        att = s0 + u[None, :, :, None] * (kt[..., None] * vt[..., None, :])
+        o = jnp.einsum("bhk,bhkn->bhn", rt, att)
+        s_new = wt[..., None] * s0 + kt[..., None] * vt[..., None, :]
+        out = o[:, :, None]                                  # (B,H,1,N)
+    else:
+        out, s_new = _chunked_wkv(rh, kh, vh, wh, u, s0, chunk)
+
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, d).astype(x.dtype)
+    out = nldpe.elementwise_mul(g, out).astype(x.dtype)
+    y = out @ p["w_o"].astype(x.dtype)
+    new_state = {"S": s_new, "x_last": x[:, -1]}
+    return shard(y, "batch", None, "act_embed"), new_state
+
+
+def _chunked_wkv(r, k, v, w, u, s0, chunk):
+    """Chunk-parallel WKV6: r,k,v,w (B,H,S,N) f32-ish, s0 (B,H,N,N).
+
+    Within a chunk of length C (all in f32):
+      decay products  D_t = prod_{i<=t} w_i   (cumprod, exclusive)
+      inter-chunk     o_inter_t = (r_t * D_t) @ S
+      intra-chunk     o_intra_t = sum_{j<t} [r_t . (D_t/D_j w_j^-1...)] —
+                      computed stably via log-space cumulative decays
+      bonus           u-weighted same-token term
+      state update    S' = diag(D_C) S + sum_j (D_C/D_j/w_j ...) k_j^T v_j
+    """
+    b, h, s, n = r.shape
+    c = min(chunk, s)
+    while s % c:
+        c //= 2
+    nc = s // c
+    rf = r.astype(jnp.float32).reshape(b, h, nc, c, n)
+    kf = k.astype(jnp.float32).reshape(b, h, nc, c, n)
+    vf = v.astype(jnp.float32).reshape(b, h, nc, c, n)
+    lw = jnp.log(jnp.clip(w.astype(jnp.float32), 1e-12, 1.0)).reshape(b, h, nc, c, n)
+
+    def chunk_step(S, inputs):
+        rc, kc, vc, lwc = inputs                       # (b,h,c,n)
+        cum = jnp.cumsum(lwc, axis=2)                  # inclusive decay logs
+        # center on the mid-chunk decay so each exp leg spans only half the
+        # chunk's decay range (f32-safe for ~140 nats of total decay)
+        mid = cum[:, :, c // 2, :][:, :, None, :]
+        d_excl = jnp.exp(cum - lwc)                    # D_{t-1} (exclusive)
+        # inter-chunk: r_t decayed by all w_{<=t-1}... uses exclusive decay
+        o_inter = jnp.einsum("bhcn,bhnm->bhcm", rc * d_excl, S)
+        # intra-chunk: score_{t,j} = sum_n r_tn k_jn * exp(cum_{t-1} - cum_j)
+        q_dec = rc * jnp.exp(cum - lwc - mid)
+        k_dec = kc * jnp.exp(mid - cum)
+        scores = jnp.einsum("bhtn,bhjn->bhtj", q_dec, k_dec)
+        mask = jnp.tril(jnp.ones((c, c), bool), k=-1)
+        scores = jnp.where(mask, scores, 0.0)
+        # bonus: same-token u term
+        diag = jnp.einsum("bhtn,hn,bhtn->bht", rc, u, kc)
+        o_intra = jnp.einsum("bhtj,bhjm->bhtm", scores, vc) \
+            + diag[..., None] * vc
+        # state update (same centering on the tail decays)
+        last = cum[:, :, -1, :][:, :, None, :]
+        d_tail = jnp.exp(last - mid) * jnp.exp(mid - cum)  # prod_{i>j} w_i
+        S_new = jnp.exp(cum[:, :, -1, :])[..., None] * S \
+            + jnp.einsum("bhjn,bhjm->bhnm", kc * d_tail, vc)
+        return S_new, o_inter + o_intra
+
+    S_f, outs = jax.lax.scan(
+        chunk_step, s0,
+        (rf.transpose(2, 0, 1, 3, 4), kf.transpose(2, 0, 1, 3, 4),
+         vf.transpose(2, 0, 1, 3, 4), lw.transpose(2, 0, 1, 3, 4)))
+    out = outs.transpose(1, 2, 0, 3, 4).reshape(b, h, s, n)
+    return out, S_f
+
+
+def channelmix_init(key, d: int, d_ff: int):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "mu": param(k1, (2, d), (None, "act_embed"), init="normal", scale=0.1),
+        "w_k": param(k1, (d, d_ff), ("embed", "mlp")),
+        "w_v": param(k2, (d_ff, d), ("mlp", "embed")),
+        "w_r": param(k3, (d, d), ("embed", "mlp")),
+    }
+
+
+def channelmix_apply(p, x: jax.Array, x_last=None, nldpe: NLDPEConfig = OFF):
+    xs = _token_shift(x, x_last)
+    mu_k = p["mu"][0].astype(x.dtype)
+    mu_r = p["mu"][1].astype(x.dtype)
+    xk = x + mu_k * (xs - x)
+    xr = x + mu_r * (xs - x)
+    hk = nldpe.activation(xk @ p["w_k"].astype(x.dtype), "relu")
+    hk = nldpe.elementwise_mul(hk, hk).astype(x.dtype)        # relu^2
+    v = hk @ p["w_v"].astype(x.dtype)
+    r = nldpe.activation(xr @ p["w_r"].astype(x.dtype), "sigmoid")
+    return nldpe.elementwise_mul(r, v).astype(x.dtype), x[:, -1]
+
+
+def timemix_state_init(batch: int, d: int, dtype=jnp.float32):
+    return {"S": jnp.zeros((batch, d // HEAD_SIZE, HEAD_SIZE, HEAD_SIZE), dtype),
+            "x_last": jnp.zeros((batch, d), dtype)}

@@ -1,0 +1,2 @@
+from . import adamw, naf_loss, schedules
+from .adamw import AdamWConfig

@@ -1,0 +1,31 @@
+"""Eq 8 — the A-SL-aware NAF loss for crossbar fine-tuning (paper §IV-B).
+
+    Loss = MSE(y, y_hat) + lambda1 * ||W||_inf + lambda2 * ||eps||_inf
+
+||W||_inf pushes weights toward smaller target conductances (lower noise per
+Fig 7a/b); ||eps||_inf bounds the A-SL residual the second cell must absorb.
+``eps`` is produced by the noise-injection pass (core.naf / core.slicing).
+The max is smoothed with logsumexp for useful gradients when requested.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def linf(tree, smooth: float = 0.0) -> jax.Array:
+    leaves = [x.astype(jnp.float32).reshape(-1) for x in jax.tree.leaves(tree)]
+    flat = jnp.concatenate(leaves) if leaves else jnp.zeros((1,))
+    a = jnp.abs(flat)
+    if smooth > 0:
+        return smooth * jax.scipy.special.logsumexp(a / smooth)
+    return jnp.max(a)
+
+
+def eq8_loss(task_loss: jax.Array, params, eps_tree=None,
+             lambda1: float = 1e-4, lambda2: float = 1e-4,
+             smooth: float = 0.0) -> tuple[jax.Array, dict]:
+    w_inf = linf(params, smooth)
+    e_inf = linf(eps_tree, smooth) if eps_tree is not None else jnp.float32(0.0)
+    total = task_loss + lambda1 * w_inf + lambda2 * e_inf
+    return total, {"w_inf": w_inf, "eps_inf": e_inf}

@@ -1,0 +1,33 @@
+"""LR schedules: linear warmup + cosine, and MiniCPM's WSD
+(Warmup-Stable-Decay, arXiv:2404.06395 — the schedule its config calls for).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(peak_lr: float, warmup: int, total: int, floor: float = 0.1):
+    def f(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup, warm, cos)
+    return f
+
+
+def wsd(peak_lr: float, warmup: int, stable: int, decay: int,
+        floor_frac: float = 0.01):
+    """Warmup -> flat plateau -> exponential-ish decay to floor."""
+    def f(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / max(warmup, 1)
+        in_decay = jnp.clip((step - warmup - stable) / max(decay, 1), 0.0, 1.0)
+        dec = peak_lr * jnp.exp(jnp.log(floor_frac) * in_decay)
+        return jnp.where(step < warmup, warm,
+                         jnp.where(step < warmup + stable, peak_lr, dec))
+    return f
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)

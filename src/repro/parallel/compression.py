@@ -1,0 +1,54 @@
+"""Gradient compression for cross-pod reduces: int8 + error feedback.
+
+The multi-pod mesh pays one DCI-crossing gradient all-reduce per step; int8
+compression cuts that wire traffic 4x (vs f32 master grads).  We use
+per-tensor symmetric int8 with an error-feedback accumulator (Seide et al. /
+EF-SGD): the quantization residual is carried into the next step, which
+keeps SGD/Adam convergence unbiased in the long run.
+
+``compress_tree``/``decompress_tree`` model the wire format exactly; the
+training integration quantizes the *pod-mean* gradient contribution.  The
+savings are reflected in the roofline collective term by scaling the pod
+all-reduce bytes (bytes_scale()), since XLA itself has no int8 all-reduce on
+the CPU backend.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def compress(g: jax.Array):
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def decompress(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_tree(grads):
+    return jax.tree.map(compress, grads)
+
+
+def ef_compress_step(grads, error_state):
+    """One error-feedback step: returns (wire_tree, new_error_state).
+
+    wire_tree holds (int8, scale) pairs — what actually crosses the DCI;
+    the caller reduces the decompressed values.
+    """
+    if error_state is None:
+        error_state = jax.tree.map(lambda g: jnp.zeros_like(g, jnp.float32), grads)
+    corrected = jax.tree.map(lambda g, e: g.astype(jnp.float32) + e,
+                             grads, error_state)
+    wire = jax.tree.map(compress, corrected)
+    recon = jax.tree.map(lambda qs: decompress(*qs), wire,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_error = jax.tree.map(lambda c, r: c - r, corrected, recon)
+    return wire, recon, new_error
+
+
+def bytes_scale(dtype=jnp.float32) -> float:
+    """Wire-byte ratio of int8 compression vs the uncompressed dtype."""
+    return 1.0 / jnp.dtype(dtype).itemsize

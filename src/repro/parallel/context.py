@@ -1,0 +1,40 @@
+"""Ambient sharding context: model code calls shard(x, *logical_axes).
+
+The launcher (train/serve/dryrun) installs (mesh, rules) for the duration of
+tracing; without a context every constraint is a no-op, so unit tests and
+single-device smoke runs use the identical model code.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import NamedSharding
+
+_STATE = threading.local()
+
+
+@contextlib.contextmanager
+def sharding_ctx(mesh, rules):
+    prev = getattr(_STATE, "ctx", None)
+    _STATE.ctx = (mesh, rules)
+    try:
+        yield
+    finally:
+        _STATE.ctx = prev
+
+
+def current():
+    return getattr(_STATE, "ctx", None)
+
+
+def shard(x: jax.Array, *axes):
+    """with_sharding_constraint by logical axis names (no-op w/o context)."""
+    ctx = current()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    from .sharding import resolve
+    spec = resolve(rules, axes, x.shape, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,73 @@
+"""Context-parallel decode attention (flash-decoding over a sharded cache).
+
+For `long_500k` (batch=1) and MQA/GQA archs whose kv-head count doesn't
+divide the model axis, the KV cache is *sequence*-sharded.  The pjit path
+leaves the softmax-over-sharded-axis to XLA's partitioner; this module is
+the explicit, collective-minimal version (the standard flash-decoding
+scheme):
+
+  per shard:  local scores -> local (max m_i, sum l_i, weighted value v_i)
+  combine:    m = pmax(m_i);  l = psum(l_i * exp(m_i - m));
+              out = psum(v_i * exp(m_i - m)) / l
+
+One pmax + two psums of (B, H, D)-sized partials — independent of the
+sequence length, vs the partitioner's all-gather of score rows.  Verified
+against the dense reference on 8 host devices (tests/test_cp_decode.py).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+NEG_INF = float(jnp.finfo(jnp.float32).min)
+
+
+def cp_decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                        kv_pos: jax.Array, pos: jax.Array, mesh,
+                        seq_axes=("model",), window: int | None = None):
+    """q: (B, Hq, 1, D) replicated; k/v_cache: (B, Hkv, L, D) sharded on L
+    over ``seq_axes``; kv_pos: (L,) positions (same sharding); pos: scalar.
+    Returns (B, Hq, 1, D) replicated.
+    """
+    axes = tuple(seq_axes)
+    name = axes if len(axes) > 1 else axes[0]
+
+    def body(q_l, k_l, v_l, p_l, pos_s):
+        b, hq, _, d = q_l.shape
+        hkv = k_l.shape[1]
+        g = hq // hkv
+        qg = q_l.reshape(b, hkv, g, d).astype(jnp.float32)
+        kf = k_l.astype(jnp.float32)
+        vf = v_l.astype(jnp.float32)
+        s = jnp.einsum("bkgd,bkld->bkgl", qg, kf) / math.sqrt(d)
+        valid = (p_l >= 0) & (p_l <= pos_s)
+        if window is not None:
+            valid = valid & (pos_s - p_l < window)
+        s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+
+        m_i = jnp.max(s, axis=-1)                          # (b, hkv, g)
+        m = m_i
+        for ax in axes:
+            m = jax.lax.pmax(m, ax)
+        m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(valid[None, None, None, :], p, 0.0)
+        l_i = jnp.sum(p, axis=-1)                          # (b, hkv, g)
+        v_i = jnp.einsum("bkgl,bkld->bkgd", p, vf)         # (b, hkv, g, d)
+        l = l_i
+        v = v_i
+        for ax in axes:
+            l = jax.lax.psum(l, ax)
+            v = jax.lax.psum(v, ax)
+        out = v / jnp.maximum(l, 1e-20)[..., None]
+        return out.reshape(b, hq, 1, d).astype(q_l.dtype)
+
+    seq_spec = P(None, None, name, None)
+    fn = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(), seq_spec, seq_spec, P(name), P()),
+        out_specs=P(), check_vma=False)
+    return fn(q, k_cache, v_cache, kv_pos, pos)

@@ -1,0 +1,5 @@
+from .energy import (Estimate, GpuHw, IsaacHw, NLDPEHw, OpCount, gpu_estimate,
+                     isaac_estimate, nldpe_estimate)
+from .roofline import (HBM_BW, ICI_BW, PEAK_FLOPS_BF16, Roofline,
+                       analytic_step_flops)
+from .workloads import WORKLOADS

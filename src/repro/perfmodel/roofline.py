@@ -1,0 +1,123 @@
+"""TPU v5e roofline terms from a compiled dry-run artifact (brief §Roofline).
+
+    compute term    = HLO_FLOPs   / (chips * 197 TFLOP/s bf16)
+    memory term     = HLO_bytes   / (chips * 819 GB/s HBM)
+    collective term = coll_bytes  / (chips * 50 GB/s link)
+
+``cost_analysis()`` on an SPMD executable reports the *per-device* program,
+so we scale by ``chips`` to get the global numerator (verified empirically in
+tests/test_roofline.py); the division by chips then cancels — i.e. each term
+is simply the per-device time.  MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D
+(MoE) gives the "useful fraction"; HLO inside lax.scan/while bodies is
+counted once by XLA's static analysis, so we also report an analytic
+compute term where scan-hidden FLOPs matter (flagged per cell).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+PEAK_FLOPS_BF16 = 197e12      # per chip
+HBM_BW = 819e9                # bytes/s per chip
+ICI_BW = 50e9                 # bytes/s per link (simplified per-chip figure)
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops_per_device: float
+    hlo_bytes_per_device: float
+    collective_bytes_per_device: float
+    model_flops_global: float          # 6*N*D (or serve-step equivalent)
+    analytic_flops_global: float       # analytic per-step FLOPs incl. scans
+
+    @property
+    def compute_s(self) -> float:
+        return self.hlo_flops_per_device / PEAK_FLOPS_BF16
+
+    @property
+    def analytic_compute_s(self) -> float:
+        return self.analytic_flops_global / (self.chips * PEAK_FLOPS_BF16)
+
+    @property
+    def memory_s(self) -> float:
+        return self.hlo_bytes_per_device / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes_per_device / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": max(self.compute_s, self.analytic_compute_s),
+                 "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_fraction(self) -> float:
+        hlo_global = max(self.hlo_flops_per_device * self.chips, 1.0)
+        return self.model_flops_global / hlo_global
+
+    @property
+    def step_time_s(self) -> float:
+        """Perfectly-overlapped lower bound = max of the three terms."""
+        return max(self.compute_s, self.analytic_compute_s,
+                   self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful FLOPs per second vs peak, at the bound step time (MFU-like)."""
+        t = self.step_time_s
+        if t <= 0:
+            return 0.0
+        return self.model_flops_global / (t * self.chips * PEAK_FLOPS_BF16)
+
+    def row(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "compute_s": self.compute_s,
+            "analytic_compute_s": self.analytic_compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "model_flops": self.model_flops_global,
+            "useful_fraction": self.useful_fraction,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def analytic_step_flops(cfg, shape) -> tuple[float, float]:
+    """(model_flops, analytic_flops) for one step of the given shape.
+
+    model_flops: the 6*N*D / 2*N*D-per-token accounting the brief asks for.
+    analytic_flops: adds attention-score FLOPs and the train backward factor,
+    counting what an ideal implementation must execute (scan-aware).
+    """
+    n_active = cfg.active_param_count()
+    b, s = shape.global_batch, shape.seq_len
+    d_head = cfg.resolved_head_dim
+    pat = cfg.layer_pattern
+    # attention score+AV flops per token-pair: 2 * 2 * d_head * n_heads
+    def attn_flops(tokens_q, tokens_kv_avg):
+        n_attn_layers = sum(1 for i in range(cfg.n_layers)
+                            if pat[i % len(pat)] in ("attn", "global", "moe"))
+        n_local = sum(1 for i in range(cfg.n_layers)
+                      if pat[i % len(pat)] == "local")
+        full = 4 * d_head * cfg.n_heads * tokens_q * tokens_kv_avg * n_attn_layers
+        loc = 4 * d_head * cfg.n_heads * tokens_q * min(
+            tokens_kv_avg, (cfg.window or tokens_kv_avg)) * n_local
+        return full + loc
+
+    if shape.kind == "train":
+        tokens = b * s
+        fwd = 2 * n_active * tokens + b * attn_flops(s, s / 2)
+        return 6 * n_active * tokens, 3 * fwd
+    if shape.kind == "prefill":
+        tokens = b * s
+        return 2 * n_active * tokens, 2 * n_active * tokens + b * attn_flops(s, s / 2)
+    # decode: one token per sequence against a seq_len cache
+    tokens = b
+    return 2 * n_active * tokens, 2 * n_active * tokens + b * attn_flops(1, s)

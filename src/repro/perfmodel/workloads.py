@@ -1,0 +1,77 @@
+"""Workload op-lists for the perfmodel (the paper's evaluated networks)."""
+from __future__ import annotations
+
+from .energy import OpCount
+
+
+def bert(layers: int, d: int, ff: int, seq: int, heads: int,
+         vocab: int = 30522) -> list[OpCount]:
+    ops = []
+    hd = d // heads
+    for _ in range(layers):
+        ops.append(OpCount("vmm", m=seq, k=d, n=3 * d))              # QKV
+        ops.append(OpCount("dmmul", m=seq, k=hd, n=seq))             # QK^T x heads
+        ops.append(OpCount("softmax", elems=heads * seq * seq))
+        ops.append(OpCount("dmmul", m=seq, k=seq, n=hd))             # AV x heads
+        ops.append(OpCount("vmm", m=seq, k=d, n=d))                  # proj
+        ops.append(OpCount("vmm", m=seq, k=d, n=ff))                 # ffn up
+        ops.append(OpCount("activation", elems=seq * ff))            # gelu
+        ops.append(OpCount("vmm", m=seq, k=ff, n=d))                 # ffn down
+    return ops
+
+
+def bert_base(seq: int = 128):
+    return bert(12, 768, 3072, seq, 12)
+
+
+def bert_tiny(seq: int = 128):
+    return bert(2, 128, 512, seq, 2)
+
+
+def resnet34(img: int = 224) -> list[OpCount]:
+    """Conv layers as im2col VMMs (K = Cin*k*k, M = out pixels)."""
+    ops = []
+    stages = [        # (blocks, cin, cout, spatial)
+        (3, 64, 64, 56), (4, 64, 128, 28), (6, 128, 256, 14), (3, 256, 512, 7)]
+    ops.append(OpCount("vmm", m=112 * 112, k=3 * 49, n=64))
+    ops.append(OpCount("activation", elems=112 * 112 * 64))
+    for blocks, cin, cout, sp in stages:
+        for b in range(blocks):
+            cin_b = cin if b == 0 else cout
+            for conv in range(2):
+                ops.append(OpCount("vmm", m=sp * sp, k=(cin_b if conv == 0 else cout) * 9,
+                                   n=cout))
+                ops.append(OpCount("activation", elems=sp * sp * cout))
+    ops.append(OpCount("vmm", m=1, k=512, n=1000))
+    return ops
+
+
+def llama(layers: int, d: int, ff: int, seq: int, heads: int, kv: int,
+          vocab: int = 128256) -> list[OpCount]:
+    ops = []
+    hd = d // heads
+    for _ in range(layers):
+        ops.append(OpCount("vmm", m=seq, k=d, n=(heads + 2 * kv) * hd))
+        ops.append(OpCount("dmmul", m=seq, k=hd, n=seq))
+        ops.append(OpCount("softmax", elems=heads * seq * seq))
+        ops.append(OpCount("dmmul", m=seq, k=seq, n=hd))
+        ops.append(OpCount("vmm", m=seq, k=d, n=d))
+        ops.append(OpCount("vmm", m=seq, k=d, n=2 * ff))   # gate+up
+        ops.append(OpCount("activation", elems=seq * ff))
+        ops.append(OpCount("vmm", m=seq, k=ff, n=d))
+    ops.append(OpCount("vmm", m=seq, k=d, n=vocab))
+    return ops
+
+
+def llama32_1b(seq: int = 128):
+    return llama(16, 2048, 8192, seq, 32, 8)
+
+
+def llama32_3b(seq: int = 128):
+    return llama(28, 3072, 8192, seq, 24, 8)
+
+
+WORKLOADS = {
+    "bert_tiny": bert_tiny, "bert_base": bert_base, "resnet34": resnet34,
+    "llama32_1b": llama32_1b, "llama32_3b": llama32_3b,
+}

@@ -1,0 +1,157 @@
+"""HLO text analysis: collective-bytes accounting for the roofline.
+
+``compiled.cost_analysis()`` gives FLOPs and HBM bytes but not inter-chip
+traffic, so we parse the (optimized) HLO for all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute ops, read each op's result
+shape and replica grouping, and charge ring-algorithm wire bytes per device:
+
+    all-gather        (N-1)/N * out_bytes
+    all-reduce        2 (N-1)/N * bytes
+    reduce-scatter    (N-1)/N * in_bytes   (~ out_bytes * (N-1))
+    all-to-all        (N-1)/N * bytes
+    collective-permute  bytes
+
+Returns totals plus a per-op breakdown (op kind, shape, group size, bytes) —
+the §Perf loop hunts duplicate/oversized collectives in this list.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "f8e4m3": 1, "f8e5m2": 1, "f8e4m3fn": 1,
+    "s8": 1, "u8": 1, "pred": 1, "s4": 1, "u4": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.  %all-reduce.5 = f32[16,1024]{1,0} all-reduce(...), replica_groups=...
+_OP_RE = re.compile(
+    r"=\s*(?:\(([^)]*)\)|(\w+\[[\d,]*\][^ ]*))\s+"
+    r"(all-gather-start|all-gather|all-reduce-start|all-reduce|"
+    r"reduce-scatter|all-to-all|collective-permute-start|collective-permute)\(")
+_SHAPE_RE = re.compile(r"(\w+?)\[([\d,]*)\]")
+_IOTA_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_BRACE_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+@dataclasses.dataclass
+class CollectiveOp:
+    kind: str
+    bytes_result: int
+    group_size: int
+    wire_bytes: float
+    line: str
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _IOTA_GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _BRACE_GROUPS_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip() != ""])
+    return default
+
+
+def parse_collectives(hlo_text: str, n_devices: int) -> list[CollectiveOp]:
+    ops = []
+    seen_done = set()
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(3).replace("-start", "")
+        shape_txt = m.group(1) or m.group(2)
+        nbytes = _shape_bytes(shape_txt)
+        g = _group_size(line, n_devices)
+        if g <= 1:
+            continue
+        frac = (g - 1) / g
+        if kind == "all-reduce":
+            wire = 2 * frac * nbytes
+        elif kind == "all-gather":
+            wire = frac * nbytes              # result is the gathered shape
+        elif kind == "reduce-scatter":
+            wire = frac * nbytes * g          # result is the scattered shard
+        elif kind == "all-to-all":
+            wire = frac * nbytes
+        else:                                  # collective-permute
+            wire = float(nbytes)
+        ops.append(CollectiveOp(kind, nbytes, g, wire, line.strip()[:200]))
+    return ops
+
+
+_COMP_HEAD_RE = re.compile(r"^(%?[\w\.\-]+)\s.*\{\s*$")
+_BODY_RE = re.compile(r"body=%?([\w\.\-]+)")
+
+
+def computation_blocks(hlo_text: str) -> dict:
+    """Map computation name -> its text block (column-0 blocks)."""
+    blocks = {}
+    name, buf = None, []
+    for line in hlo_text.splitlines():
+        m = _COMP_HEAD_RE.match(line)
+        if m and not line.startswith(" "):
+            name, buf = m.group(1).lstrip("%"), [line]
+            continue
+        if name is not None:
+            buf.append(line)
+            if line.startswith("}"):
+                blocks[name] = "\n".join(buf)
+                name = None
+    return blocks
+
+
+def collective_summary(hlo_text: str, n_devices: int,
+                       loop_trip_hint: int = 1) -> dict:
+    """Wire-byte totals.  Collectives inside while-loop bodies execute once
+    per iteration but appear once in the HLO text, so they are scaled by
+    ``loop_trip_hint`` (the scan-over-layers trip count) — without this the
+    collective roofline term undercounts scanned models by ~the layer count
+    (documented as §Perf iteration 0 in EXPERIMENTS.md)."""
+    bodies = set(_BODY_RE.findall(hlo_text))
+    blocks = computation_blocks(hlo_text)
+    by_kind = defaultdict(lambda: {"count": 0, "wire_bytes": 0.0})
+    n_ops = 0
+    loop_bytes = once_bytes = 0.0
+    for comp, text in blocks.items():
+        scale = loop_trip_hint if comp in bodies else 1
+        for op in parse_collectives(text, n_devices):
+            n_ops += 1
+            by_kind[op.kind]["count"] += 1
+            by_kind[op.kind]["wire_bytes"] += op.wire_bytes * scale
+            if scale > 1:
+                loop_bytes += op.wire_bytes * scale
+            else:
+                once_bytes += op.wire_bytes
+    total = sum(v["wire_bytes"] for v in by_kind.values())
+    return {"total_wire_bytes_per_device": total,
+            "by_kind": dict(by_kind),
+            "n_ops": n_ops,
+            "loop_scaled_bytes": loop_bytes,
+            "once_bytes": once_bytes,
+            "loop_trip_hint": loop_trip_hint}
+
+
+def count_op(hlo_text: str, opname: str) -> int:
+    return len(re.findall(rf"\b{re.escape(opname)}\(", hlo_text))

@@ -1,0 +1,132 @@
+"""CNN substrate: conv-as-crossbar (im2col) equivalence, training, NL-DPE
+mode, and the crossbar-NAF stage pattern on the CNN side of the paper."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.engine import NLDPEConfig
+from repro.core.naf import inject_crossbar_noise
+from repro.data.images import ImageDataConfig, make_batch_fn
+from repro.models import cnn
+from repro.nn.module import param_dtype
+from repro.optim import adamw
+
+CFG = cnn.CNNConfig(stage_channels=(8, 16), blocks_per_stage=1, num_classes=4)
+
+
+def _params(key=0):
+    with param_dtype(jnp.float32):
+        return cnn.init_params(jax.random.key(key), CFG)
+
+
+def test_forward_shapes_and_finite():
+    params = _params()
+    x = jax.random.normal(jax.random.key(1), (2, 32, 32, 3))
+    logits = cnn.forward(params, x, CFG)
+    assert logits.shape == (2, CFG.num_classes)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_im2col_conv_matches_lax_conv():
+    """The crossbar mapping (im2col matmul) == lax conv for stride 1/2."""
+    key = jax.random.key(2)
+    p = cnn.conv_init(key, 3, 8)
+    x = jax.random.normal(key, (2, 16, 16, 3))
+    for stride in (1, 2):
+        y_ref = cnn.conv_apply(p, x, stride=stride)
+        cols = cnn._im2col(x, 3, stride)
+        y_mat = (cols.reshape(-1, cols.shape[-1])
+                 @ p["w"].reshape(-1, 8)).reshape(y_ref.shape[:-1] + (8,)) \
+            + p["b"]
+        np.testing.assert_allclose(np.asarray(y_mat), np.asarray(y_ref),
+                                   rtol=2e-4, atol=2e-4)
+
+
+def _train_small_cnn():
+    params = _params()
+    opt = adamw.init(params)
+    data = ImageDataConfig(num_classes=CFG.num_classes, batch=16, noise=0.3)
+    batch_fn = jax.jit(make_batch_fn(data))
+    opt_cfg = adamw.AdamWConfig(lr=3e-3, weight_decay=0.0)
+
+    @jax.jit
+    def step(params, opt, batch):
+        def loss_fn(p):
+            return cnn.cnn_loss(cnn.forward(p, batch["images"], CFG),
+                                batch["labels"])
+        loss, g = jax.value_and_grad(loss_fn)(params)
+        params, opt, _ = adamw.update(opt_cfg, g, opt, params)
+        return params, opt, loss
+
+    losses = []
+    for i in range(60):
+        params, opt, l = step(params, opt, batch_fn(jnp.int32(i)))
+        losses.append(float(l))
+    batch = batch_fn(jnp.int32(999))
+    acc = float(cnn.accuracy(cnn.forward(params, batch["images"], CFG),
+                             batch["labels"]))
+    return params, batch_fn, losses, acc
+
+
+def test_cnn_learns_synthetic_task():
+    _, _, losses, acc = _train_small_cnn()
+    assert losses[-1] < losses[0] * 0.8
+    assert acc > 1.5 / CFG.num_classes      # clearly above chance
+
+
+def test_nldpe_mode_tracks_fp32():
+    params = _params(3)
+    x = jax.random.normal(jax.random.key(4), (2, 32, 32, 3)) * 0.5
+    ref = cnn.forward(params, x, CFG)
+    analog = cnn.forward(params, x, CFG, nldpe=NLDPEConfig(enabled=True))
+    assert bool(jnp.all(jnp.isfinite(analog)))
+    rel = float(jnp.mean((analog - ref) ** 2) / jnp.maximum(jnp.var(ref), 1e-9))
+    assert rel < 0.3
+
+
+def test_crossbar_noise_then_naf_recovers_cnn():
+    """Table III CNN flavor: weight noise degrades accuracy; noise-injected
+    fine-tuning (NAF step 1) recovers most of it."""
+    params, batch_fn, _, _ = _train_small_cnn()
+    from repro.core import noise as noise_mod
+    model = noise_mod.DEFAULT.rescale(3.0)
+
+    def noisy_acc(p, draws=4):
+        accs = []
+        for i in range(draws):
+            pn = inject_crossbar_noise(jax.random.key(50 + i), p, model=model)
+            b = batch_fn(jnp.int32(500 + i))
+            accs.append(float(cnn.accuracy(cnn.forward(pn, b["images"], CFG),
+                                           b["labels"])))
+        return float(np.mean(accs))
+
+    b = batch_fn(jnp.int32(999))
+    clean = float(cnn.accuracy(cnn.forward(params, b["images"], CFG),
+                               b["labels"]))
+    degraded = noisy_acc(params)
+
+    # NAF step 1: fine-tune WITH noise injection
+    opt = adamw.init(params)
+    opt_cfg = adamw.AdamWConfig(lr=1e-3, weight_decay=0.0)
+
+    @jax.jit
+    def naf_step(p, opt, batch, key):
+        def loss_fn(p):
+            pn = inject_crossbar_noise(key, p, model=model)
+            run = jax.tree.map(lambda a, b: a + jax.lax.stop_gradient(b - a),
+                               p, pn)
+            return cnn.cnn_loss(cnn.forward(run, batch["images"], CFG),
+                                batch["labels"])
+        loss, g = jax.value_and_grad(loss_fn)(p)
+        p, opt, _ = adamw.update(opt_cfg, g, opt, p)
+        return p, opt
+
+    for i in range(40):
+        params, opt = naf_step(params, opt, batch_fn(jnp.int32(1000 + i)),
+                               jax.random.key(i))
+    recovered = noisy_acc(params)
+    assert recovered >= degraded - 0.02     # NAF never hurts...
+    # ...and recovers a meaningful fraction when noise actually bit
+    if clean - degraded > 0.05:
+        assert recovered > degraded + 0.3 * (clean - degraded)

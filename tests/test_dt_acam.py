@@ -1,0 +1,96 @@
+"""DT builder + ACAM evaluation: the paper's §III-C claims as tests."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import acam, dt
+from repro.core.functions import FUNCTIONS, TABLE1_FUNCTIONS
+from repro.core.quantization import QuantSpec
+
+
+@pytest.mark.parametrize("name", TABLE1_FUNCTIONS)
+def test_acam_reproduces_quantized_function(name):
+    t = dt.build_table(name, bits=8, encoding="gray")
+    lo, hi = t.in_domain
+    xs = np.linspace(lo + 1e-4, hi - 1e-4, 4001)
+    y_acam = acam.eval_table_np(t, xs)
+    f = FUNCTIONS[name].fn(xs)
+    spec = t.out_spec
+    y_q = spec.dequantize(np.clip(np.round((f - spec.lo) / spec.step), 0,
+                                  spec.levels - 1))
+    # exact except within one dense-grid cell of a boundary
+    frac_exact = np.mean(np.abs(y_acam - y_q) < spec.step / 2)
+    assert frac_exact > 0.999
+    # residual MSE only from samples within half a dense-grid cell of a
+    # breakpoint -> far below one quantization step squared
+    assert dt.table_mse(t, vs="quantized") < 0.01 * spec.step ** 2
+
+
+@pytest.mark.parametrize("name", ["sigmoid", "tanh", "relu", "identity"])
+def test_gray_halves_rows_table1(name):
+    """Table I: Gray total = 128 for 8-bit monotone functions; binary ~2x."""
+    tb = dt.build_table(name, bits=8, encoding="binary")
+    tg = dt.build_table(name, bits=8, encoding="gray")
+    assert tg.total_rows == 128
+    assert tb.total_rows >= 1.9 * tg.total_rows
+    # per-bit halving below the MSB (paper Table I structure)
+    for i in range(7):          # bits 0..6 (LSB..), MSB excluded
+        assert tg.rows_per_bit[i] <= tb.rows_per_bit[i]
+    # MSB costs a single row in both encodings
+    assert tg.rows_per_bit[7] == tb.rows_per_bit[7] == 1
+
+
+def test_gray_bit_pattern_powers_of_two():
+    t = dt.build_table("sigmoid", bits=8, encoding="gray")
+    # MSB->LSB expected 1,1,2,4,8,16,32,64 for a monotone saturating function
+    assert list(reversed(t.rows_per_bit)) == [1, 1, 2, 4, 8, 16, 32, 64]
+
+
+def test_eval_paths_agree():
+    t = dt.build_table("gelu")
+    xs = np.random.default_rng(0).uniform(-8, 8, 512).astype(np.float32)
+    y_np = acam.eval_table_np(t, xs)
+    y_jnp = np.asarray(acam.eval_acam(t, jnp.asarray(xs)))
+    pw = acam.compile_piecewise(t)
+    bp, vals = pw.as_jnp()
+    y_pw = np.asarray(acam.eval_piecewise(bp, vals, jnp.asarray(xs)))
+    np.testing.assert_allclose(y_jnp, y_np, atol=1e-5)
+    np.testing.assert_allclose(y_pw, y_np, atol=1e-5)
+
+
+def test_unit_sizing_covers_all_functions():
+    unit = acam.ACAMUnit.profiled(bits=8)
+    for name in TABLE1_FUNCTIONS:
+        t = dt.build_table(name, bits=8, encoding="gray")
+        assert unit.fits(t)
+        padded = unit.program(t)
+        xs = np.linspace(*t.in_domain, 257)
+        np.testing.assert_allclose(acam.eval_table_np(padded, xs),
+                                   acam.eval_table_np(t, xs), atol=1e-6)
+
+
+def test_acam_activation_model_op():
+    x = jnp.asarray(np.random.default_rng(1).normal(size=(4, 33)).astype(np.float32))
+    y = acam.acam_activation(x, "silu", bits=8)
+    ref = np.asarray(x) * (1 / (1 + np.exp(-np.asarray(x))))
+    t = acam.get_table("silu")
+    assert float(np.max(np.abs(np.asarray(y) - ref))) < 4 * t.out_spec.step
+
+
+@given(st.integers(min_value=4, max_value=9))
+@settings(max_examples=6, deadline=None)
+def test_rows_scale_with_bits(bits):
+    t = dt.build_table("sigmoid", bits=bits, encoding="gray")
+    assert t.total_rows == 2 ** (bits - 1)
+
+
+@given(st.floats(min_value=-7.9, max_value=7.9))
+@settings(max_examples=50, deadline=None)
+def test_acam_matches_quant_pointwise(x):
+    t = acam.get_table("tanh")
+    y = acam.eval_table_np(t, np.asarray([x]))[0]
+    spec = t.out_spec
+    target = spec.dequantize(np.clip(np.round((np.tanh(x) - spec.lo) / spec.step),
+                                     0, spec.levels - 1))
+    assert abs(y - target) < spec.step * 1.5

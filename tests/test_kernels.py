@@ -1,0 +1,90 @@
+"""Per-kernel shape/dtype sweeps: pallas (interpret) vs pure-jnp oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import dt
+from repro.core.logdomain import DEFAULT_CFG
+from repro.kernels.acam_activation.ops import acam_apply
+from repro.kernels.acam_activation.ref import acam_activation_ref
+from repro.kernels.crossbar_vmm.ops import crossbar_matmul
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.nldpe_qmatmul.ops import encode_int8, nldpe_matmul_int8
+from repro.kernels.nldpe_qmatmul.ref import nldpe_qmatmul_ref
+from repro.core.crossbar import program_linear
+from repro.core.slicing import effective_weight
+
+RNG = np.random.default_rng(42)
+
+
+@pytest.mark.parametrize("shape", [(7,), (3, 40), (2, 5, 17), (260,)])
+@pytest.mark.parametrize("fn", ["sigmoid", "gelu", "exp"])
+def test_acam_activation_kernel_sweep(shape, fn):
+    t = dt.build_table(fn)
+    x = jnp.asarray(RNG.uniform(*t.in_domain, size=shape).astype(np.float32))
+    y_k = acam_apply(x, t)
+    y_r = acam_activation_ref(x, jnp.asarray(t.lo), jnp.asarray(t.hi),
+                              t.bits, t.out_spec.lo, t.out_spec.step)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_r), atol=1e-5)
+    assert y_k.shape == shape
+
+
+@pytest.mark.parametrize("m,k,n", [(8, 16, 8), (100, 200, 60), (128, 128, 128),
+                                   (1, 300, 5)])
+def test_qmatmul_kernel_sweep(m, k, n):
+    a = jnp.asarray(RNG.normal(size=(m, k)).astype(np.float32))
+    b = jnp.asarray(RNG.normal(size=(k, n)).astype(np.float32))
+    c_k = nldpe_matmul_int8(a, b)
+    ac, as_ = encode_int8(a, DEFAULT_CFG)
+    bc, bs = encode_int8(b, DEFAULT_CFG)
+    c_r = nldpe_qmatmul_ref(ac, as_, bc, bs, DEFAULT_CFG.mag_spec.step,
+                            DEFAULT_CFG.mag_spec.log_lo)
+    np.testing.assert_allclose(np.asarray(c_k), np.asarray(c_r),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("m,k,n", [(4, 32, 16), (10, 96, 80), (128, 256, 128)])
+def test_crossbar_kernel_sweep(m, k, n):
+    w = jnp.asarray(RNG.normal(size=(k, n)).astype(np.float32) * 0.1)
+    x = jnp.asarray(RNG.normal(size=(m, k)).astype(np.float32))
+    plan, _ = program_linear(w)
+    y_k = crossbar_matmul(x, plan)
+    y_r = x @ effective_weight(plan)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_r),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("b,hq,hkv,lq,lk,d", [
+    (1, 2, 2, 16, 16, 8),        # MHA square
+    (2, 4, 2, 32, 32, 16),       # GQA
+    (1, 4, 1, 8, 64, 32),        # MQA, decode-ish (queries at the end)
+    (1, 2, 2, 1, 40, 16),        # single-query decode
+])
+def test_flash_attention_kernel_sweep(b, hq, hkv, lq, lk, d):
+    q = jnp.asarray(RNG.normal(size=(b, hq, lq, d)).astype(np.float32))
+    k = jnp.asarray(RNG.normal(size=(b, hkv, lk, d)).astype(np.float32))
+    v = jnp.asarray(RNG.normal(size=(b, hkv, lk, d)).astype(np.float32))
+    o_k = flash_attention(q, k, v, bq=8, bk=8)
+    o_r = flash_attention(q, k, v, use_ref=True)
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_r),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_flash_attention_bf16():
+    q = jnp.asarray(RNG.normal(size=(1, 2, 16, 8)), jnp.bfloat16)
+    k = jnp.asarray(RNG.normal(size=(1, 2, 16, 8)), jnp.bfloat16)
+    v = jnp.asarray(RNG.normal(size=(1, 2, 16, 8)), jnp.bfloat16)
+    o_k = flash_attention(q, k, v, bq=8, bk=8)
+    o_r = flash_attention(q, k, v, use_ref=True)
+    assert o_k.dtype == jnp.bfloat16
+    np.testing.assert_allclose(np.asarray(o_k, dtype=np.float32),
+                               np.asarray(o_r, dtype=np.float32),
+                               rtol=0.05, atol=0.05)
+
+
+def test_qmatmul_encoding_zero_and_sign():
+    a = jnp.asarray([[0.0, -1.0], [2.0, 1e-9]], jnp.float32)
+    code, sign = encode_int8(a)
+    assert sign[0, 0] == 0 and sign[1, 1] == 0   # zeros flushed
+    assert sign[0, 1] == -1 and sign[1, 0] == 1

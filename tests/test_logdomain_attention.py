@@ -1,0 +1,104 @@
+"""Log-domain DMMul/Softmax (Fig 6) + NL-DPE attention numerics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import attention as att
+from repro.core import logdomain as ld
+from repro.core.quantization import LogQuantSpec
+
+
+CFG_UNIT = ld.LogDomainConfig(
+    bits=8, mag_spec=LogQuantSpec(log_lo=np.log(1e-4), log_hi=0.0, bits=8))
+
+
+def test_matmul_fused_close_to_ideal():
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.uniform(-1, 1, (32, 64)).astype(np.float32))
+    b = jnp.asarray(rng.uniform(-1, 1, (64, 32)).astype(np.float32))
+    c = ld.nldpe_matmul(a, b, CFG_UNIT, mode="fused")
+    ref = a @ b
+    rel = float(jnp.mean((c - ref) ** 2) / jnp.var(ref))
+    assert rel < 1e-3
+
+
+def test_matmul_exact_mode_matches_fused_within_half_lsb():
+    """The per-product requantization differs from fused by <= 1/2 LSB of the
+    exp output grid per product (DESIGN.md hardware-adaptation note)."""
+    rng = np.random.default_rng(1)
+    a = jnp.asarray(rng.uniform(-1, 1, (16, 32)).astype(np.float32))
+    b = jnp.asarray(rng.uniform(-1, 1, (32, 16)).astype(np.float32))
+    c_f = ld.nldpe_matmul(a, b, CFG_UNIT, mode="fused")
+    c_e = ld.nldpe_matmul(a, b, CFG_UNIT, mode="exact")
+    half_lsb = CFG_UNIT.exp_out_spec().step / 2
+    per_product_bound = 32 * half_lsb          # K products accumulate
+    assert float(jnp.max(jnp.abs(c_f - c_e))) <= per_product_bound + 1e-5
+
+
+def test_elementwise_mul_signs_and_zeros():
+    a = jnp.asarray([0.5, -0.5, 0.0, 2.0])
+    b = jnp.asarray([0.5, 0.5, 3.0, -1.0])
+    y = ld.nldpe_mul(a, b, mode="fused")
+    np.testing.assert_allclose(np.asarray(y), [0.25, -0.25, 0.0, -2.0],
+                               atol=0.05)
+    y2 = ld.nldpe_mul(a, b, CFG_UNIT, mode="exact")
+    assert float(y2[2]) == 0.0 and float(y2[1]) < 0
+
+
+def test_softmax_matches_reference():
+    rng = np.random.default_rng(2)
+    y = jnp.asarray(rng.normal(size=(8, 64)).astype(np.float32) * 2)
+    p = ld.nldpe_softmax(y)
+    p_ref = jax.nn.softmax(y, axis=-1)
+    err = np.asarray(p - p_ref)
+    assert abs(err.mean()) < 1e-3
+    assert err.var() < 2e-5                    # paper Fig 14c: 6.3e-7 at 256
+    sums = np.asarray(jnp.sum(p, axis=-1))
+    np.testing.assert_allclose(sums, 1.0, atol=0.05)
+
+
+def test_log_softmax_bypass_consistency():
+    """Fig 6c: exp(log_softmax) == softmax up to the step-5 quantizer."""
+    y = jnp.asarray(np.random.default_rng(3).normal(size=(4, 32)).astype(np.float32))
+    lp = ld.nldpe_log_softmax(y)
+    p = ld.nldpe_softmax(y)
+    # step-5 adds an input quantization (step 8/255 in the log domain) and
+    # an output quantization: tolerance = p*(exp(step/2)-1) + out LSB
+    np.testing.assert_allclose(np.asarray(jnp.exp(lp)), np.asarray(p),
+                               atol=0.02)
+
+
+@pytest.mark.parametrize("causal", [True, False])
+def test_nldpe_attention_close_to_fp(causal):
+    rng = np.random.default_rng(4)
+    q, k, v = (jnp.asarray(rng.normal(size=(2, 2, 24, 16)).astype(np.float32))
+               for _ in range(3))
+    o = att.nldpe_attention(q, k, v, causal=causal)
+    o_ref = att.reference_attention(q, k, v, causal=causal)
+    rel = float(jnp.mean((o - o_ref) ** 2) / jnp.var(o_ref))
+    assert rel < 0.02
+
+
+def test_nldpe_attention_respects_causality():
+    rng = np.random.default_rng(5)
+    q = jnp.asarray(rng.normal(size=(1, 1, 8, 16)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(1, 1, 8, 16)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(1, 1, 8, 16)).astype(np.float32))
+    o1 = att.nldpe_attention(q, k, v, causal=True)
+    k2 = k.at[:, :, 5:].set(99.0)             # mutate the future
+    v2 = v.at[:, :, 5:].set(-99.0)
+    o2 = att.nldpe_attention(q, k2, v2, causal=True)
+    np.testing.assert_allclose(np.asarray(o1[:, :, :5]),
+                               np.asarray(o2[:, :, :5]), atol=1e-4)
+
+
+@given(st.floats(-0.99, 0.99), st.floats(-0.99, 0.99))
+@settings(max_examples=60, deadline=None)
+def test_mul_relative_error_bound(a, b):
+    y = float(ld.nldpe_mul(jnp.float32(a), jnp.float32(b), CFG_UNIT, mode="fused"))
+    ab = a * b
+    step = CFG_UNIT.mag_spec.step
+    tol = abs(ab) * (np.exp(step) - 1) + 2e-4  # two half-step log errors
+    assert abs(y - ab) <= tol + 1e-6

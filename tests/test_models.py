@@ -1,0 +1,127 @@
+"""Per-arch smoke tests: reduced configs, forward/train/decode on CPU."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_NAMES, get_config
+from repro.core.engine import NLDPEConfig
+from repro.models import (decode_step, forward, init_model_cache, init_params,
+                          lm_loss)
+from repro.nn.module import param_dtype
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_arch_forward_shapes_and_finite(arch):
+    cfg = get_config(arch, reduced=True)
+    key = jax.random.key(0)
+    params = init_params(key, cfg)
+    B, S = 2, 24
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    kwargs = {}
+    extra = 0
+    if cfg.frontend == "siglip_stub":
+        kwargs["patch_embeds"] = jax.random.normal(
+            key, (B, cfg.n_patches, cfg.d_model), jnp.bfloat16)
+        extra = cfg.n_patches
+    logits, _ = forward(params, toks, cfg, mode="train", **kwargs)
+    assert logits.shape == (B, S + extra, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_arch_one_train_step_no_nans(arch):
+    from repro.launch.train import build_train_step
+    from repro.optim import adamw
+
+    cfg = get_config(arch, reduced=True)
+    with param_dtype(jnp.float32):
+        params = init_params(jax.random.key(0), cfg)
+    opt = adamw.init(params)
+    step = build_train_step(cfg, adamw.AdamWConfig(lr=1e-3))
+    B, S = 2, 16
+    key = jax.random.key(1)
+    batch = {"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab_size),
+             "labels": jax.random.randint(key, (B, S), 0, cfg.vocab_size)}
+    if cfg.frontend == "siglip_stub":
+        batch["patch_embeds"] = jax.random.normal(
+            key, (B, cfg.n_patches, cfg.d_model), jnp.float32)
+    params2, opt2, metrics = step(params, opt, batch)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert int(opt2["step"]) == 1
+    moved = sum(float(jnp.max(jnp.abs(a - b)))
+                for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(params2)))
+    assert moved > 0
+
+
+@pytest.mark.parametrize("arch", ["qwen2_7b", "gemma3_27b", "recurrentgemma_9b",
+                                  "rwkv6_3b", "qwen3_moe_30b_a3b"])
+def test_decode_matches_forward(arch):
+    cfg = dataclasses.replace(get_config(arch, reduced=True),
+                              activation_dtype=jnp.float32)
+    with param_dtype(jnp.float32):
+        params = init_params(jax.random.key(1), cfg)
+    B, S = 2, 12
+    toks = jax.random.randint(jax.random.key(2), (B, S), 0, cfg.vocab_size)
+    full, _ = forward(params, toks, cfg, mode="train")
+    cache = init_model_cache(cfg, B, 24, dtype=jnp.float32)
+    for t in range(S):
+        lg, cache = decode_step(params, cfg, toks[:, t], jnp.int32(t), cache)
+        np.testing.assert_allclose(np.asarray(lg), np.asarray(full[:, t]),
+                                   rtol=1e-3, atol=2e-3)
+
+
+def test_nldpe_mode_runs_and_is_close():
+    cfg = dataclasses.replace(get_config("qwen2_7b", reduced=True),
+                              activation_dtype=jnp.float32)
+    with param_dtype(jnp.float32):
+        params = init_params(jax.random.key(3), cfg)
+    toks = jax.random.randint(jax.random.key(4), (2, 16), 0, cfg.vocab_size)
+    ref, _ = forward(params, toks, cfg, mode="train")
+    q, _ = forward(params, toks, cfg, mode="train",
+                   nldpe=NLDPEConfig(enabled=True))
+    assert bool(jnp.all(jnp.isfinite(q)))
+    # 8-bit analog numerics track fp within a loose relative error
+    rel = float(jnp.mean((q - ref) ** 2) / jnp.maximum(jnp.var(ref), 1e-9))
+    assert rel < 0.3
+
+
+def test_lm_loss_decreases_with_correct_labels():
+    logits = jnp.zeros((2, 4, 16)).at[..., 3].set(5.0)
+    good = jnp.full((2, 4), 3, jnp.int32)
+    bad = jnp.full((2, 4), 7, jnp.int32)
+    assert float(lm_loss(logits, good)) < float(lm_loss(logits, bad))
+
+
+def test_param_counts_match_analytic():
+    for arch in ("qwen2_7b", "rwkv6_3b"):
+        cfg = get_config(arch, reduced=True)
+        with param_dtype(jnp.float32):
+            params = init_params(jax.random.key(0), cfg)
+        actual = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))
+        predicted = cfg.param_count()
+        assert abs(actual - predicted) / actual < 0.2, (arch, actual, predicted)
+
+
+def test_int8_kv_cache_decode_close_to_bf16():
+    """Quantized cache (§Perf cell C) tracks the fp cache within int8 error."""
+    base = dataclasses.replace(get_config("qwen2_7b", reduced=True),
+                               activation_dtype=jnp.float32)
+    q8 = dataclasses.replace(base, kv_cache_dtype="int8")
+    with param_dtype(jnp.float32):
+        params = init_params(jax.random.key(5), base)
+    B, S = 2, 12
+    toks = jax.random.randint(jax.random.key(6), (B, S), 0, base.vocab_size)
+    cache_fp = init_model_cache(base, B, 24, dtype=jnp.float32)
+    cache_q = init_model_cache(q8, B, 24)
+    assert cache_q["groups"]["b0"]["attn"]["k"].dtype == jnp.int8
+    for t in range(S):
+        lg_fp, cache_fp = decode_step(params, base, toks[:, t], jnp.int32(t),
+                                      cache_fp)
+        lg_q, cache_q = decode_step(params, q8, toks[:, t], jnp.int32(t),
+                                    cache_q)
+        rel = float(jnp.mean((lg_fp - lg_q) ** 2) /
+                    jnp.maximum(jnp.var(lg_fp), 1e-9))
+        assert rel < 0.05, (t, rel)

@@ -1,0 +1,193 @@
+"""Attention paths, MoE dispatch math, RWKV/RG-LRU recurrence equivalences."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.nn import attention as A
+from repro.nn import moe as M
+from repro.nn import rglru as R
+from repro.nn import rwkv6 as W
+
+RNG = np.random.default_rng(7)
+
+
+def _qkv(b, hq, hkv, s, d):
+    return (jnp.asarray(RNG.normal(size=(b, hq, s, d)).astype(np.float32)),
+            jnp.asarray(RNG.normal(size=(b, hkv, s, d)).astype(np.float32)),
+            jnp.asarray(RNG.normal(size=(b, hkv, s, d)).astype(np.float32)))
+
+
+def _ref_attention(q, k, v, causal=True, window=None, prefix_len=None):
+    b, hq, s, d = q.shape
+    g = hq // k.shape[1]
+    qg = q.reshape(b, k.shape[1], g, s, d)
+    pos = jnp.arange(s)
+    mask = A._mask(pos, pos, causal=causal, window=window, prefix_len=prefix_len)
+    o = A._sdpa(qg / 1.0, k, v, mask[None, None, None])
+    return o.reshape(b, hq, s, d)
+
+
+@pytest.mark.parametrize("hq,hkv", [(4, 4), (4, 2), (8, 1)])
+def test_blockwise_matches_sdpa(hq, hkv):
+    q, k, v = _qkv(2, hq, hkv, 64, 16)
+    o_b = A.blockwise_attention(q, k, v, q_block=16, k_block=16)
+    o_r = _ref_attention(q, k, v)
+    np.testing.assert_allclose(np.asarray(o_b), np.asarray(o_r),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_blockwise_prefix_lm():
+    q, k, v = _qkv(1, 2, 2, 32, 8)
+    o_b = A.blockwise_attention(q, k, v, prefix_len=8, q_block=8, k_block=8)
+    o_r = _ref_attention(q, k, v, prefix_len=8)
+    np.testing.assert_allclose(np.asarray(o_b), np.asarray(o_r),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_banded_matches_windowed_reference():
+    q, k, v = _qkv(1, 2, 1, 128, 8)
+    o_b = A.banded_attention(q, k, v, window=24, q_block=16)
+    o_r = _ref_attention(q, k, v, window=24)
+    np.testing.assert_allclose(np.asarray(o_b), np.asarray(o_r),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_ring_buffer_decode_matches_full_cache():
+    """Windowed ring cache must agree with an unbounded cache + window mask."""
+    s = A.AttnSpec(d_model=32, n_heads=2, n_kv_heads=2, head_dim=8, window=8)
+    s_full = A.AttnSpec(d_model=32, n_heads=2, n_kv_heads=2, head_dim=8,
+                        window=8)
+    ring = A.init_cache(s, batch=1, max_len=64, dtype=jnp.float32)  # len=8 ring
+    full = {"k": jnp.zeros((1, 2, 64, 8)), "v": jnp.zeros((1, 2, 64, 8)),
+            "pos": jnp.full((64,), -1, jnp.int32)}
+    assert ring["k"].shape[2] == 8
+    for t in range(20):
+        kt = jnp.asarray(RNG.normal(size=(1, 2, 1, 8)).astype(np.float32))
+        vt = jnp.asarray(RNG.normal(size=(1, 2, 1, 8)).astype(np.float32))
+        qt = jnp.asarray(RNG.normal(size=(1, 2, 1, 8)).astype(np.float32))
+        ring = A.update_cache(ring, kt, vt, jnp.int32(t))
+        full = A.update_cache(full, kt, vt, jnp.int32(t))
+        o_ring = A.decode_attention(qt, ring, jnp.int32(t), s)
+        o_full = A.decode_attention(qt, full, jnp.int32(t), s_full)
+        np.testing.assert_allclose(np.asarray(o_ring), np.asarray(o_full),
+                                   rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# MoE
+# ---------------------------------------------------------------------------
+
+def _dense_moe_reference(p, x, spec):
+    """O(E)-cost oracle: full softmax top-k with per-token expert loop."""
+    b, s, d = x.shape
+    logits = jnp.einsum("bsd,de->bse", x, p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, spec.top_k)
+    if spec.router_norm_topk:
+        gates = gates / jnp.sum(gates, axis=-1, keepdims=True)
+    out = jnp.zeros_like(x)
+    for e in range(spec.n_experts):
+        h = jax.nn.silu(x @ p["gate"][e]) * (x @ p["up"][e])
+        y = h @ p["down"][e]
+        w = jnp.sum(jnp.where(idx == e, gates, 0.0), axis=-1)
+        out = out + y * w[..., None]
+    return out
+
+
+def test_moe_dropless_matches_dense_reference():
+    spec = M.MoESpec(n_experts=8, top_k=2, d_expert_ff=16, capacity_factor=0.0)
+    p = M.moe_init(jax.random.key(0), 32, spec)
+    x = jnp.asarray(RNG.normal(size=(2, 8, 32)).astype(np.float32))
+    got = M.moe_apply(p, x, spec)
+    ref = _dense_moe_reference(p, x, spec)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_moe_groups_do_not_change_result():
+    spec = M.MoESpec(n_experts=4, top_k=1, d_expert_ff=8, capacity_factor=0.0,
+                     router_norm_topk=False)
+    p = M.moe_init(jax.random.key(1), 16, spec)
+    x = jnp.asarray(RNG.normal(size=(4, 4, 16)).astype(np.float32))
+    y1 = M.moe_apply(p, x, spec, groups=1)
+    y4 = M.moe_apply(p, x, spec, groups=4)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y4),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_moe_capacity_drops_tokens():
+    spec = M.MoESpec(n_experts=4, top_k=2, d_expert_ff=8,
+                     capacity_factor=0.25, min_capacity=1)
+    p = M.moe_init(jax.random.key(2), 16, spec)
+    x = jnp.asarray(RNG.normal(size=(2, 16, 16)).astype(np.float32))
+    dropped = M.moe_apply(p, x, spec)
+    full = M.moe_apply(p, x, M.MoESpec(n_experts=4, top_k=2, d_expert_ff=8,
+                                       capacity_factor=0.0))
+    assert float(jnp.mean(jnp.abs(dropped - full))) > 0
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU / RWKV6
+# ---------------------------------------------------------------------------
+
+def test_rglru_scan_matches_step():
+    d = 16
+    p = R.rglru_init(jax.random.key(0), d)
+    x = jnp.asarray(RNG.normal(size=(2, 10, d)).astype(np.float32))
+    y_scan, h_last = R.rglru_scan(p, x)
+    h = jnp.zeros((2, d))
+    ys = []
+    for t in range(10):
+        y_t, h = R.rglru_step(p, x[:, t:t + 1], h)
+        ys.append(y_t)
+    y_seq = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_scan), np.asarray(y_seq),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(h_last), np.asarray(h),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_rglru_carried_state():
+    d = 8
+    p = R.rglru_init(jax.random.key(1), d)
+    x = jnp.asarray(RNG.normal(size=(1, 12, d)).astype(np.float32))
+    y_full, h_full = R.rglru_scan(p, x)
+    y_a, h_a = R.rglru_scan(p, x[:, :5])
+    y_b, h_b = R.rglru_scan(p, x[:, 5:], h0=h_a)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y_a, y_b], 1)),
+                               np.asarray(y_full), rtol=1e-4, atol=1e-4)
+
+
+def _rwkv_sequential(p, x):
+    b, s, d = x.shape
+    state = W.timemix_state_init(b, d)
+    outs = []
+    for t in range(s):
+        y, state = W.timemix_apply(p, x[:, t:t + 1], state, mode="decode")
+        outs.append(y)
+    return jnp.concatenate(outs, axis=1)
+
+
+@pytest.mark.parametrize("chunk", [4, 8, 16])
+def test_rwkv_chunked_matches_sequential(chunk):
+    d = 128
+    p = W.timemix_init(jax.random.key(0), d)
+    x = jnp.asarray(RNG.normal(size=(1, 16, d)).astype(np.float32) * 0.5)
+    y_seq = _rwkv_sequential(p, x)
+    y_chunk, _ = W.timemix_apply(p, x, None, mode="train", chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y_chunk), np.asarray(y_seq),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_rwkv_state_carry_across_chunks():
+    d = 128
+    p = W.timemix_init(jax.random.key(2), d)
+    x = jnp.asarray(RNG.normal(size=(2, 12, d)).astype(np.float32) * 0.5)
+    y_full, st_full = W.timemix_apply(p, x, None, mode="train", chunk=4)
+    y_a, st_a = W.timemix_apply(p, x[:, :8], None, mode="train", chunk=4)
+    y_b, st_b = W.timemix_apply(p, x[:, 8:], st_a, mode="train", chunk=4)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y_a, y_b], 1)),
+                               np.asarray(y_full), rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(st_b["S"]), np.asarray(st_full["S"]),
+                               rtol=2e-3, atol=2e-3)

@@ -1,0 +1,130 @@
+"""Noise models (Eq 5-7), A-SL/D-SL slicing, crossbar simulation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import crossbar, noise, slicing
+from repro.core.quantization import QuantSpec
+
+
+def test_sigma_monotone_then_saturates():
+    m = noise.DEFAULT
+    g = jnp.asarray([0.1, 1.0, 10.0, 100.0, 150.0])
+    s = np.asarray(m.sigma_prog(g))
+    assert np.all(np.diff(s[:4]) > 0)
+    assert abs(s[3] - s[4]) < 1e-6          # clipped at c_prog
+    assert s.max() < 0.5                     # ~0.4 uS envelope (Fig 7a)
+
+
+def test_readout_noise_statistics():
+    m = noise.DEFAULT
+    g_t = jnp.full((20000,), 50.0)
+    g = np.asarray(m.readout(jax.random.key(0), g_t))
+    expected = float(np.sqrt(m.sigma_prog(50.0) ** 2 + m.sigma_fluct(50.0) ** 2))
+    assert abs(np.std(g) - expected) / expected < 0.1
+    assert abs(np.mean(g) - 50.0) < 0.05
+
+
+def test_ideal_model_is_noise_free():
+    g = jnp.linspace(1, 100, 64)
+    out = noise.IDEAL.readout(jax.random.key(0), g)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(g), atol=1e-5)
+
+
+def test_threshold_transfer_roundtrip():
+    m = noise.DEFAULT
+    th = m.threshold_of_g(jnp.linspace(0.1, 150.0, 32))
+    g = m.g_of_threshold(th)
+    np.testing.assert_allclose(np.asarray(g), np.linspace(0.1, 150.0, 32),
+                               rtol=1e-4)
+
+
+def test_noisy_thresholds_ideal_identity():
+    lo = jnp.asarray([[-1.0, 0.5]])
+    hi = jnp.asarray([[0.0, 2.0]])
+    l2, h2 = noise.noisy_thresholds(jax.random.key(0), lo, hi, (-4, 4),
+                                    model=noise.IDEAL)
+    np.testing.assert_allclose(np.asarray(l2), np.asarray(lo), atol=1e-3)
+    np.testing.assert_allclose(np.asarray(h2), np.asarray(hi), atol=1e-3)
+
+
+def test_saf_rate():
+    g = jnp.full((50000,), 50.0)
+    out, mask = noise.stuck_at_faults(jax.random.key(1), g, 0.1)
+    assert abs(float(jnp.mean(mask)) - 0.1) < 0.01
+    stuck = np.unique(np.asarray(out)[np.asarray(mask)])
+    assert all(np.isclose(v, 0.01) or np.isclose(v, 150.0) for v in stuck)
+
+
+# ---------------------------------------------------------------------------
+
+def test_asl_exact_without_noise():
+    w = jnp.asarray(np.random.default_rng(0).normal(size=(16, 8)).astype(np.float32))
+    plan, eps = slicing.plan_asl(w, 4.0)
+    w_eff = slicing.effective_weight(plan)
+    np.testing.assert_allclose(np.asarray(w_eff), np.asarray(w), atol=1e-5)
+    assert float(jnp.max(eps)) < 1e-6
+
+
+def test_asl_residual_cell_cancels_programming_error():
+    w = jnp.asarray(np.random.default_rng(1).normal(size=(64, 64)).astype(np.float32))
+    key = jax.random.key(2)
+    plan_res, eps = slicing.plan_asl(w, 4.0, prog_rng=key)
+    assert float(jnp.max(eps)) > 0            # programming error is baked in
+    # zero out residual cells to measure the uncorrected error
+    import dataclasses
+    g_min = noise.DEFAULT.g_min
+    plan_nores = dataclasses.replace(
+        plan_res, g_pos_res=jnp.full_like(plan_res.g_pos_res, g_min),
+        g_neg_res=jnp.full_like(plan_res.g_neg_res, g_min))
+    # same programming realization in the main cells for both plans
+    err_with = float(jnp.mean((slicing.effective_weight(plan_res) - w) ** 2))
+    err_without = float(jnp.mean((slicing.effective_weight(plan_nores) - w) ** 2))
+    assert err_with < 0.5 * err_without       # /10 mirror cancels first order
+
+
+def test_dsl_reconstruction():
+    w = jnp.asarray(np.abs(np.random.default_rng(3).normal(size=(8, 8))).astype(np.float32))
+    w = jnp.clip(w, 0, 2.0) - jnp.clip(jnp.roll(w, 1, 0), 0, 2.0)
+    plans = slicing.plan_dsl(w, 2.0, bits=8, cell_bits=2)
+    w_eff = slicing.effective_weight_dsl(plans, cell_bits=2, bits=8)
+    assert float(jnp.max(jnp.abs(w_eff - w))) < 2.0 / 255 + 1e-3
+
+
+# ---------------------------------------------------------------------------
+
+def test_crossbar_vmm_ideal():
+    rng = np.random.default_rng(4)
+    w = jnp.asarray(rng.normal(size=(32, 16)).astype(np.float32) * 0.2)
+    x = jnp.asarray(rng.normal(size=(4, 32)).astype(np.float32))
+    plan, _ = crossbar.program_linear(w)
+    y = crossbar.crossbar_vmm(x, plan)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x @ w), atol=1e-4)
+
+
+def test_crossbar_vmm_noise_scales():
+    rng = np.random.default_rng(5)
+    w = jnp.asarray(rng.normal(size=(64, 32)).astype(np.float32) * 0.2)
+    x = jnp.asarray(rng.normal(size=(8, 64)).astype(np.float32))
+    plan, _ = crossbar.program_linear(w)
+    ref = np.asarray(x @ w)
+    errs = {}
+    for s in (0.5, 1.0, 2.0):
+        m = noise.DEFAULT.rescale(s)
+        y = crossbar.crossbar_vmm(x, plan, rng=jax.random.key(0), model=m)
+        errs[s] = float(np.mean((np.asarray(y) - ref) ** 2))
+    assert errs[0.5] < errs[1.0] < errs[2.0]
+
+
+def test_dac_slicing_matches_fused_in_expectation():
+    rng = np.random.default_rng(6)
+    w = jnp.asarray(rng.normal(size=(32, 16)).astype(np.float32) * 0.1)
+    x = jnp.asarray(rng.uniform(0, 1, size=(4, 32)).astype(np.float32))
+    plan, _ = crossbar.program_linear(w)
+    spec = QuantSpec(lo=0.0, hi=1.0, bits=8)
+    y_fused = crossbar.crossbar_vmm(x, plan, input_spec=spec)
+    y_sliced = crossbar.crossbar_vmm(x, plan, input_spec=spec, dac_slices=4,
+                                     rng=jax.random.key(0), model=noise.IDEAL)
+    np.testing.assert_allclose(np.asarray(y_sliced), np.asarray(y_fused),
+                               atol=1e-3)

@@ -1,0 +1,76 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import dt
+from repro.core.acam import eval_table_np
+from repro.nn import moe as M
+from repro.parallel.pipeline import bubble_fraction
+from repro.perfmodel import OpCount, gpu_estimate, nldpe_estimate
+
+
+@given(st.integers(2, 6), st.integers(1, 3), st.integers(3, 16))
+@settings(max_examples=20, deadline=None)
+def test_moe_gate_weights_sum_preserved(n_exp_log, top_k, tokens):
+    """Dropless MoE output == gate-weighted sum of per-expert FFNs for any
+    (n_experts, top_k, token-count) combination."""
+    n_experts = 1 << n_exp_log
+    top_k = min(top_k, n_experts)
+    spec = M.MoESpec(n_experts=n_experts, top_k=top_k, d_expert_ff=8,
+                     capacity_factor=0.0)
+    d = 16
+    p = M.moe_init(jax.random.key(n_experts * 7 + top_k), d, spec)
+    x = jax.random.normal(jax.random.key(tokens), (1, tokens, d))
+    out = M.moe_apply(p, x, spec)
+    assert out.shape == x.shape
+    assert bool(jnp.all(jnp.isfinite(out)))
+    # zero input -> zero output (no bias terms anywhere in the expert path)
+    out0 = M.moe_apply(p, jnp.zeros_like(x), spec)
+    np.testing.assert_allclose(np.asarray(out0), 0.0, atol=1e-6)
+
+
+@given(st.integers(1, 64), st.integers(2, 16))
+@settings(max_examples=30, deadline=None)
+def test_pipeline_bubble_bounds(m, k):
+    b = bubble_fraction(m, k)
+    assert 0 <= b < 1
+    assert b == pytest.approx((k - 1) / (m + k - 1))
+    # more microbatches always shrink the bubble
+    assert bubble_fraction(m + 1, k) < b
+
+
+@given(st.sampled_from(["sigmoid", "tanh", "relu", "exp"]),
+       st.integers(4, 8))
+@settings(max_examples=12, deadline=None)
+def test_acam_monotone_functions_monotone_outputs(name, bits):
+    """ACAM reconstruction of a monotone function is monotone (Gray decode
+    never inverts ordering for exact tables)."""
+    t = dt.build_table(name, bits=bits, encoding="gray")
+    xs = np.linspace(t.in_domain[0] + 1e-3, t.in_domain[1] - 1e-3, 513)
+    y = eval_table_np(t, xs)
+    assert np.all(np.diff(y) >= -1e-9)
+
+
+@given(st.integers(1, 8), st.integers(1, 512))
+@settings(max_examples=20, deadline=None)
+def test_perfmodel_monotone_in_batch_and_size(batch, n):
+    ops = [OpCount("vmm", m=16, k=256, n=n)]
+    e1 = nldpe_estimate(ops, batch=batch)
+    e2 = nldpe_estimate(ops, batch=batch + 1)
+    assert e2.energy_j >= e1.energy_j
+    assert e2.latency_s >= e1.latency_s
+    g = gpu_estimate(ops, batch=batch)
+    assert g.energy_j > 0 and g.latency_s > 0
+
+
+@given(st.lists(st.floats(-4, 4), min_size=2, max_size=32))
+@settings(max_examples=40, deadline=None)
+def test_nldpe_softmax_is_distribution(vals):
+    from repro.core.logdomain import nldpe_softmax
+    y = jnp.asarray(np.asarray(vals, np.float32))[None, :]
+    p = np.asarray(nldpe_softmax(y))
+    assert np.all(p >= 0)
+    assert abs(p.sum() - 1.0) < 0.06          # 8-bit adders: near-1 sums

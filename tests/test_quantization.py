@@ -1,0 +1,74 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.quantization import (LogQuantSpec, QuantSpec, binary_to_gray,
+                                     fake_quant_ste, gray_to_binary,
+                                     log_spec_for, spec_for)
+
+
+def test_quant_roundtrip_error_bounded():
+    spec = QuantSpec(lo=-4.0, hi=4.0, bits=8)
+    x = jnp.linspace(-4, 4, 1001)
+    err = jnp.abs(spec.apply(x) - x)
+    assert float(jnp.max(err)) <= spec.step / 2 + 1e-6
+
+
+def test_quant_clipping():
+    spec = QuantSpec(lo=0.0, hi=1.0, bits=4)
+    assert float(spec.apply(jnp.float32(5.0))) == 1.0
+    assert float(spec.apply(jnp.float32(-5.0))) == 0.0
+
+
+def test_grid_matches_dequant():
+    spec = QuantSpec(lo=-1.0, hi=1.0, bits=6)
+    grid = spec.grid()
+    codes = np.arange(spec.levels)
+    np.testing.assert_allclose(grid, np.asarray(spec.dequantize(jnp.asarray(codes))),
+                               rtol=1e-5, atol=1e-6)
+
+
+@given(st.integers(min_value=0, max_value=255))
+@settings(max_examples=64, deadline=None)
+def test_gray_roundtrip(code):
+    g = binary_to_gray(jnp.int32(code))
+    b = gray_to_binary(g, 8)
+    assert int(b) == code
+
+
+@given(st.integers(min_value=0, max_value=254))
+@settings(max_examples=64, deadline=None)
+def test_gray_adjacent_single_bit_flip(code):
+    g1 = int(binary_to_gray(jnp.int32(code)))
+    g2 = int(binary_to_gray(jnp.int32(code + 1)))
+    assert bin(g1 ^ g2).count("1") == 1
+
+
+def test_log_quant_relative_error():
+    spec = LogQuantSpec(log_lo=np.log(1e-4), log_hi=np.log(16.0), bits=8)
+    x = jnp.asarray(np.random.default_rng(0).uniform(0.01, 15.0, 4096),
+                    jnp.float32)
+    y = spec.apply(x)
+    rel = jnp.abs(y - x) / x
+    # half-step in log space -> relative error bound
+    assert float(jnp.max(rel)) <= spec.step / 2 + 0.01
+
+
+def test_log_quant_signs():
+    spec = LogQuantSpec(log_lo=np.log(1e-4), log_hi=np.log(4.0), bits=8)
+    x = jnp.asarray([-2.0, 2.0, -0.5])
+    y = spec.apply(x)
+    assert float(y[0]) < 0 < float(y[1])
+
+
+def test_fake_quant_ste_gradient_is_identity():
+    spec = QuantSpec(lo=-1.0, hi=1.0, bits=4)
+    g = jax.grad(lambda x: jnp.sum(fake_quant_ste(x, spec)))(jnp.ones((4,)) * 0.3)
+    np.testing.assert_allclose(np.asarray(g), 1.0)
+
+
+def test_spec_for_symmetric():
+    s = spec_for([-3.0, 1.0], bits=8, symmetric=True)
+    assert s.lo == -3.0 and s.hi == 3.0

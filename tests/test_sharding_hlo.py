@@ -1,0 +1,107 @@
+"""Sharding resolver rules, HLO collective parser, perfmodel sanity."""
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel.sharding import Rules, rules_for, serve_rules, train_rules
+from repro.perfmodel import (GpuHw, OpCount, gpu_estimate, isaac_estimate,
+                             nldpe_estimate)
+from repro.perfmodel.roofline import Roofline
+from repro.utils.hlo import collective_summary, parse_collectives
+
+
+class FakeMesh:
+    def __init__(self, shape):
+        self.shape = shape
+
+
+def test_resolver_divisible_and_fallback():
+    from repro.parallel.sharding import resolve
+    mesh = FakeMesh({"data": 16, "model": 16})
+    r = train_rules(False)
+    # divisible: d_ff 18944 % 16 == 0 on model
+    assert resolve(r, ("embed", "mlp"), (3584, 18944), mesh) == P("data", "model")
+    # 28 heads not divisible by 16 -> replicate that dim
+    assert resolve(r, ("embed", "heads", None), (3584, 28, 128), mesh) == \
+        P("data", None, None)
+    # tuple axis with partial fallback
+    r2 = rules_for("train", True)
+    mesh2 = FakeMesh({"pod": 2, "data": 16, "model": 16})
+    spec = resolve(r2, ("batch", None), (64, 128), mesh2)   # 64 % 32 == 0
+    assert spec == P(("pod", "data"), None)
+    spec2 = resolve(r2, ("batch", None), (2, 128), mesh2)   # only pod divides
+    assert spec2 == P("pod", None)
+
+
+def test_no_duplicate_mesh_axis_in_spec():
+    from repro.parallel.sharding import resolve
+    mesh = FakeMesh({"data": 4, "model": 4})
+    r = Rules("t", {"a": "model", "b": "model"})
+    spec = resolve(r, ("a", "b"), (8, 8), mesh)
+    assert spec == P("model", None)          # second use must drop
+
+
+def test_rules_tables_complete():
+    for mode in ("train", "serve", "long"):
+        for mp in (False, True):
+            r = rules_for(mode, mp)
+            for k in ("batch", "embed", "mlp", "heads", "vocab", "kv_seq"):
+                assert k in r.table
+
+
+HLO_SAMPLE = """
+ENTRY %main {
+  %ag = f32[256,1024]{1,0} all-gather(f32[16,1024]{1,0} %p0), replica_groups=[16,16]<=[256], dimensions={0}
+  %ar = bf16[512,512]{1,0} all-reduce(bf16[512,512]{1,0} %x), replica_groups=[1,256]<=[256], to_apply=%add
+  %rs = f32[16,64]{1,0} reduce-scatter(f32[256,64]{1,0} %y), replica_groups=[16,16]<=[256], dimensions={0}
+  %cp = f32[8,8]{1,0} collective-permute(f32[8,8]{1,0} %z), source_target_pairs={{0,1},{1,0}}
+}
+"""
+
+
+def test_hlo_parser_byte_math():
+    ops = parse_collectives(HLO_SAMPLE, 256)
+    kinds = {o.kind: o for o in ops}
+    ag = kinds["all-gather"]
+    assert ag.group_size == 16
+    assert ag.bytes_result == 256 * 1024 * 4
+    assert abs(ag.wire_bytes - (15 / 16) * ag.bytes_result) < 1
+    ar = kinds["all-reduce"]
+    assert ar.group_size == 256
+    assert abs(ar.wire_bytes - 2 * (255 / 256) * 512 * 512 * 2) < 1
+    rs = kinds["reduce-scatter"]
+    assert abs(rs.wire_bytes - (15 / 16) * 16 * 64 * 4 * 16) < 1
+    cp = kinds["collective-permute"]
+    assert cp.wire_bytes == 8 * 8 * 4
+    summary = collective_summary(HLO_SAMPLE, 256)
+    assert summary["n_ops"] == 4
+    assert summary["total_wire_bytes_per_device"] > 0
+
+
+def test_perfmodel_relationships():
+    ops = [OpCount("vmm", m=128, k=768, n=768),
+           OpCount("activation", elems=128 * 768)]
+    n1 = nldpe_estimate(ops, batch=1)
+    g1 = gpu_estimate(ops, batch=1)
+    i1 = isaac_estimate(ops, batch=1)
+    assert n1.latency_s < g1.latency_s          # the paper's headline direction
+    assert n1.energy_j < i1.energy_j            # ADC elimination saves energy
+    n64 = nldpe_estimate(ops, batch=64)
+    assert n64.energy_j > n1.energy_j           # more work costs more energy
+
+
+def test_perfmodel_multichip():
+    big = [OpCount("vmm", m=16, k=8192, n=8192) for _ in range(128)]
+    n = nldpe_estimate(big)
+    assert n.breakdown["chips"] > 1
+    assert n.breakdown.get("c2c", 0) > 0
+
+
+def test_roofline_dataclass():
+    r = Roofline("a", "s", "16x16", 256, hlo_flops_per_device=1e12,
+                 hlo_bytes_per_device=1e9, collective_bytes_per_device=1e8,
+                 model_flops_global=2e14, analytic_flops_global=2.5e14)
+    row = r.row()
+    assert row["dominant"] in ("compute", "memory", "collective")
+    assert 0 < row["roofline_fraction"] <= 1.0 + 1e-9
+    assert r.step_time_s >= max(r.compute_s, r.memory_s, r.collective_s)
