@@ -11,8 +11,11 @@ from repro.core import dt
 from repro.core.acam import acam_activation
 from repro.core.crossbar import program_linear
 from repro.core.logdomain import nldpe_matmul
+from repro.core.attention import nldpe_attention
 from repro.kernels.acam_activation.ops import acam_apply
 from repro.kernels.crossbar_vmm.ops import crossbar_matmul
+from repro.kernels.dual_compute.ops import (fused_crossbar_acam,
+                                            logdomain_flash_attention)
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.nldpe_qmatmul.ops import nldpe_matmul_int8
 
@@ -44,6 +47,14 @@ def main(verbose: bool = True):
     us_k, _ = timeit(lambda: jax.block_until_ready(crossbar_matmul(xx, plan)))
     rows.append(row("kernels/crossbar_vmm(interp)", us_k, "64x256x128 A-SL"))
 
+    # fused dual-compute: one pass vs the crossbar->ACAM two-kernel chain
+    us_k, _ = timeit(lambda: jax.block_until_ready(
+        fused_crossbar_acam(xx, plan, t)))
+    us_f, _ = timeit(lambda: jax.block_until_ready(
+        acam_apply(crossbar_matmul(xx, plan), t)))
+    rows += [row("kernels/fused_crossbar_acam(interp)", us_k, "64x256x128+gelu"),
+             row("kernels/crossbar_then_acam_2pass", us_f, "64x256x128+gelu")]
+
     q = jnp.asarray(RNG.normal(size=(2, 8, 256, 64)).astype(np.float32))
     k = jnp.asarray(RNG.normal(size=(2, 2, 256, 64)).astype(np.float32))
     v = jnp.asarray(RNG.normal(size=(2, 2, 256, 64)).astype(np.float32))
@@ -53,6 +64,16 @@ def main(verbose: bool = True):
         flash_attention(q, k, v, use_ref=True)), iters=2)
     rows += [row("kernels/flash_attention(interp)", us_k, "2x8x256x64 GQA"),
              row("kernels/flash_attention_ref", us_f, "2x8x256x64 GQA")]
+
+    # streamed log-domain attention vs the materialized-score oracle
+    qs, ks, vs = q[:1, :4, :128], k[:1, :1, :128], v[:1, :1, :128]
+    us_k, _ = timeit(lambda: jax.block_until_ready(
+        logdomain_flash_attention(qs, ks, vs, bq=64, bk=64)), iters=2)
+    us_f, _ = timeit(lambda: jax.block_until_ready(
+        nldpe_attention(qs, jnp.repeat(ks, 4, 1), jnp.repeat(vs, 4, 1))),
+        iters=2)
+    rows += [row("kernels/logdomain_flash(interp)", us_k, "1x4x128x64 MQA"),
+             row("kernels/nldpe_attention_materialized", us_f, "1x4x128x64 MQA")]
 
     if verbose:
         for r in rows:

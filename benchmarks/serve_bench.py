@@ -1,0 +1,125 @@
+"""Serve-path benchmark: prefill ms and decode ms/token on the reduced
+qwen2_5_3b config, NL-DPE on/off, fused on/off, Python loop vs scan.
+
+The headline row is the scanned, buffer-donating decode loop against the
+seed per-token Python loop (same model, same shapes): the scan removes one
+jit dispatch and one full KV-cache copy per token.  ``benchmarks/run.py``
+persists these rows to BENCH_serve.json as the perf baseline for future PRs.
+
+All timings are steady-state (everything compiled/warmed before measuring);
+on this CPU host the NL-DPE numbers simulate the numerics, not the chip.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core.engine import NLDPEConfig, OFF
+from repro.launch.serve import (build_decode_step, build_generate_fn,
+                                build_prefill_step, python_loop_decode)
+from repro.models import lm
+from repro.nn.module import param_dtype
+
+from ._util import row
+
+ARCH = "qwen2_5_3b"
+BATCH, PROMPT, GEN = 2, 16, 33           # 32 measured decode steps
+
+
+def _ms(fn, iters: int = 3) -> float:
+    fn()                                  # warmup (compile + cache)
+    t0 = time.time()
+    for _ in range(iters):
+        fn()
+    return (time.time() - t0) / iters * 1e3
+
+
+def _timed_ms(fn, iters: int = 5) -> float:
+    """fn times its own region of interest and returns elapsed seconds.
+    Best-of-N: decode regions are short, so the min is the stable statistic
+    on a shared CPU host."""
+    fn()                                  # warmup (compile + cache)
+    return min(fn() for _ in range(iters)) * 1e3
+
+
+def _setup(cfg, nldpe, gen_len: int):
+    key = jax.random.key(0)
+    with param_dtype(jnp.float32):
+        params = lm.init_params(key, cfg)
+    prompts = jax.random.randint(key, (BATCH, PROMPT), 0, cfg.vocab_size)
+    prefill = jax.jit(build_prefill_step(cfg, nldpe=nldpe))
+
+    def fresh_cache():
+        cache = lm.init_model_cache(cfg, BATCH, PROMPT + gen_len,
+                                    dtype=jnp.float32)
+        logits, cache = prefill(params, cache, prompts)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+
+    return params, prompts, prefill, fresh_cache
+
+
+def bench_mode(label: str, nldpe: NLDPEConfig, gen_len: int = GEN,
+               decode_loops: bool = True):
+    cfg = get_config(ARCH, reduced=True)
+    params, prompts, prefill, fresh_cache = _setup(cfg, nldpe, gen_len)
+    rows = []
+
+    def run_prefill():
+        jax.block_until_ready(fresh_cache()[0])
+
+    rows.append(row(f"serve/prefill_us[{label}]", _ms(run_prefill) * 1e3,
+                    f"{BATCH}x{PROMPT} {ARCH}-reduced"))
+    if not decode_loops:
+        return rows
+
+    steps = gen_len - 1
+    decode = jax.jit(build_decode_step(cfg, nldpe=nldpe))
+
+    def run_python():
+        tok0, cache = fresh_cache()       # prefill outside the timed window
+        t0 = time.time()
+        gen, _ = python_loop_decode(decode, params, cache, tok0, PROMPT,
+                                    gen_len)
+        jax.block_until_ready(gen)
+        return time.time() - t0
+
+    generate = build_generate_fn(cfg, gen_len, nldpe=nldpe)
+
+    def run_scan():
+        tok0, cache = fresh_cache()       # fresh: the scan donates its cache
+        t0 = time.time()
+        gen, _ = generate(params, cache, tok0, jnp.int32(PROMPT))
+        jax.block_until_ready(gen)
+        return time.time() - t0
+
+    py_tok = _timed_ms(run_python) / steps
+    scan_tok = _timed_ms(run_scan) / steps
+    rows += [row(f"serve/decode_python_us_tok[{label}]", py_tok * 1e3,
+                 f"{steps} steps"),
+             row(f"serve/decode_scan_us_tok[{label}]", scan_tok * 1e3,
+                 f"{steps} steps"),
+             row(f"serve/scan_speedup_x[{label}]", 0.0,
+                 round(py_tok / max(scan_tok, 1e-9), 2))]
+    return rows
+
+
+def main(verbose: bool = True):
+    rows = []
+    for label, nldpe, gen_len, loops in [
+        ("off", OFF, GEN, True),
+        ("nldpe", NLDPEConfig(enabled=True), 9, True),
+        ("nldpe_fused", NLDPEConfig(enabled=True, fused_dual_compute=True),
+         5, False),                      # interpret-mode Pallas: prefill only
+    ]:
+        rows += bench_mode(label, nldpe, gen_len=gen_len, decode_loops=loops)
+    if verbose:
+        for r in rows:
+            print(f"{r['name']:44s} {r['us_per_call']:>12.1f} us  {r['derived']}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -69,8 +69,10 @@ def eval_table(lo: jax.Array, hi: jax.Array, x: jax.Array,
 def eval_acam(table: ACAMTable, x: jax.Array,
               lo: jax.Array | None = None, hi: jax.Array | None = None) -> jax.Array:
     """Convenience wrapper; pass noisy (lo, hi) to simulate device noise."""
-    lo = jnp.asarray(table.lo) if lo is None else lo
-    hi = jnp.asarray(table.hi) if hi is None else hi
+    if lo is None or hi is None:
+        dev_lo, dev_hi = table_thresholds_jnp(table)
+        lo = dev_lo if lo is None else lo
+        hi = dev_hi if hi is None else hi
     return eval_table(lo, hi, x, table.out_spec.lo, table.out_spec.step,
                       table.encoding)
 
@@ -108,7 +110,17 @@ class PiecewiseFn:
     values: np.ndarray         # (K+1,) float32
 
     def as_jnp(self):
-        return jnp.asarray(self.breakpoints), jnp.asarray(self.values)
+        """Device-resident view, uploaded once and cached on the instance —
+        repeated eager calls must not re-upload the thresholds (the serve
+        decode loop hits this every token)."""
+        dev = getattr(self, "_dev", None)
+        if dev is None:
+            # concrete even when first touched inside a jit/scan trace —
+            # a traced constant must not be cached across traces
+            with jax.ensure_compile_time_eval():
+                dev = (jnp.asarray(self.breakpoints), jnp.asarray(self.values))
+            self._dev = dev
+        return dev
 
 
 def compile_piecewise(table: ACAMTable) -> PiecewiseFn:
@@ -167,6 +179,23 @@ class ACAMUnit:
 # Default tables for the standard activation zoo (built lazily, cached).
 _TABLE_CACHE: dict[tuple, ACAMTable] = {}
 _PW_CACHE: dict[tuple, PiecewiseFn] = {}
+
+
+def table_thresholds_jnp(table: ACAMTable) -> tuple[jax.Array, jax.Array]:
+    """(lo, hi) as device arrays, uploaded once per table instance.
+
+    The ACAM simulation kernels consume thresholds every call; without this
+    cache each eager call re-uploads ~8 KB of host numpy to the device.
+    Cached on the instance (like PiecewiseFn.as_jnp) so derived tables from
+    ``padded``/``dataclasses.replace`` get their own upload and nothing is
+    pinned beyond the table's own lifetime.
+    """
+    dev = getattr(table, "_dev_thresholds", None)
+    if dev is None:
+        with jax.ensure_compile_time_eval():
+            dev = (jnp.asarray(table.lo), jnp.asarray(table.hi))
+        table._dev_thresholds = dev
+    return dev
 
 
 def get_table(name: str, bits: int = 8, encoding: str = "gray",

@@ -52,14 +52,19 @@ class ACAMTable:
         return int(sum(self.rows_per_bit))
 
     def padded(self, rows: int) -> "ACAMTable":
-        """Re-pad the row dimension to exactly ``rows`` (for fixed HW sizing)."""
+        """Re-pad the row dimension to exactly ``rows`` (for fixed HW sizing).
+
+        Shrinking is allowed only down to ``max(rows_per_bit)`` — anything
+        dropped beyond that is never-match padding, so no interval is lost.
+        """
         if rows < max(self.rows_per_bit):
             raise ValueError(
                 f"{self.name}: need {max(self.rows_per_bit)} rows, got {rows}")
         lo = np.full((self.bits, rows), _NEVER_LO, np.float32)
         hi = np.full((self.bits, rows), _NEVER_HI, np.float32)
-        lo[:, : self.lo.shape[1]] = self.lo[:, :rows] if self.lo.shape[1] >= rows else self.lo
-        hi[:, : self.hi.shape[1]] = self.hi[:, :rows] if self.hi.shape[1] >= rows else self.hi
+        keep = min(rows, self.lo.shape[1])
+        lo[:, :keep] = self.lo[:, :keep]
+        hi[:, :keep] = self.hi[:, :keep]
         return dataclasses.replace(self, lo=lo, hi=hi)
 
 

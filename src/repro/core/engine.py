@@ -8,10 +8,16 @@ The three hardware modes map to framework behavior:
 * acam-only    : crossbars hold identity -> vector-ALU (log/exp/softmax ops).
 
 Model code never branches on the mode directly; it calls the dispatchers
-here (``activation``, ``softmax``, ``dmmul``, ``elementwise_mul``) which pick
-the NL-DPE path or the FP reference according to the config.  That keeps the
-technique a first-class, flag-switchable feature across all ten
-architectures.
+here (``activation``, ``softmax``, ``dmmul``, ``elementwise_mul``,
+``linear_activation``, ``attention``) which pick the NL-DPE path or the FP
+reference according to the config.  That keeps the technique a first-class,
+flag-switchable feature across all ten architectures.
+
+``fused_dual_compute`` additionally routes Linear+activation pairs and
+maskless attention through the fused Pallas pipeline of
+``kernels/dual_compute`` (one crossbar->ACAM pass, streamed log-domain
+flash) — the ADC-free dataflow of the paper as one kernel.  The two-kernel
+path stays available as the correctness oracle (DESIGN.md §4).
 """
 from __future__ import annotations
 
@@ -36,11 +42,26 @@ class NLDPEConfig:
     acam_activations: bool = True
     logdomain_dmmul: bool = True
     acam_softmax: bool = True
+    # fuse crossbar->ACAM / attention into single Pallas passes (the ADC-free
+    # dataflow); off = the two-kernel oracle path with identical numerics
+    fused_dual_compute: bool = False
 
     def activation(self, x: jax.Array, name: str) -> jax.Array:
         if self.enabled and self.acam_activations:
             return acam_activation(x, name, bits=self.bits)
         return JNP_FUNCTIONS[name](x)
+
+    def linear_activation(self, x: jax.Array, w: jax.Array,
+                          name: str) -> jax.Array:
+        """act(x @ w) — one fused crossbar->ACAM pass when configured.
+
+        The fused path keeps the pre-activation in VMEM (never materialized);
+        the unfused path is the matmul-then-dispatch oracle it must match.
+        """
+        if (self.enabled and self.acam_activations and self.fused_dual_compute):
+            from ..kernels.dual_compute.ops import fused_linear_acam
+            return fused_linear_acam(x, w, name, bits=self.bits).astype(x.dtype)
+        return self.activation(x @ w.astype(x.dtype), name)
 
     def softmax(self, x: jax.Array, axis: int = -1) -> jax.Array:
         if self.enabled and self.acam_softmax:
@@ -58,6 +79,19 @@ class NLDPEConfig:
         return a * b
 
     def attention(self, q, k, v, causal=True, mask=None):
+        """k/v may carry fewer (grouped) heads than q; the fused kernel
+        consumes them as-is, the materialized paths repeat them here."""
+        if (self.enabled and self.logdomain_dmmul
+                and self.fused_dual_compute and mask is None):
+            # streamed Fig 6c pipeline; arbitrary masks fall through to the
+            # materialized oracle below
+            from ..kernels.dual_compute.ops import logdomain_flash_attention
+            return logdomain_flash_attention(q, k, v, self.logdomain,
+                                             causal=causal)
+        if k.shape[1] != q.shape[1]:
+            group = q.shape[1] // k.shape[1]
+            k = jnp.repeat(k, group, axis=1)
+            v = jnp.repeat(v, group, axis=1)
         if self.enabled and self.logdomain_dmmul:
             return nldpe_attention(q, k, v, self.logdomain, causal=causal,
                                    mask=mask)
@@ -66,3 +100,4 @@ class NLDPEConfig:
 
 OFF = NLDPEConfig(enabled=False)
 ON = NLDPEConfig(enabled=True)
+FUSED = NLDPEConfig(enabled=True, fused_dual_compute=True)

@@ -23,12 +23,17 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .. import resolve_interpret
 
-def _acam_kernel(x_ref, lo_ref, hi_ref, o_ref, *, bits: int,
-                 out_lo: float, out_step: float):
-    x = x_ref[...]                                     # (bm, bn)
-    lo = lo_ref[...]                                   # (bits, rows)
-    hi = hi_ref[...]
+
+def acam_decode_tile(x, lo, hi, bits: int, out_lo: float, out_step: float):
+    """Interval match + Gray decode of one VMEM tile.
+
+    x: (bm, bn); lo/hi: (bits, rows).  Materializes a (bm, bn, bits, rows)
+    compare intermediate, so callers bound bm (block_rows here, strip loops
+    in the fused dual_compute kernel) to keep it within VMEM.  Shared by
+    this kernel and kernels/dual_compute so the two stay bit-identical.
+    """
     xe = x[..., None, None]                            # (bm, bn, 1, 1)
     m = (xe >= lo) & (xe <= hi)                        # (bm, bn, bits, rows)
     g = jnp.any(m, axis=-1).astype(jnp.float32)        # Gray planes, LSB first
@@ -38,7 +43,13 @@ def _acam_kernel(x_ref, lo_ref, hi_ref, o_ref, *, bits: int,
     for i in range(bits - 1, -1, -1):
         b = jnp.abs(b - g[..., i])                     # XOR on {0,1} floats
         code = code + b * (2.0 ** i)
-    o_ref[...] = code * out_step + out_lo
+    return code * out_step + out_lo
+
+
+def _acam_kernel(x_ref, lo_ref, hi_ref, o_ref, *, bits: int,
+                 out_lo: float, out_step: float):
+    o_ref[...] = acam_decode_tile(x_ref[...], lo_ref[...], hi_ref[...],
+                                  bits, out_lo, out_step)
 
 
 @functools.partial(jax.jit, static_argnames=("bits", "out_lo", "out_step",
@@ -46,7 +57,7 @@ def _acam_kernel(x_ref, lo_ref, hi_ref, o_ref, *, bits: int,
 def acam_activation_kernel(x: jax.Array, lo: jax.Array, hi: jax.Array,
                            bits: int = 8, out_lo: float = 0.0,
                            out_step: float = 1.0, block_rows: int = 8,
-                           interpret: bool = True) -> jax.Array:
+                           interpret: bool | None = None) -> jax.Array:
     """x: (R, 128k) f32 2-D (callers flatten/pad), lo/hi: (bits, rows)."""
     r, c = x.shape
     assert r % block_rows == 0, (r, block_rows)
@@ -59,5 +70,5 @@ def acam_activation_kernel(x: jax.Array, lo: jax.Array, hi: jax.Array,
                   table_spec, table_spec],
         out_specs=pl.BlockSpec((block_rows, c), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((r, c), jnp.float32),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(x, lo, hi)

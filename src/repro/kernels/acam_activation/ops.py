@@ -13,10 +13,10 @@ _LANE = 128
 
 
 def acam_apply(x: jax.Array, table: ACAMTable, block_rows: int = 8,
-               interpret: bool = True, use_ref: bool = False) -> jax.Array:
+               interpret: bool | None = None, use_ref: bool = False) -> jax.Array:
     """Flatten -> pad to (rows, 128) tiles -> kernel -> restore shape."""
-    lo = jnp.asarray(table.lo)
-    hi = jnp.asarray(table.hi)
+    from ...core.acam import table_thresholds_jnp
+    lo, hi = table_thresholds_jnp(table)
     out_lo = float(table.out_spec.lo)
     out_step = float(table.out_spec.step)
     if use_ref:

@@ -23,6 +23,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .. import resolve_interpret
+
 
 def _xbar_kernel(x_ref, gp_ref, gn_ref, rp_ref, rn_ref, o_ref, *,
                  inv_g_ratio: float, res_gain: float):
@@ -43,7 +45,7 @@ def crossbar_vmm_kernel(x: jax.Array, g_pos: jax.Array, g_neg: jax.Array,
                         g_pos_res: jax.Array, g_neg_res: jax.Array,
                         inv_g_ratio: float, res_gain: float = 10.0,
                         bm: int = 128, bn: int = 128, bk: int = 128,
-                        interpret: bool = True) -> jax.Array:
+                        interpret: bool | None = None) -> jax.Array:
     m, k = x.shape
     k2, n = g_pos.shape
     assert k == k2 and m % bm == 0 and n % bn == 0 and k % bk == 0
@@ -56,5 +58,5 @@ def crossbar_vmm_kernel(x: jax.Array, g_pos: jax.Array, g_neg: jax.Array,
                   g_spec, g_spec, g_spec, g_spec],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(x, g_pos, g_neg, g_pos_res, g_neg_res)

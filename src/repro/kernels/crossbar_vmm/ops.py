@@ -17,7 +17,7 @@ def _pad2(a, pr, pc):
 def crossbar_matmul(x: jax.Array, plan: SlicedWeights,
                     rng: jax.Array | None = None,
                     model: NoiseModel = DEFAULT,
-                    interpret: bool = True,
+                    interpret: bool | None = None,
                     use_ref: bool = False) -> jax.Array:
     """y = x @ W_eff with optional per-call read noise applied to the plan.
 

@@ -1,0 +1,32 @@
+"""Pure-jnp oracles for the fused dual-compute kernels: the two-kernel
+composition the fusion must match (crossbar_vmm -> acam_activation) and the
+materialized log-domain attention pipeline."""
+from __future__ import annotations
+
+import jax
+
+from ...core.attention import nldpe_attention
+from ...core.logdomain import DEFAULT_CFG, LogDomainConfig
+from ..acam_activation.ref import acam_activation_ref
+from ..crossbar_vmm.ref import crossbar_vmm_ref
+
+
+def fused_crossbar_acam_ref(x, g_pos, g_neg, g_pos_res, g_neg_res,
+                            inv_g_ratio, lo, hi, bits: int = 8,
+                            out_lo: float = 0.0, out_step: float = 1.0,
+                            res_gain: float = 10.0) -> jax.Array:
+    y = crossbar_vmm_ref(x, g_pos, g_neg, g_pos_res, g_neg_res,
+                         inv_g_ratio, res_gain)
+    return acam_activation_ref(y, lo, hi, bits, out_lo, out_step)
+
+
+def logdomain_flash_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                        cfg: LogDomainConfig = DEFAULT_CFG,
+                        causal: bool = True) -> jax.Array:
+    """Materialized-scores oracle (the full (Lq, Lk) tensor through
+    nldpe_log_softmax); GQA heads repeated on entry like nldpe_attention."""
+    group = q.shape[1] // k.shape[1]
+    if group > 1:
+        k = k.repeat(group, axis=1)
+        v = v.repeat(group, axis=1)
+    return nldpe_attention(q, k, v, cfg, causal=causal)

@@ -22,6 +22,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .. import resolve_interpret
+
 _NEG_INF = float("-inf")
 
 
@@ -73,7 +75,7 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, *,
 @functools.partial(jax.jit, static_argnames=("causal", "bq", "bk", "interpret"))
 def flash_attention_kernel(q: jax.Array, k: jax.Array, v: jax.Array,
                            causal: bool = True, bq: int = 128, bk: int = 128,
-                           interpret: bool = True) -> jax.Array:
+                           interpret: bool | None = None) -> jax.Array:
     """q: (B, H, Lq, D); k, v: (B, Hkv, Lk, D); H % Hkv == 0."""
     b, h, lq, d = q.shape
     _, hkv, lk, _ = k.shape
@@ -96,6 +98,6 @@ def flash_attention_kernel(q: jax.Array, k: jax.Array, v: jax.Array,
         out_shape=[jax.ShapeDtypeStruct((b, h, lq, d), jnp.float32),
                    jax.ShapeDtypeStruct((b, h, lq), jnp.float32),
                    jax.ShapeDtypeStruct((b, h, lq), jnp.float32)],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(q, k, v)
     return out[0]

@@ -11,25 +11,19 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from .. import divisor_block
 from .kernel import flash_attention_kernel
 from .ref import flash_attention_ref
 
 
-def _divisor_block(n: int, target: int) -> int:
-    for b in range(min(target, n), 0, -1):
-        if n % b == 0:
-            return b
-    return 1
-
-
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                     causal: bool = True, bq: int = 128, bk: int = 128,
-                    interpret: bool = True, use_ref: bool = False) -> jax.Array:
+                    interpret: bool | None = None, use_ref: bool = False) -> jax.Array:
     if use_ref:
         return flash_attention_ref(q, k, v, causal)
     lq, lk = q.shape[2], k.shape[2]
-    bq_eff = _divisor_block(lq, bq)
-    bk_eff = _divisor_block(lk, bk)
+    bq_eff = divisor_block(lq, bq)
+    bk_eff = divisor_block(lk, bk)
     out = flash_attention_kernel(q.astype(jnp.float32),
                                  k.astype(jnp.float32),
                                  v.astype(jnp.float32),

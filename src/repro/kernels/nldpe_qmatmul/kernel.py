@@ -24,6 +24,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .. import resolve_interpret
+
 
 def _qmm_kernel(ac_ref, as_ref, bc_ref, bs_ref, o_ref, *, step: float,
                 log_lo: float):
@@ -49,7 +51,7 @@ def nldpe_qmatmul_kernel(a_code: jax.Array, a_sign: jax.Array,
                          b_code: jax.Array, b_sign: jax.Array,
                          step: float, log_lo: float,
                          bm: int = 128, bn: int = 128, bk: int = 128,
-                         interpret: bool = True) -> jax.Array:
+                         interpret: bool | None = None) -> jax.Array:
     """a_*: (M, K) int8, b_*: (K, N) int8 -> (M, N) f32."""
     m, k = a_code.shape
     k2, n = b_code.shape
@@ -62,5 +64,5 @@ def nldpe_qmatmul_kernel(a_code: jax.Array, a_sign: jax.Array,
         in_specs=[a_spec, a_spec, b_spec, b_spec],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(a_code, a_sign, b_code, b_sign)

@@ -22,7 +22,7 @@ def encode_int8(x: jax.Array, cfg: LogDomainConfig = DEFAULT_CFG):
 
 def nldpe_matmul_int8(a: jax.Array, b: jax.Array,
                       cfg: LogDomainConfig = DEFAULT_CFG,
-                      interpret: bool = True,
+                      interpret: bool | None = None,
                       use_ref: bool = False) -> jax.Array:
     """C = A @ B through the NL-DPE log-quantized path (2-D operands).
 

@@ -1,9 +1,15 @@
-"""Serving steps (prefill / decode) + a batched-request CPU demo driver.
+"""Serving steps (prefill / decode / scanned generate) + a CPU demo driver.
 
 ``build_prefill_step``/``build_decode_step`` are the functions the dry-run
-lowers for the inference shapes; the CLI driver below runs a reduced config
-end-to-end (prefill a batch of prompts, then decode with the KV cache),
-optionally through the NL-DPE numerics mode.
+lowers for the inference shapes.  ``build_generate_fn`` is the production
+decode loop: the whole greedy generation is one ``jax.lax.scan`` inside one
+jit, with the KV cache donated so decode buffers update in place — no
+per-token Python dispatch, no per-token cache copy (DESIGN.md §5).  The old
+per-token Python loop survives as ``python_loop_decode``, the baseline that
+``benchmarks/serve_bench.py`` measures the scan against.
+
+The CLI driver below runs a reduced config end-to-end (prefill a batch of
+prompts, then decode), optionally through the NL-DPE numerics mode.
 """
 from __future__ import annotations
 
@@ -42,6 +48,51 @@ def build_decode_step(cfg, *, nldpe: NLDPEConfig = OFF, batch_groups: int = 1):
     return decode
 
 
+def build_generate_fn(cfg, gen_len: int, *, nldpe: NLDPEConfig = OFF,
+                      batch_groups: int = 1, donate_cache: bool = True,
+                      donate_params: bool = False):
+    """Jit'd greedy decode of ``gen_len`` tokens as a single lax.scan.
+
+    generate(params, cache, tok0, start_pos) -> (tokens (B, gen_len), cache).
+
+    The cache is donated by default: XLA aliases the input KV buffers to the
+    output, so each scan step's dynamic_update_slice happens in place instead
+    of copying the whole cache per token.  ``donate_params`` additionally
+    donates the parameter buffers — only safe for one-shot calls (the caller
+    loses them), so it is opt-in.
+    """
+    def generate(params, cache, tok0, start_pos):
+        def step(carry, i):
+            tok, cache = carry
+            logits, cache = lm.decode_step(params, cfg, tok, start_pos + i,
+                                           cache, nldpe=nldpe,
+                                           batch_groups=batch_groups)
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            return (nxt, cache), nxt
+
+        steps = jnp.arange(gen_len - 1, dtype=jnp.int32)
+        (_, cache), toks = jax.lax.scan(step, (tok0, cache), steps)
+        return jnp.concatenate([tok0[:, None], toks.T], axis=1), cache
+
+    donate = tuple(argnum for argnum, on in ((1, donate_cache),
+                                             (0, donate_params)) if on)
+    return jax.jit(generate, donate_argnums=donate)
+
+
+def python_loop_decode(decode_fn, params, cache, tok0, start_pos: int,
+                       gen_len: int):
+    """The seed per-token Python loop (kept as the serve_bench baseline):
+    one jit dispatch and one full cache copy per generated token."""
+    tok = tok0
+    out = [tok]
+    for i in range(gen_len - 1):
+        logits, cache = decode_fn(params, cache, tok,
+                                  jnp.int32(start_pos + i))
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        out.append(tok)
+    return jnp.stack(out, axis=1), cache
+
+
 def run(argv=None):
     p = argparse.ArgumentParser()
     p.add_argument("--arch", default="qwen2_5_3b")
@@ -49,11 +100,17 @@ def run(argv=None):
     p.add_argument("--prompt-len", type=int, default=32)
     p.add_argument("--gen-len", type=int, default=32)
     p.add_argument("--nldpe", action="store_true")
+    p.add_argument("--fused", action="store_true",
+                   help="NL-DPE fused dual-compute pipeline")
+    p.add_argument("--python-loop", action="store_true",
+                   help="seed-style per-token Python decode loop "
+                        "(baseline; default is the scanned generate fn)")
     p.add_argument("--seed", type=int, default=0)
     args = p.parse_args(argv)
 
     cfg = get_config(args.arch, reduced=True)
-    nldpe = NLDPEConfig(enabled=args.nldpe)
+    nldpe = NLDPEConfig(enabled=args.nldpe or args.fused,
+                        fused_dual_compute=args.fused)
     key = jax.random.key(args.seed)
     from ..nn.module import param_dtype
     with param_dtype(jnp.float32):
@@ -64,24 +121,27 @@ def run(argv=None):
                                  cfg.vocab_size)
 
     prefill = jax.jit(build_prefill_step(cfg, nldpe=nldpe))
-    decode = jax.jit(build_decode_step(cfg, nldpe=nldpe))
 
     t0 = time.time()
     last_logits, cache = prefill(params, cache, prompts)
+    jax.block_until_ready(last_logits)
     print(f"[serve] prefill {args.batch}x{args.prompt_len} in "
           f"{(time.time() - t0) * 1e3:.0f} ms")
     tok = jnp.argmax(last_logits, axis=-1).astype(jnp.int32)
-    out = [tok]
     t0 = time.time()
-    for i in range(args.gen_len - 1):
-        logits, cache = decode(params, cache, tok,
-                               jnp.int32(args.prompt_len + i))
-        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        out.append(tok)
+    if args.python_loop:
+        decode = jax.jit(build_decode_step(cfg, nldpe=nldpe))
+        gen, cache = python_loop_decode(decode, params, cache, tok,
+                                        args.prompt_len, args.gen_len)
+    else:
+        generate = build_generate_fn(cfg, args.gen_len, nldpe=nldpe)
+        gen, cache = generate(params, cache, tok,
+                              jnp.int32(args.prompt_len))
+    gen = jax.block_until_ready(gen)
     dt = time.time() - t0
-    gen = jnp.stack(out, axis=1)
     print(f"[serve] decoded {args.gen_len - 1} steps in {dt * 1e3:.0f} ms "
-          f"({dt / max(args.gen_len - 1, 1) * 1e3:.1f} ms/tok); "
+          f"({dt / max(args.gen_len - 1, 1) * 1e3:.1f} ms/tok, "
+          f"{'python loop' if args.python_loop else 'scan'}); "
           f"sample row: {gen[0, :12].tolist()}")
     return gen
 

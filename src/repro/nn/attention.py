@@ -348,13 +348,19 @@ def attn_apply(p, s: AttnSpec, x: jax.Array, *, positions: jax.Array,
             o = decode_attention(q, cache, pos, s, s.softcap)
     else:
         if nldpe.enabled:
-            kr = jnp.repeat(k, s.group, axis=1)
-            vr = jnp.repeat(v, s.group, axis=1)
-            msk = _mask(positions if positions.ndim > 1 else positions[None, :],
-                        positions if positions.ndim > 1 else positions[None, :],
-                        causal=True, window=s.window, prefix_len=prefix_len)
-            o = nldpe.attention(q, kr, vr, causal=False,
-                                mask=msk[:, None] if msk.ndim == 3 else msk)
+            if s.window is None and prefix_len is None and positions.ndim == 1:
+                # plain causal: skip the materialized mask so the dispatcher
+                # can stream it through the fused log-domain flash kernel
+                # (GQA-aware — K/V stay grouped, no repeat)
+                o = nldpe.attention(q, k, v, causal=True, mask=None)
+            else:
+                kr = jnp.repeat(k, s.group, axis=1)
+                vr = jnp.repeat(v, s.group, axis=1)
+                msk = _mask(positions if positions.ndim > 1 else positions[None, :],
+                            positions if positions.ndim > 1 else positions[None, :],
+                            causal=True, window=s.window, prefix_len=prefix_len)
+                o = nldpe.attention(q, kr, vr, causal=False,
+                                    mask=msk[:, None] if msk.ndim == 3 else msk)
         elif s.window is not None and seq > s.window:
             o = banded_attention(q, k, v, window=s.window, softcap=s.softcap)
         else:

@@ -20,14 +20,16 @@ def mlp_init(key, d_model: int, d_ff: int, gated: bool = True):
 
 def mlp_apply(p, x: jax.Array, act: str = "silu",
               nldpe: NLDPEConfig = OFF) -> jax.Array:
-    h = x @ p["up"].astype(x.dtype)
-    h = shard(h, "batch", None, "mlp")
     if "gate" in p:
-        g = x @ p["gate"].astype(x.dtype)
+        h = x @ p["up"].astype(x.dtype)
+        h = shard(h, "batch", None, "mlp")
+        # gate Linear + ACAM activation fuse into one crossbar pass under
+        # fused_dual_compute; the gate*h product is a DMMul either way
+        g = nldpe.linear_activation(x, p["gate"], act)
         g = shard(g, "batch", None, "mlp")
-        # gate activation runs on the ACAM; the gate*h product is a DMMul
-        h = nldpe.elementwise_mul(nldpe.activation(g, act), h)
+        h = nldpe.elementwise_mul(g, h)
     else:
-        h = nldpe.activation(h, act)
+        h = nldpe.linear_activation(x, p["up"], act)
+        h = shard(h, "batch", None, "mlp")
     y = h.astype(x.dtype) @ p["down"].astype(x.dtype)
     return shard(y, "batch", None, "act_embed")

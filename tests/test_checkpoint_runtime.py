@@ -11,6 +11,8 @@ from repro.parallel.compression import (bytes_scale, compress, decompress,
                                         ef_compress_step)
 from repro.runtime.fault_tolerance import resilient_loop
 
+pytestmark = pytest.mark.slow  # distributed/model e2e; excluded from the CI fast subset
+
 
 def test_save_restore_roundtrip(tmp_path):
     m = CheckpointManager(str(tmp_path))

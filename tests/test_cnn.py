@@ -12,6 +12,8 @@ from repro.models import cnn
 from repro.nn.module import param_dtype
 from repro.optim import adamw
 
+pytestmark = pytest.mark.slow  # distributed/model e2e; excluded from the CI fast subset
+
 CFG = cnn.CNNConfig(stage_channels=(8, 16), blocks_per_stage=1, num_classes=4)
 
 

@@ -3,6 +3,9 @@ import os
 import subprocess
 import sys
 import textwrap
+import pytest
+
+pytestmark = pytest.mark.slow  # distributed/model e2e; excluded from the CI fast subset
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 

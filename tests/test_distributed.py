@@ -9,6 +9,8 @@ import textwrap
 
 import pytest
 
+pytestmark = pytest.mark.slow  # distributed/model e2e; excluded from the CI fast subset
+
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 

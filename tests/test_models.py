@@ -12,6 +12,8 @@ from repro.models import (decode_step, forward, init_model_cache, init_params,
                           lm_loss)
 from repro.nn.module import param_dtype
 
+pytestmark = pytest.mark.slow  # distributed/model e2e; excluded from the CI fast subset
+
 
 @pytest.mark.parametrize("arch", ARCH_NAMES)
 def test_arch_forward_shapes_and_finite(arch):
