@@ -1,0 +1,62 @@
+"""Warn-only serve-throughput regression check for CI.
+
+    PYTHONPATH=src python -m benchmarks.check_serve_regression
+
+Re-runs the continuous-vs-lockstep trace cell of ``serve_bench`` and diffs
+its throughput rows against the committed ``BENCH_serve.json`` baseline.
+Always exits 0: CI hosts are noisy shared machines, so a slowdown here is a
+*signal to a reviewer*, never a red build.  Deviations beyond ``TOLERANCE``
+(relative) are printed as ``::warning`` lines, which GitHub Actions surfaces
+on the run summary.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+TOLERANCE = 0.35          # |relative change| that triggers a warning
+ROWS = ("serve/cb_tok_per_s[off]", "serve/lockstep_tok_per_s[off]",
+        "serve/cb_speedup_x[off]")
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def main() -> int:
+    path = os.path.join(_REPO, "BENCH_serve.json")
+    if not os.path.exists(path):
+        print(f"::warning::no committed baseline at {path}; skipping diff")
+        return 0
+    with open(path) as f:
+        baseline = {r["name"]: r for r in json.load(f)["rows"]}
+
+    from benchmarks.serve_bench import bench_continuous
+    fresh = {r["name"]: r for r in bench_continuous("off")}
+
+    for name in ROWS:
+        if name not in baseline:
+            print(f"::warning::row {name} missing from committed baseline")
+            continue
+        # throughput rows carry tok/s (or the speedup factor) in "derived"
+        old = float(baseline[name]["derived"])
+        new = float(fresh[name]["derived"])
+        rel = (new - old) / old if old else 0.0
+        status = "OK"
+        if rel < -TOLERANCE:
+            status = "SLOWER"
+            print(f"::warning::serve throughput regression: {name} "
+                  f"{old:.1f} -> {new:.1f} ({rel:+.0%})")
+        elif rel > TOLERANCE:
+            status = "FASTER"
+        print(f"{name:36s} baseline {old:10.2f}  fresh {new:10.2f} "
+              f"({rel:+.0%}) {status}")
+
+    speedup = float(fresh["serve/cb_speedup_x[off]"]["derived"])
+    if speedup < 2.0:
+        print(f"::warning::continuous-batching speedup {speedup:.2f}x fell "
+              f"below the 2x acceptance bar (noise or regression)")
+    return 0      # warn-only by design
+
+
+if __name__ == "__main__":
+    sys.exit(main())

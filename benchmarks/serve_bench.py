@@ -1,10 +1,20 @@
 """Serve-path benchmark: prefill ms and decode ms/token on the reduced
-qwen2_5_3b config, NL-DPE on/off, fused on/off, Python loop vs scan.
+qwen2_5_3b config, NL-DPE on/off, fused on/off, Python loop vs scan — plus
+continuous batching vs lockstep batching on a mixed Poisson trace.
 
-The headline row is the scanned, buffer-donating decode loop against the
-seed per-token Python loop (same model, same shapes): the scan removes one
-jit dispatch and one full KV-cache copy per token.  ``benchmarks/run.py``
-persists these rows to BENCH_serve.json as the perf baseline for future PRs.
+The headline rows:
+
+* the scanned, buffer-donating decode loop against the seed per-token
+  Python loop (same model, same shapes): the scan removes one jit dispatch
+  and one full KV-cache copy per token;
+* the continuous-batching engine against the strongest lockstep baseline
+  (scanned generate over fixed batches) on the same Poisson arrival trace
+  with mixed prompt/gen lengths: lockstep pays ``batches x max_gen`` decode
+  steps for ``sum(gen_i)`` useful tokens, the slot engine retires each
+  sequence the tick it finishes.
+
+``benchmarks/run.py`` persists these rows to BENCH_serve.json as the perf
+baseline future PRs (and the warn-only CI diff) compare against.
 
 All timings are steady-state (everything compiled/warmed before measuring);
 on this CPU host the NL-DPE numbers simulate the numerics, not the chip.
@@ -13,11 +23,14 @@ from __future__ import annotations
 
 import time
 
+import numpy as np
+
 import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.core.engine import NLDPEConfig, OFF
+from repro.launch.engine import Request, ServeEngine
 from repro.launch.serve import (build_decode_step, build_generate_fn,
                                 build_prefill_step, python_loop_decode)
 from repro.models import lm
@@ -27,6 +40,24 @@ from ._util import row
 
 ARCH = "qwen2_5_3b"
 BATCH, PROMPT, GEN = 2, 16, 33           # 32 measured decode steps
+
+# Poisson trace for the continuous-vs-lockstep cell: arrivals ~Poisson(1)
+# ticks apart, short prompts/gens with a heavy tail (the traffic shape that
+# starves lockstep batching: every batch pays max_prompt prefill and
+# max_gen decode for its slowest member).  This cell uses a larger reduced
+# model (4L x 256d) than the microbench rows: at 64d a decode step costs
+# less than its Python dispatch, so the measurement would compare dispatch
+# overheads instead of the scheduling policies under test.
+TRACE_N, TRACE_SLOTS, TRACE_MAX_LEN = 48, 6, 104
+TRACE_TAIL_GEN = 80                      # the 15% heavy tail
+TRACE_BLOCK, TRACE_CHUNK = 8, 24
+
+
+def _trace_cfg():
+    import dataclasses
+    return dataclasses.replace(
+        get_config(ARCH, reduced=True), n_layers=4, d_model=256, n_heads=8,
+        n_kv_heads=2, d_ff=512, vocab_size=1024)
 
 
 def _ms(fn, iters: int = 3) -> float:
@@ -106,6 +137,92 @@ def bench_mode(label: str, nldpe: NLDPEConfig, gen_len: int = GEN,
     return rows
 
 
+def poisson_trace(rng, n: int):
+    """Staggered arrivals, varied prompt/gen lengths, heavy-tailed gens."""
+    reqs, t = [], 0
+    for i in range(n):
+        t += int(rng.poisson(1))
+        plen = 24 if rng.random() < 0.1 else int(rng.integers(4, 13))
+        gen = (TRACE_TAIL_GEN if rng.random() < 0.15
+               else int(rng.integers(2, 9)))
+        reqs.append(Request(
+            rid=i, tokens=tuple(int(x) for x in rng.integers(0, 256, plen)),
+            max_new_tokens=gen, arrival=t))
+    return reqs
+
+
+def _shift(reqs, base: int):
+    return [Request(rid=r.rid, tokens=r.tokens,
+                    max_new_tokens=r.max_new_tokens, arrival=base + r.arrival)
+            for r in reqs]
+
+
+def _lockstep_serve(cfg, params, reqs, slots: int):
+    """Strongest lockstep baseline: fixed-shape batches of ``slots``
+    requests, whole-batch prefill at the padded max prompt, one compiled
+    scan-generate of the trace-max gen length for every batch."""
+    pmax = max(len(r.tokens) for r in reqs)
+    gmax = max(r.max_new_tokens for r in reqs)
+    prefill = jax.jit(build_prefill_step(cfg))
+    generate = build_generate_fn(cfg, gmax, max_len=pmax + gmax)
+    batches = [reqs[i:i + slots] for i in range(0, len(reqs), slots)]
+
+    def serve_batch(batch):
+        toks = np.zeros((slots, pmax), np.int32)     # fixed shape: pad the
+        for j, r in enumerate(batch):                # trailing partial batch
+            toks[j, :len(r.tokens)] = r.tokens
+        cache = lm.init_model_cache(cfg, slots, pmax + gmax,
+                                    dtype=jnp.float32)
+        logits, cache = prefill(params, cache, jnp.asarray(toks))
+        tok0 = jnp.argmax(logits, -1).astype(jnp.int32)
+        gen, _ = generate(params, cache, tok0, jnp.int32(pmax))
+        return gen
+
+    jax.block_until_ready(serve_batch(batches[0]))   # warm the jits
+    t0 = time.time()
+    for b in batches:
+        jax.block_until_ready(serve_batch(b))
+    return time.time() - t0
+
+
+def bench_continuous(label: str, nldpe: NLDPEConfig = OFF):
+    cfg = _trace_cfg()
+    key = jax.random.key(0)
+    with param_dtype(jnp.float32):
+        params = lm.init_params(key, cfg)
+    rng = np.random.default_rng(42)
+    reqs = poisson_trace(rng, TRACE_N)
+    useful = sum(r.max_new_tokens for r in reqs)
+
+    eng = ServeEngine(cfg, params, max_slots=TRACE_SLOTS,
+                      max_len=TRACE_MAX_LEN, prefill_chunk=TRACE_CHUNK,
+                      decode_block=TRACE_BLOCK, nldpe=nldpe)
+    eng.run(poisson_trace(rng, 6))                   # warm the jits
+
+    def run_cb():
+        shifted = _shift(reqs, eng.tick)
+        t0 = time.time()
+        comps = eng.run(shifted)
+        dt = time.time() - t0
+        assert sum(len(c.tokens) for c in comps) == useful
+        return dt
+
+    # interleaved best-of-3: decorrelates host drift between the two serves
+    cb_s, ls_s = float("inf"), float("inf")
+    for _ in range(3):
+        cb_s = min(cb_s, run_cb())
+        ls_s = min(ls_s, _lockstep_serve(cfg, params, reqs, TRACE_SLOTS))
+    cb_tps, ls_tps = useful / cb_s, useful / ls_s
+    return [
+        row(f"serve/cb_tok_per_s[{label}]", cb_s / useful * 1e6,
+            round(cb_tps, 1)),
+        row(f"serve/lockstep_tok_per_s[{label}]", ls_s / useful * 1e6,
+            round(ls_tps, 1)),
+        row(f"serve/cb_speedup_x[{label}]", 0.0,
+            round(cb_tps / max(ls_tps, 1e-9), 2)),
+    ]
+
+
 def main(verbose: bool = True):
     rows = []
     for label, nldpe, gen_len, loops in [
@@ -115,6 +232,7 @@ def main(verbose: bool = True):
          5, False),                      # interpret-mode Pallas: prefill only
     ]:
         rows += bench_mode(label, nldpe, gen_len=gen_len, decode_loops=loops)
+    rows += bench_continuous("off")
     if verbose:
         for r in rows:
             print(f"{r['name']:44s} {r['us_per_call']:>12.1f} us  {r['derived']}")

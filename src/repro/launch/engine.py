@@ -1,0 +1,441 @@
+"""Continuous-batching serve engine: slot-based KV cache + scheduler.
+
+The lockstep server in ``launch/serve.py`` generates one fixed-shape batch:
+every request prefills together, decodes together, and finishes together.
+This module replaces that with a *server* (DESIGN.md §5):
+
+* **Slots** — the KV cache is one slotted buffer of ``max_slots`` rows
+  (``lm.init_model_cache(..., slotted=True)``), each row an independent
+  sequence with its own position track.  Admission, decoding, and eviction
+  never change any array shape, so nothing recompiles as traffic churns.
+* **Admission / chunked prefill** — requests admitted in the same wave
+  prefill *together, in place*: their slots' position tracks are reset,
+  then fixed-size ``(max_slots, prefill_chunk)`` chunk calls run
+  ``mode="chunk"`` attention over the shared cache with per-slot write
+  masks (each chunk's queries attend to the whole per-slot cache under
+  validity masking, so any chunk offset is correct), and finally padded
+  tail positions are trimmed back to never-valid.  Chunking bounds both
+  compile count (one shape) and per-admission latency; batching the wave
+  keeps admission cost closer to one batched prefill than N sequential
+  ones.
+* **Decode** — one jit'd ``lax.scan`` of ``decode_block`` steps runs over
+  *all* slots each tick; per-slot ``write_mask`` freezes finished/empty
+  slots bit-for-bit, and per-slot positions keep staggered sequences
+  independent.  Cross-slot leakage is structurally impossible: every slot
+  reads and writes only its own cache row.
+* **Sampling** — per-slot greedy / temperature / top-k
+  (``launch/sampling.py``); sampled randomness depends only on
+  (request seed, position), so outputs are independent of slot placement
+  and co-tenants.
+* **Eviction** — finishing a slot just marks it free; the next admission
+  resets the row's position track, so no cleanup pass is needed.
+
+Determinism contract (asserted in tests/test_serve_engine.py and
+tests/test_engine_properties.py): a request served under any traffic mix
+yields exactly the tokens of the same request served alone.  In OFF
+numerics this also matches the legacy lockstep path (whole-prompt prefill +
+``python_loop_decode``) exactly; in NL-DPE modes the *decode* numerics are
+identical but whole-prompt prefill anchors its log-sum ACAM grid to the
+prompt length while chunked prefill anchors to the cache length, so
+prefill logits differ within quantization LSBs between the two prefill
+styles (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+import jax.tree_util as jtu
+
+from ..core.engine import NLDPEConfig, OFF
+from ..models import lm
+from ..models.lm import ATTN_TYPES
+from .sampling import request_key, sample_tokens, step_keys
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    """One generation request entering the scheduler."""
+
+    rid: int
+    tokens: tuple[int, ...]            # prompt token ids, length >= 1
+    max_new_tokens: int = 16           # total generated tokens (incl. first)
+    temperature: float = 0.0           # <= 0 -> greedy
+    top_k: int = 0                     # 0 -> disabled
+    seed: int | None = None            # defaults to rid
+    arrival: int = 0                   # arrival time in decode ticks
+
+
+@dataclasses.dataclass
+class Completion:
+    """Scheduler output for one finished request."""
+
+    rid: int
+    prompt: tuple[int, ...]
+    tokens: list[int]                  # generated tokens, length <= max_new
+    finish_reason: str                 # "length" | "eos"
+    admitted_tick: int
+    finished_tick: int
+
+
+def _pos_leaf(path) -> bool:
+    keys = [k.key for k in path if isinstance(k, jtu.DictKey)]
+    return bool(keys) and keys[-1] == "pos"
+
+
+def _batch_dim(path) -> int:
+    """Cache leaves under "groups" are stacked (n_groups, B, ...); "tail"
+    leaves are (B, ...)."""
+    keys = [k.key for k in path if isinstance(k, jtu.DictKey)]
+    return 1 if keys and keys[0] == "groups" else 0
+
+
+def _per_slot(a: jax.Array, leaf: jax.Array, bdim: int) -> jax.Array:
+    """Broadcast a per-slot vector (S,) against a cache leaf along bdim."""
+    shape = [1] * leaf.ndim
+    shape[bdim] = a.shape[0]
+    return a.reshape(shape)
+
+
+class ServeEngine:
+    """Continuous-batching engine over a slotted KV cache.
+
+    Drive it either with :meth:`run` (serve a whole trace, returns
+    completions) or step-by-step with :meth:`submit` + :meth:`step` for
+    integration into an async server loop.
+    """
+
+    def __init__(self, cfg, params, *, max_slots: int, max_len: int,
+                 nldpe: NLDPEConfig = OFF, prefill_chunk: int = 16,
+                 decode_block: int = 4, eos_id: int = -1,
+                 batch_groups: int = 1, dtype=jnp.float32):
+        bad = [t for t in cfg.layer_pattern if t not in ATTN_TYPES]
+        if bad:
+            raise NotImplementedError(
+                f"continuous batching needs attention-block caches; "
+                f"{cfg.name} pattern has {bad}")
+        if prefill_chunk < 1 or decode_block < 1 or max_slots < 1:
+            raise ValueError("max_slots, prefill_chunk, decode_block >= 1")
+        prefill_chunk = min(prefill_chunk, max_len)
+        self.cfg = cfg
+        self.params = params
+        self.max_slots = max_slots
+        self.max_len = max_len
+        self.nldpe = nldpe
+        self.prefill_chunk = prefill_chunk
+        self.decode_block = decode_block
+        self.eos_id = eos_id
+        self.batch_groups = batch_groups
+        self.dtype = dtype
+
+        s = max_slots
+        # windowed rings get prefill_chunk-1 slack lines: a chunk's writes
+        # land before its queries attend, so the chunk's first query still
+        # needs the full window behind it (see nn.attention.init_cache)
+        self.cache = lm.init_model_cache(cfg, s, max_len, dtype=dtype,
+                                         slotted=True,
+                                         ring_slack=self.prefill_chunk - 1)
+        self._tok = jnp.zeros((s,), jnp.int32)
+        self._pos = jnp.zeros((s,), jnp.int32)
+        self._active = jnp.zeros((s,), bool)
+        self._gen_left = jnp.zeros((s,), jnp.int32)
+        self._temp = jnp.zeros((s,), jnp.float32)
+        self._topk = jnp.zeros((s,), jnp.int32)
+        self._keys = jnp.zeros((s, 2), jnp.uint32)
+
+        self._slot_owner: list[Request | None] = [None] * s
+        self._free = deque(range(s))
+        self._out: dict[int, list[int]] = {}
+        self._admitted_tick: dict[int, int] = {}
+        self.tick = 0
+
+        self._chunk_fn = jax.jit(self._build_chunk_fn(), donate_argnums=(0,))
+        self._decode_fn = jax.jit(self._build_decode_fn(),
+                                  donate_argnums=(0, 1, 2, 3, 4))
+        # running (S, V) last-logits merge: each chunk contributes only the
+        # rows of slots whose last real prompt token lives in it, so wave
+        # memory never scales with chunk count (full (S, C, V) logits would
+        # be ~n_chunks x slots x chunk x vocab on a real vocabulary)
+        def merge_last(last, lg, take, col):
+            rows = lg[jnp.arange(lg.shape[0]), col]            # (S, V)
+            return jnp.where(take[:, None], rows, last)
+        self._last_fn = jax.jit(merge_last, donate_argnums=(0,))
+        # first-token sampler, fixed (max_slots, V) shape so it compiles once
+        self._sample_fn = jax.jit(
+            lambda logits, keys, positions, temp, topk:
+            sample_tokens(logits, step_keys(keys, positions), temp, topk))
+        # admission state writes as ONE fixed-shape masked merge (per-index
+        # eager scatters re-specialize on every distinct wave size)
+        self._state_fn = jax.jit(self._build_state_fn(),
+                                 donate_argnums=tuple(range(7)))
+
+    # ------------------------------------------------------------------
+    # jit'd building blocks
+    # ------------------------------------------------------------------
+
+    @staticmethod
+    def _clip_pos(cache, mask, bound):
+        """On masked slots, make every cache line at position >= bound
+        never-valid (pos <- -1).  bound is () or (S,)."""
+        bound = jnp.asarray(bound, jnp.int32)
+
+        def one(path, leaf):
+            if not _pos_leaf(path):
+                return leaf
+            bdim = _batch_dim(path)
+            m = _per_slot(mask, leaf, bdim)
+            b = _per_slot(bound, leaf, bdim) if bound.ndim else bound
+            return jnp.where(m & (leaf >= b), jnp.int32(-1), leaf)
+
+        return jtu.tree_map_with_path(one, cache)
+
+    def _build_chunk_fn(self):
+        cfg, nldpe, groups = self.cfg, self.nldpe, self.batch_groups
+        c = self.prefill_chunk
+
+        def chunk(cache, tokens, base_pos, mask, limit):
+            """One (max_slots, prefill_chunk) prefill chunk, shared offsets,
+            per-slot write masks.
+
+            Pre-clear: stale position entries >= base_pos on writing slots
+            (the previous tenant's lines) become never-valid before the
+            chunk attends — chunk 0 wipes the whole track.  Post-clip:
+            entries >= limit (= min(real_len, chunk end)) go never-valid,
+            trimming the padded prompt tail.  Folding both into the chunk
+            call keeps admission at one jit dispatch per chunk.
+            """
+            cache = ServeEngine._clip_pos(cache, mask, base_pos)
+            positions = base_pos + jnp.arange(c, dtype=jnp.int32)
+            logits, cache = lm.forward(self.params, tokens, cfg, mode="chunk",
+                                       cache=cache, positions=positions,
+                                       nldpe=nldpe, batch_groups=groups,
+                                       write_mask=mask)
+            return logits, ServeEngine._clip_pos(cache, mask, limit)
+
+        return chunk
+
+    def _build_state_fn(self):
+        def apply_state(tok, pos, active, gen_left, temp, topk, keys,
+                        sel, n_tok, n_pos, n_gen, n_temp, n_topk, n_keys):
+            m = sel
+            return (jnp.where(m, n_tok, tok), jnp.where(m, n_pos, pos),
+                    active | m, jnp.where(m, n_gen, gen_left),
+                    jnp.where(m, n_temp, temp), jnp.where(m, n_topk, topk),
+                    jnp.where(m[:, None], n_keys, keys))
+        return apply_state
+
+    def _build_decode_fn(self):
+        cfg, nldpe, groups = self.cfg, self.nldpe, self.batch_groups
+        eos, block = self.eos_id, self.decode_block
+
+        def decode(cache, tok, pos, active, gen_left, temp, topk, keys):
+            def step(carry, _):
+                cache, tok, pos, active, gen_left = carry
+                logits, cache = lm.decode_step(
+                    self.params, cfg, tok, pos, cache, nldpe=nldpe,
+                    batch_groups=groups, write_mask=active)
+                nxt = sample_tokens(logits, step_keys(keys, pos + 1),
+                                    temp, topk)
+                emit = jnp.where(active, nxt, -1)
+                gen_left = gen_left - active.astype(jnp.int32)
+                done = gen_left <= 0
+                if eos >= 0:
+                    done = done | (nxt == eos)
+                tok = jnp.where(active, nxt, tok)
+                pos = pos + active.astype(jnp.int32)
+                active = active & ~done
+                return (cache, tok, pos, active, gen_left), emit
+
+            carry, emits = jax.lax.scan(
+                step, (cache, tok, pos, active, gen_left), None, length=block)
+            return carry + (emits,)
+
+        return decode
+
+    # ------------------------------------------------------------------
+    # admission: one wave = reset -> masked chunk calls -> trim -> sample
+    # ------------------------------------------------------------------
+
+    def _validate(self, req: Request):
+        p = len(req.tokens)
+        if p < 1:
+            raise ValueError(f"request {req.rid}: empty prompt")
+        if req.max_new_tokens < 1:
+            raise ValueError(f"request {req.rid}: max_new_tokens < 1")
+        if req.rid in self._out:
+            raise ValueError(f"request {req.rid}: rid already in flight")
+        need = p + req.max_new_tokens - 1
+        if need > self.max_len:
+            raise ValueError(
+                f"request {req.rid}: prompt {p} + {req.max_new_tokens} new "
+                f"tokens needs {need} positions > max_len={self.max_len}")
+
+    def _admit_wave(self, reqs: list[Request]) -> list[Completion]:
+        """Admit up to ``free_slots`` requests in one batched prefill."""
+        assert len(reqs) <= self.free_slots
+        rids = [r.rid for r in reqs]
+        if len(set(rids)) != len(rids):
+            raise ValueError(f"duplicate rids in one admission wave: {rids}")
+        for r in reqs:
+            self._validate(r)
+        s, c = self.max_slots, self.prefill_chunk
+        slots = [self._free.popleft() for _ in reqs]
+        admit = np.zeros((s,), bool)
+        plen = np.ones((s,), np.int32)          # 1 avoids 0-len edge cases
+        for r, sl in zip(reqs, slots):
+            admit[sl] = True
+            plen[sl] = len(r.tokens)
+        n_chunks = -(-int(plen[admit].max()) // c)
+        tokens = np.zeros((s, n_chunks * c), np.int32)
+        for r, sl in zip(reqs, slots):
+            tokens[sl, :len(r.tokens)] = r.tokens
+
+        # per-slot (chunk, column) of the last real prompt token
+        ci_np = np.zeros((s,), np.int32)
+        col_np = np.zeros((s,), np.int32)
+        keys_np = np.zeros((s, 2), np.uint32)
+        pos_np = np.ones((s,), np.int32)
+        temp_np = np.zeros((s,), np.float32)
+        topk_np = np.zeros((s,), np.int32)
+        for r, sl in zip(reqs, slots):
+            ci_np[sl] = (len(r.tokens) - 1) // c
+            col_np[sl] = (len(r.tokens) - 1) % c
+            keys_np[sl] = np.asarray(
+                request_key(r.seed if r.seed is not None else r.rid))
+            pos_np[sl] = len(r.tokens)
+            temp_np[sl] = r.temperature
+            topk_np[sl] = r.top_k
+        col_j = jnp.asarray(col_np)
+
+        last = jnp.zeros((s, self.cfg.vocab_size), jnp.float32)
+        for i in range(n_chunks):
+            mask = jnp.asarray(admit & (i * c < plen))
+            limit = np.minimum(plen, (i + 1) * c).astype(np.int32)
+            lg, self.cache = self._chunk_fn(
+                self.cache, jnp.asarray(tokens[:, i * c:(i + 1) * c]),
+                jnp.int32(i * c), mask, jnp.asarray(limit))
+            last = self._last_fn(last, lg, jnp.asarray(admit & (ci_np == i)),
+                                 col_j)
+
+        all_firsts = np.asarray(self._sample_fn(
+            last, jnp.asarray(keys_np), jnp.asarray(pos_np),
+            jnp.asarray(temp_np), jnp.asarray(topk_np)))
+        firsts = [all_firsts[sl] for sl in slots]
+
+        done: list[Completion] = []
+        sel = np.zeros((s,), bool)
+        n_tok = np.zeros((s,), np.int32)
+        n_pos = np.zeros((s,), np.int32)
+        n_gen = np.zeros((s,), np.int32)
+        n_temp = np.zeros((s,), np.float32)
+        n_topk = np.zeros((s,), np.int32)
+        n_keys = np.zeros((s, 2), np.uint32)
+        for r, sl, first in zip(reqs, slots, firsts):
+            first = int(first)
+            self._out[r.rid] = [first]
+            self._admitted_tick[r.rid] = self.tick
+            if r.max_new_tokens == 1 or (self.eos_id >= 0
+                                         and first == self.eos_id):
+                self._free.appendleft(sl)
+                done.append(self._complete(
+                    r, "eos" if first == self.eos_id else "length"))
+                continue
+            self._slot_owner[sl] = r
+            sel[sl] = True
+            n_tok[sl] = first
+            n_pos[sl] = len(r.tokens)
+            n_gen[sl] = r.max_new_tokens - 1
+            n_temp[sl] = r.temperature
+            n_topk[sl] = r.top_k
+            n_keys[sl] = keys_np[sl]
+
+        if sel.any():
+            (self._tok, self._pos, self._active, self._gen_left, self._temp,
+             self._topk, self._keys) = self._state_fn(
+                self._tok, self._pos, self._active, self._gen_left,
+                self._temp, self._topk, self._keys, jnp.asarray(sel),
+                jnp.asarray(n_tok), jnp.asarray(n_pos), jnp.asarray(n_gen),
+                jnp.asarray(n_temp), jnp.asarray(n_topk),
+                jnp.asarray(n_keys))
+        return done
+
+    def submit(self, req: Request) -> Completion | None:
+        """Admit one request into a free slot (raises if none are free).
+        Returns a Completion immediately if it finished at admission."""
+        if not self._free:
+            raise RuntimeError("no free slot; check free_slots before submit")
+        self._validate(req)
+        done = self._admit_wave([req])
+        return done[0] if done else None
+
+    def _complete(self, req: Request, reason: str) -> Completion:
+        return Completion(rid=req.rid, prompt=tuple(req.tokens),
+                          tokens=self._out.pop(req.rid),
+                          finish_reason=reason,
+                          admitted_tick=self._admitted_tick.pop(req.rid),
+                          finished_tick=self.tick)
+
+    # ------------------------------------------------------------------
+    # decode tick + trace scheduler
+    # ------------------------------------------------------------------
+
+    @property
+    def free_slots(self) -> int:
+        return len(self._free)
+
+    @property
+    def any_active(self) -> bool:
+        return any(o is not None for o in self._slot_owner)
+
+    def step(self) -> list[Completion]:
+        """One decode tick: ``decode_block`` scanned steps over all slots.
+        Returns the requests that finished during the tick."""
+        (self.cache, self._tok, self._pos, self._active, self._gen_left,
+         emits) = self._decode_fn(self.cache, self._tok, self._pos,
+                                  self._active, self._gen_left, self._temp,
+                                  self._topk, self._keys)
+        self.tick += self.decode_block
+        emits = np.asarray(emits)                       # (block, S)
+        active = np.asarray(self._active)
+        done: list[Completion] = []
+        for s, req in enumerate(self._slot_owner):
+            if req is None:
+                continue
+            toks = emits[:, s]
+            self._out[req.rid].extend(int(t) for t in toks if t >= 0)
+            if not active[s]:
+                last = self._out[req.rid][-1]
+                reason = ("eos" if self.eos_id >= 0 and last == self.eos_id
+                          else "length")
+                done.append(self._complete(req, reason))
+                self._slot_owner[s] = None
+                self._free.append(s)
+        return done
+
+    def run(self, requests: list[Request]) -> list[Completion]:
+        """Serve a whole trace: admit each request at its ``arrival`` tick
+        (or as soon after as a slot frees up), decode continuously, return
+        completions sorted by rid."""
+        queue = deque(sorted(requests, key=lambda r: r.arrival))
+        waiting: deque[Request] = deque()
+        completions: list[Completion] = []
+        while queue or waiting or self.any_active:
+            while queue and queue[0].arrival <= self.tick:
+                waiting.append(queue.popleft())
+            if waiting and self._free:
+                wave = [waiting.popleft()
+                        for _ in range(min(len(waiting), len(self._free)))]
+                completions.extend(self._admit_wave(wave))
+            if not self.any_active:
+                if waiting:
+                    continue        # instant finishes freed slots; re-admit
+                if queue:           # idle until the next arrival
+                    self.tick = max(self.tick, queue[0].arrival)
+                    continue
+                break
+            completions.extend(self.step())
+        return sorted(completions, key=lambda c: c.rid)

@@ -1,0 +1,54 @@
+"""Per-slot token sampling for the continuous-batching serve engine.
+
+One vectorized sampler covers every slot of a decode batch in a single jit:
+each slot carries its own ``temperature`` and ``top_k`` (0 disables top-k)
+and its own PRNG key, so a greedy slot, a temperature=0.8 slot, and a
+top-k=40 slot can share one decode step.  ``temperature <= 0`` means greedy
+— that slot's key is never consumed, so greedy outputs are bit-identical to
+``argmax`` regardless of seeding.
+
+Sampled slots draw their key as ``fold_in(request_key, position)``: the
+randomness depends only on (request seed, token position), never on which
+slot the request landed in or who else is in the batch — the same
+order-independence guarantee the greedy path gets for free
+(tests/test_engine_properties.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+TOP_K_CAP = 64      # static top-k gather width; per-slot top_k <= cap
+
+
+def sample_tokens(logits: jax.Array, keys: jax.Array, temperature: jax.Array,
+                  top_k: jax.Array) -> jax.Array:
+    """logits (S, V), keys (S, 2) uint32, temperature (S,), top_k (S,) int32
+    -> (S,) int32 next tokens.
+
+    Per slot: temperature <= 0 -> greedy argmax; otherwise softmax sampling
+    at that temperature, restricted to the top_k highest logits when
+    top_k > 0 (clipped to TOP_K_CAP).
+    """
+    logits = logits.astype(jnp.float32)
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    kc = min(TOP_K_CAP, logits.shape[-1])
+    vals, _ = jax.lax.top_k(logits, kc)                       # (S, kc) sorted
+    idx = jnp.clip(top_k, 1, kc) - 1
+    kth = jnp.take_along_axis(vals, idx[:, None], axis=-1)    # (S, 1)
+    use_topk = (top_k > 0)[:, None]
+    masked = jnp.where(use_topk & (logits < kth), -jnp.inf, logits)
+    scaled = masked / jnp.maximum(temperature, 1e-6)[:, None]
+    sampled = jax.vmap(jax.random.categorical)(keys, scaled).astype(jnp.int32)
+    return jnp.where(temperature > 0, sampled, greedy)
+
+
+def request_key(seed: int) -> jax.Array:
+    """Stable per-request PRNG key (uint32 (2,), legacy format so it can
+    live inside plain state arrays)."""
+    return jax.random.PRNGKey(seed)
+
+
+def step_keys(keys: jax.Array, positions: jax.Array) -> jax.Array:
+    """(S, 2) request keys + (S,) token positions -> per-step keys."""
+    return jax.vmap(jax.random.fold_in)(keys, positions)

@@ -1,12 +1,17 @@
-"""Serving steps (prefill / decode / scanned generate) + a CPU demo driver.
+"""Lockstep serving steps (prefill / decode / scanned generate) + CPU demo.
 
 ``build_prefill_step``/``build_decode_step`` are the functions the dry-run
-lowers for the inference shapes.  ``build_generate_fn`` is the production
+lowers for the inference shapes.  ``build_generate_fn`` is the fixed-batch
 decode loop: the whole greedy generation is one ``jax.lax.scan`` inside one
 jit, with the KV cache donated so decode buffers update in place — no
 per-token Python dispatch, no per-token cache copy (DESIGN.md §5).  The old
 per-token Python loop survives as ``python_loop_decode``, the baseline that
 ``benchmarks/serve_bench.py`` measures the scan against.
+
+Everything here is *lockstep*: one fixed-shape batch that prefills,
+decodes, and finishes together.  Irregular traffic (staggered arrivals,
+mixed lengths, per-request sampling) goes through the continuous-batching
+engine in ``launch/engine.py`` instead — ``--continuous`` below demos it.
 
 The CLI driver below runs a reduced config end-to-end (prefill a batch of
 prompts, then decode), optionally through the NL-DPE numerics mode.
@@ -48,9 +53,20 @@ def build_decode_step(cfg, *, nldpe: NLDPEConfig = OFF, batch_groups: int = 1):
     return decode
 
 
+def _cache_capacity(cache) -> int:
+    """Largest attention ring length in the cache (== max_len whenever the
+    model has at least one non-windowed attention layer)."""
+    import jax.tree_util as jtu
+    lengths = [leaf.shape[-1]
+               for path, leaf in jtu.tree_flatten_with_path(cache)[0]
+               if any(isinstance(k, jtu.DictKey) and k.key == "pos"
+                      for k in path)]
+    return max(lengths) if lengths else 0
+
+
 def build_generate_fn(cfg, gen_len: int, *, nldpe: NLDPEConfig = OFF,
                       batch_groups: int = 1, donate_cache: bool = True,
-                      donate_params: bool = False):
+                      donate_params: bool = False, max_len: int | None = None):
     """Jit'd greedy decode of ``gen_len`` tokens as a single lax.scan.
 
     generate(params, cache, tok0, start_pos) -> (tokens (B, gen_len), cache).
@@ -60,6 +76,14 @@ def build_generate_fn(cfg, gen_len: int, *, nldpe: NLDPEConfig = OFF,
     of copying the whole cache per token.  ``donate_params`` additionally
     donates the parameter buffers — only safe for one-shot calls (the caller
     loses them), so it is opt-in.
+
+    Overflow guard: generating past the cache capacity silently wraps the
+    ring buffer of every non-windowed layer — old positions get overwritten
+    while the validity mask still admits the new ones, i.e. garbage.  When
+    the model has any non-windowed attention layer the call validates
+    ``start_pos + gen_len - 1 <= max_len`` (``max_len`` explicit, or
+    inferred from the cache) and raises instead.  Purely windowed stacks
+    wrap rings by design and are exempt.
     """
     def generate(params, cache, tok0, start_pos):
         def step(carry, i):
@@ -76,7 +100,28 @@ def build_generate_fn(cfg, gen_len: int, *, nldpe: NLDPEConfig = OFF,
 
     donate = tuple(argnum for argnum, on in ((1, donate_cache),
                                              (0, donate_params)) if on)
-    return jax.jit(generate, donate_argnums=donate)
+    jitted = jax.jit(generate, donate_argnums=donate)
+    wraps_garbage = any(t in ("attn", "global", "moe")
+                        for t in cfg.layer_pattern)
+
+    def checked(params, cache, tok0, start_pos):
+        limit = max_len if max_len is not None else (
+            _cache_capacity(cache) if wraps_garbage else None)
+        try:
+            sp = int(start_pos)
+        except Exception:           # traced start_pos: cannot validate here
+            sp = None
+        if wraps_garbage and limit and sp is not None \
+                and sp + gen_len - 1 > limit:
+            raise ValueError(
+                f"generate overflows the KV cache: start_pos={sp} + "
+                f"gen_len={gen_len} needs {sp + gen_len - 1} positions but "
+                f"the cache holds {limit}; non-windowed layers would wrap "
+                f"their ring buffers and silently produce garbage. "
+                f"Grow max_len or shrink gen_len.")
+        return jitted(params, cache, tok0, start_pos)
+
+    return checked
 
 
 def python_loop_decode(decode_fn, params, cache, tok0, start_pos: int,
@@ -105,6 +150,13 @@ def run(argv=None):
     p.add_argument("--python-loop", action="store_true",
                    help="seed-style per-token Python decode loop "
                         "(baseline; default is the scanned generate fn)")
+    p.add_argument("--continuous", action="store_true",
+                   help="continuous-batching engine over a mixed trace "
+                        "(slot-based KV cache, staggered arrivals)")
+    p.add_argument("--slots", type=int, default=4,
+                   help="KV-cache slots for --continuous")
+    p.add_argument("--requests", type=int, default=12,
+                   help="trace length for --continuous")
     p.add_argument("--seed", type=int, default=0)
     args = p.parse_args(argv)
 
@@ -115,6 +167,34 @@ def run(argv=None):
     from ..nn.module import param_dtype
     with param_dtype(jnp.float32):
         params = lm.init_params(key, cfg)
+
+    if args.continuous:
+        import numpy as np
+
+        from .engine import Request, ServeEngine
+        rng = np.random.default_rng(args.seed)
+        max_len = args.prompt_len + args.gen_len
+        reqs = [Request(rid=i,
+                        tokens=tuple(int(t) for t in rng.integers(
+                            0, cfg.vocab_size,
+                            int(rng.integers(2, args.prompt_len + 1)))),
+                        max_new_tokens=int(rng.integers(2, args.gen_len + 1)),
+                        arrival=int(rng.poisson(2) * i))
+                for i in range(args.requests)]
+        eng = ServeEngine(cfg, params, max_slots=args.slots, max_len=max_len,
+                          nldpe=nldpe)
+        t0 = time.time()
+        comps = eng.run(reqs)
+        dt = time.time() - t0
+        n_tok = sum(len(c.tokens) for c in comps)
+        print(f"[serve] continuous: {len(comps)} requests, {n_tok} tokens "
+              f"in {dt * 1e3:.0f} ms ({n_tok / max(dt, 1e-9):.1f} tok/s, "
+              f"{args.slots} slots, {eng.tick} ticks)")
+        for c in comps[:4]:
+            print(f"  rid={c.rid} admitted@{c.admitted_tick} "
+                  f"finished@{c.finished_tick} [{c.finish_reason}] "
+                  f"tokens={c.tokens[:8]}")
+        return comps
     max_len = args.prompt_len + args.gen_len
     cache = lm.init_model_cache(cfg, args.batch, max_len, dtype=jnp.float32)
     prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0,

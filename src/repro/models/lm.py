@@ -83,10 +83,12 @@ def init_block(key, cfg, btype: str):
 
 
 def init_block_cache(cfg, btype: str, batch: int, max_len: int,
-                     dtype=jnp.bfloat16):
+                     dtype=jnp.bfloat16, slotted: bool = False,
+                     ring_slack: int = 0):
     if btype in ATTN_TYPES:
         return {"attn": init_cache(_attn_spec(cfg, btype), batch, max_len, dtype,
-                                   quantized=cfg.kv_cache_dtype == "int8")}
+                                   quantized=cfg.kv_cache_dtype == "int8",
+                                   slotted=slotted, ring_slack=ring_slack)}
     if btype == "rec":
         return {"rec": recurrent_state_init(batch, cfg.d_rnn or cfg.d_model)}
     if btype == "rwkv":
@@ -96,14 +98,16 @@ def init_block_cache(cfg, btype: str, batch: int, max_len: int,
 
 
 def apply_block(p, cfg, btype: str, x, *, positions, mode: str, cache,
-                prefix_len=None, nldpe: NLDPEConfig = OFF, groups: int = 1):
+                prefix_len=None, nldpe: NLDPEConfig = OFF, groups: int = 1,
+                write_mask=None):
     new_cache = {}
     h = rmsnorm_apply(p["norm1"], x)
     if btype in ATTN_TYPES:
         a, c = attn_apply(p["attn"], _attn_spec(cfg, btype), h,
                           positions=positions, mode=mode,
                           cache=None if cache is None else cache["attn"],
-                          prefix_len=prefix_len, nldpe=nldpe)
+                          prefix_len=prefix_len, nldpe=nldpe,
+                          write_mask=write_mask)
         if c is not None:
             new_cache["attn"] = c
         x = x + a.astype(x.dtype)   # keep the residual-stream dtype stable
@@ -115,6 +119,9 @@ def apply_block(p, cfg, btype: str, x, *, positions, mode: str, cache,
             f = mlp_apply(p["ffn"], h2, act=cfg.act, nldpe=nldpe)
         x = x + f.astype(x.dtype)
     elif btype == "rec":
+        if mode == "chunk":
+            raise NotImplementedError("chunked serve prefill supports "
+                                      "attention blocks only (got 'rec')")
         a, st = recurrent_block_apply(p["rec"], h,
                                       None if cache is None else cache["rec"],
                                       mode=mode, nldpe=nldpe)
@@ -123,6 +130,9 @@ def apply_block(p, cfg, btype: str, x, *, positions, mode: str, cache,
         h2 = rmsnorm_apply(p["norm2"], x)
         x = x + mlp_apply(p["ffn"], h2, act=cfg.act, nldpe=nldpe).astype(x.dtype)
     elif btype == "rwkv":
+        if mode == "chunk":
+            raise NotImplementedError("chunked serve prefill supports "
+                                      "attention blocks only (got 'rwkv')")
         a, st = timemix_apply(p["tm"], h,
                               None if cache is None else cache["tm"],
                               mode=mode, nldpe=nldpe)
@@ -171,19 +181,27 @@ def init_params(key, cfg):
     return params
 
 
-def init_model_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+def init_model_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16,
+                     slotted: bool = False, ring_slack: int = 0):
+    """slotted=True: every batch row is an independent serve slot with its
+    own position track; ring_slack widens windowed rings for multi-token
+    chunk writes (see nn.attention.init_cache)."""
     pat, n_groups, tail = _pattern_split(cfg)
-    one = {f"b{i}": init_block_cache(cfg, t, batch, max_len, dtype)
+    one = {f"b{i}": init_block_cache(cfg, t, batch, max_len, dtype,
+                                     slotted=slotted, ring_slack=ring_slack)
            for i, t in enumerate(pat)}
     cache = {"groups": jax.tree.map(
         lambda x: jnp.tile(x[None], (n_groups,) + (1,) * x.ndim), one)}
     if tail:
-        cache["tail"] = {f"b{i}": init_block_cache(cfg, t, batch, max_len, dtype)
+        cache["tail"] = {f"b{i}": init_block_cache(cfg, t, batch, max_len,
+                                                   dtype, slotted=slotted,
+                                                   ring_slack=ring_slack)
                          for i, t in enumerate(tail)}
     return cache
 
 
-def cache_pspecs(cfg, batch: int, max_len: int, mesh, rules):
+def cache_pspecs(cfg, batch: int, max_len: int, mesh, rules,
+                 slotted: bool = False):
     """PartitionSpec pytree mirroring init_model_cache (for dry-run jit)."""
     from jax.sharding import PartitionSpec as P
 
@@ -199,7 +217,9 @@ def cache_pspecs(cfg, batch: int, max_len: int, mesh, rules):
         else:
             kv_axes = ("batch", None, "kv_seq", None)
         kv = resolve(rules, kv_axes, kv_shape, mesh)
-        tree = {"k": kv, "v": kv, "pos": P()}
+        pos = (resolve(rules, ("slots", None), (batch, length), mesh)
+               if slotted else P())
+        tree = {"k": kv, "v": kv, "pos": pos}
         if cfg.kv_cache_dtype == "int8":
             sc = resolve(rules, kv_axes[:3], kv_shape[:3], mesh)
             tree.update({"k_scale": sc, "v_scale": sc})
@@ -234,11 +254,14 @@ def cache_pspecs(cfg, batch: int, max_len: int, mesh, rules):
 
 def forward(params, tokens, cfg, *, mode: str = "train", cache=None,
             positions=None, patch_embeds=None, nldpe: NLDPEConfig = OFF,
-            batch_groups: int = 1):
+            batch_groups: int = 1, write_mask=None):
     """tokens: (B, S) int32 (decode: S==1).  Returns (logits, new_cache).
 
     patch_embeds (vlm frontend stub): (B, P, d) prepended to the token
     embeddings; attention is bidirectional over the prefix (prefix-LM).
+
+    positions may be (S,) shared or (B, S) per-slot (serve engine);
+    write_mask (B,) bool freezes masked slots' caches (slotted caches only).
     """
     pat, n_groups, tail = _pattern_split(cfg)
     x = embedding_apply(params["embed"], tokens, dtype=cfg.activation_dtype)
@@ -253,7 +276,8 @@ def forward(params, tokens, cfg, *, mode: str = "train", cache=None,
         positions = jnp.arange(x.shape[1], dtype=jnp.int32)
 
     blk = partial(apply_block, cfg=cfg, positions=positions, mode=mode,
-                  prefix_len=prefix_len, nldpe=nldpe, groups=batch_groups)
+                  prefix_len=prefix_len, nldpe=nldpe, groups=batch_groups,
+                  write_mask=write_mask)
 
     def group_fn(x, group_params, group_cache):
         new_cache = {}
@@ -315,10 +339,13 @@ def lm_loss(logits: jax.Array, labels: jax.Array, z_loss: float = 1e-4):
 
 
 def decode_step(params, cfg, token, pos, cache, nldpe: NLDPEConfig = OFF,
-                batch_groups: int = 1):
-    """token: (B,) int32, pos: () int32 -> (logits (B, V), new_cache)."""
-    positions = jnp.full((1,), pos, jnp.int32)
+                batch_groups: int = 1, write_mask=None):
+    """token: (B,) int32, pos: () int32 shared — or (B,) int32 per-slot
+    against a slotted cache — -> (logits (B, V), new_cache)."""
+    pos = jnp.asarray(pos, jnp.int32)
+    positions = pos[:, None] if pos.ndim == 1 else jnp.full((1,), pos, jnp.int32)
     logits, new_cache = forward(params, token[:, None], cfg, mode="decode",
                                 cache=cache, positions=positions, nldpe=nldpe,
-                                batch_groups=batch_groups)
+                                batch_groups=batch_groups,
+                                write_mask=write_mask)
     return logits[:, 0], new_cache

@@ -220,17 +220,33 @@ def banded_attention(q, k, v, *, window: int, q_block=512, softcap=None):
 # ---------------------------------------------------------------------------
 
 def init_cache(s: AttnSpec, batch: int, max_len: int, dtype=jnp.bfloat16,
-               quantized: bool = False):
+               quantized: bool = False, slotted: bool = False,
+               ring_slack: int = 0):
     """Ring-buffered when the layer is windowed (cache_len = window).
 
     quantized=True stores K/V as int8 with per-(batch, head, position)
     scales — the paper's 8-bit numerics applied to the cache (§Perf cell C):
     halves the decode-step HBM traffic, which is the dominant roofline term
     of every decode shape.
+
+    slotted=True gives every batch entry (serve "slot") its own position
+    track: ``pos`` becomes (batch, length) so slots can sit at different
+    sequence offsets — the layout the continuous-batching engine decodes
+    against (DESIGN.md §5).  The lockstep layout keeps the shared (length,)
+    ``pos`` and is bit-compatible with the old behavior.
+
+    ring_slack widens windowed rings to ``window + ring_slack`` lines.
+    Chunked prefill writes a whole chunk of C keys *before* its queries
+    attend, so the chunk's first query still needs the ``window`` keys
+    behind it: a ring of exactly ``window`` lines would have evicted up to
+    C-1 of them.  Engines writing C positions per call pass
+    ``ring_slack=C-1``; the window *mask* is unchanged, so attention
+    results are identical to the tight ring.
     """
-    length = min(max_len, s.window) if s.window else max_len
+    length = min(max_len, s.window + ring_slack) if s.window else max_len
     kv_shape = (batch, s.n_kv_heads, length, s.head_dim)
-    cache = {"pos": jnp.full((length,), -1, jnp.int32)}
+    pos_shape = (batch, length) if slotted else (length,)
+    cache = {"pos": jnp.full(pos_shape, -1, jnp.int32)}
     if quantized:
         cache.update({
             "k": jnp.zeros(kv_shape, jnp.int8),
@@ -261,7 +277,7 @@ def _dequantize_kv(cache, name: str) -> jax.Array:
 
 
 def cache_specs(s: AttnSpec, batch: int, max_len: int, mesh, rules,
-                dtype=jnp.bfloat16):
+                dtype=jnp.bfloat16, slotted: bool = False):
     """PartitionSpecs mirroring init_cache (kv-head or sequence sharded)."""
     from ..parallel.sharding import resolve
     length = min(max_len, s.window) if s.window else max_len
@@ -272,48 +288,129 @@ def cache_specs(s: AttnSpec, batch: int, max_len: int, mesh, rules,
         kv_axes = ("batch", None, "kv_seq", None)
     spec = resolve(rules, kv_axes, kv_shape, mesh)
     from jax.sharding import PartitionSpec as P
-    return {"k": spec, "v": spec, "pos": P()}
+    pos = (resolve(rules, ("slots", None), (batch, length), mesh)
+           if slotted else P())
+    return {"k": spec, "v": spec, "pos": pos}
 
 
-def update_cache(cache, k_new, v_new, pos: jax.Array):
-    """Insert one step (decode) at ring slot pos % len."""
+def update_cache(cache, k_new, v_new, pos: jax.Array, write_mask=None):
+    """Insert new K/V steps at their ring slots (pos % len).
+
+    Lockstep cache (``pos`` leaf (L,)): ``pos`` must be a scalar — one step
+    shared by the whole batch, the original decode contract.
+
+    Slotted cache (``pos`` leaf (B, L)): ``pos`` is (B,) — one step at a
+    per-slot offset — or (B, C) — C steps per slot (chunked prefill).
+    ``write_mask`` (B,) bool gates the write per slot: masked slots keep
+    their cache bit-for-bit (their scatter indices are routed out of bounds
+    and dropped), which is how frozen/finished slots survive the shared
+    decode step untouched.
+    """
     length = cache["k"].shape[2]
-    slot = pos % length
     out = dict(cache)
+    if cache["pos"].ndim == 1:                      # lockstep layout
+        if pos.ndim != 0:
+            raise ValueError("lockstep cache takes a scalar pos; build the "
+                             "cache with slotted=True for per-slot positions")
+        slot = pos % length
+        if "k_scale" in cache:
+            kq, ks = _quantize_kv(k_new)
+            vq, vs = _quantize_kv(v_new)
+            out["k"] = jax.lax.dynamic_update_slice_in_dim(cache["k"], kq, slot, axis=2)
+            out["v"] = jax.lax.dynamic_update_slice_in_dim(cache["v"], vq, slot, axis=2)
+            out["k_scale"] = jax.lax.dynamic_update_slice_in_dim(cache["k_scale"], ks, slot, axis=2)
+            out["v_scale"] = jax.lax.dynamic_update_slice_in_dim(cache["v_scale"], vs, slot, axis=2)
+        else:
+            out["k"] = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k_new.astype(cache["k"].dtype), slot, axis=2)
+            out["v"] = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v_new.astype(cache["v"].dtype), slot, axis=2)
+        out["pos"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["pos"], pos[None].astype(jnp.int32), slot, axis=0)
+        return out
+
+    # slotted layout: per-slot scatter, each batch row writes only its own
+    # cache line (cross-slot leakage is structurally impossible)
+    b = cache["k"].shape[0]
+    if pos.ndim == 0:
+        pos = jnp.broadcast_to(pos[None], (b,))    # shared step, every slot
+    pos2 = (pos[:, None] if pos.ndim == 1 else pos).astype(jnp.int32)  # (B, C)
+    slots = pos2 % length
+    if write_mask is not None:
+        # out-of-bounds scatter + mode="drop" = a masked, in-place-safe write
+        slots = jnp.where(write_mask[:, None], slots, length)
+    bidx = jnp.arange(b)[:, None]
     if "k_scale" in cache:
         kq, ks = _quantize_kv(k_new)
         vq, vs = _quantize_kv(v_new)
-        out["k"] = jax.lax.dynamic_update_slice_in_dim(cache["k"], kq, slot, axis=2)
-        out["v"] = jax.lax.dynamic_update_slice_in_dim(cache["v"], vq, slot, axis=2)
-        out["k_scale"] = jax.lax.dynamic_update_slice_in_dim(cache["k_scale"], ks, slot, axis=2)
-        out["v_scale"] = jax.lax.dynamic_update_slice_in_dim(cache["v_scale"], vs, slot, axis=2)
+        out["k"] = cache["k"].at[bidx, :, slots].set(
+            jnp.swapaxes(kq, 1, 2), mode="drop")
+        out["v"] = cache["v"].at[bidx, :, slots].set(
+            jnp.swapaxes(vq, 1, 2), mode="drop")
+        out["k_scale"] = cache["k_scale"].at[bidx, :, slots].set(
+            jnp.swapaxes(ks, 1, 2), mode="drop")
+        out["v_scale"] = cache["v_scale"].at[bidx, :, slots].set(
+            jnp.swapaxes(vs, 1, 2), mode="drop")
     else:
-        out["k"] = jax.lax.dynamic_update_slice_in_dim(
-            cache["k"], k_new.astype(cache["k"].dtype), slot, axis=2)
-        out["v"] = jax.lax.dynamic_update_slice_in_dim(
-            cache["v"], v_new.astype(cache["v"].dtype), slot, axis=2)
-    out["pos"] = jax.lax.dynamic_update_slice_in_dim(
-        cache["pos"], pos[None].astype(jnp.int32), slot, axis=0)
+        out["k"] = cache["k"].at[bidx, :, slots].set(
+            jnp.swapaxes(k_new, 1, 2).astype(cache["k"].dtype), mode="drop")
+        out["v"] = cache["v"].at[bidx, :, slots].set(
+            jnp.swapaxes(v_new, 1, 2).astype(cache["v"].dtype), mode="drop")
+    out["pos"] = cache["pos"].at[bidx, slots].set(pos2, mode="drop")
     return out
 
 
-def decode_attention(q, cache, pos: jax.Array, s: AttnSpec, softcap=None):
-    """q: (B, Hq, 1, D) against the full cache with validity masking."""
-    b, hq, _, d = q.shape
+def cache_valid_mask(kp: jax.Array, q_pos: jax.Array, window: int | None):
+    """Which cache lines each query may attend to.
+
+    kp: (L,) lockstep or (B, L) slotted cache positions (-1 = never written);
+    q_pos: () scalar, (Q,) shared, or (B, Q) per-slot query positions
+    -> bool (B|1, Q, L).  Callers with per-slot single-token positions must
+    pass the explicit (B, 1) form — a 1-d vector always means shared (Q,).
+    """
+    if kp.ndim == 1:
+        kp = kp[None]
+    q_pos = jnp.asarray(q_pos, jnp.int32)
+    if q_pos.ndim == 0:
+        q_pos = q_pos[None, None]
+    elif q_pos.ndim == 1:
+        q_pos = q_pos[None, :]
+    kpe = kp[:, None, :]                               # (B, 1, L)
+    qpe = q_pos[:, :, None]                            # (B, Q, 1)
+    valid = (kpe >= 0) & (kpe <= qpe)
+    if window:
+        valid = valid & (qpe - kpe < window)
+    return valid
+
+
+def cached_attention(q, cache, q_pos: jax.Array, s: AttnSpec, softcap=None):
+    """q: (B, Hq, Q, D) against the full cache with validity masking.
+
+    Serves both single-token decode (Q == 1) and chunked prefill (Q == C):
+    every query attends to exactly the cache lines whose stored position is
+    valid for it (written, causal, in-window), so slots at different offsets
+    coexist in one batch.
+    """
+    b, hq, nq, d = q.shape
     g = s.group
-    qg = q.reshape(b, s.n_kv_heads, g, 1, d).astype(jnp.float32)
+    qg = q.reshape(b, s.n_kv_heads, g, nq, d).astype(jnp.float32)
     k, v = _dequantize_kv(cache, "k"), _dequantize_kv(cache, "v")
     scores = jnp.einsum("bkgqd,bkld->bkgql", qg, k) / math.sqrt(d)
     if softcap:
         scores = jnp.tanh(scores / softcap) * softcap
-    kp = cache["pos"]
-    valid = (kp >= 0) & (kp <= pos)
-    if s.window:
-        valid = valid & (pos - kp < s.window)
-    scores = jnp.where(valid[None, None, None, None, :], scores, NEG_INF)
+    qp = jnp.asarray(q_pos, jnp.int32)
+    if qp.ndim == 1 and nq == 1:
+        qp = qp[:, None]                  # (B,) per-slot -> explicit (B, 1)
+    valid = cache_valid_mask(cache["pos"], qp, s.window)
+    scores = jnp.where(valid[:, None, None], scores, NEG_INF)
     p = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bkgql,bkld->bkgqd", p, v)
-    return out.reshape(b, hq, 1, d).astype(q.dtype)
+    return out.reshape(b, hq, nq, d).astype(q.dtype)
+
+
+def decode_attention(q, cache, pos: jax.Array, s: AttnSpec, softcap=None):
+    """q: (B, Hq, 1, D) against the full cache with validity masking."""
+    return cached_attention(q, cache, pos, s, softcap)
 
 
 # ---------------------------------------------------------------------------
@@ -322,30 +419,56 @@ def decode_attention(q, cache, pos: jax.Array, s: AttnSpec, softcap=None):
 
 def attn_apply(p, s: AttnSpec, x: jax.Array, *, positions: jax.Array,
                mode: str = "train", cache=None, prefix_len=None,
-               nldpe: NLDPEConfig = OFF):
+               nldpe: NLDPEConfig = OFF, write_mask=None):
     """x: (B, S, d) -> (y, new_cache).
 
-    mode: "train"/"prefill" (full sequence, optional cache fill) or
-          "decode" (S == 1, cache required).
+    mode: "train"/"prefill" (full sequence, optional cache fill),
+          "decode" (S == 1, cache required), or
+          "chunk" (S == chunk, slotted cache required: the chunk's K/V are
+          scattered into the cache at per-slot offsets and its queries
+          attend to the *whole* cache under validity masking — the
+          continuous-batching prefill path, correct at any chunk offset).
+
+    write_mask (B,) bool (slotted caches only): slots where it is False keep
+    their cache untouched — frozen/finished serve slots.
     """
     b, seq, _ = x.shape
     q, k, v = _project_qkv(p, s, x, positions)
 
     if mode == "decode":
         assert cache is not None and seq == 1
-        pos = positions[0] if positions.ndim == 1 else positions[0, 0]
-        cache = update_cache(cache, k, v, pos)
+        if positions.ndim == 2:
+            pos = positions[:, 0]                  # (B,) per-slot offsets
+        else:
+            pos = positions[0]
+        cache = update_cache(cache, k, v, pos, write_mask=write_mask)
         if nldpe.enabled:
             # NL-DPE decode: log-domain DMMul over the cached keys/values
-            valid = (cache["pos"] >= 0) & (cache["pos"] <= pos)
-            if s.window:
-                valid = valid & (pos - cache["pos"] < s.window)
+            valid = cache_valid_mask(cache["pos"],
+                                     pos[:, None] if pos.ndim else pos,
+                                     s.window)                     # (B|1,1,L)
             kr = jnp.repeat(_dequantize_kv(cache, "k"), s.group, axis=1)
             vr = jnp.repeat(_dequantize_kv(cache, "v"), s.group, axis=1)
             o = nldpe.attention(q, kr.astype(q.dtype), vr.astype(q.dtype),
-                                causal=False, mask=valid[None, None, None, :])
+                                causal=False, mask=valid[:, None])
         else:
-            o = decode_attention(q, cache, pos, s, s.softcap)
+            o = cached_attention(q, cache, pos, s, s.softcap)
+    elif mode == "chunk":
+        assert cache is not None
+        if cache["pos"].ndim != 2:
+            raise ValueError("chunk mode needs a slotted cache "
+                             "(init_cache(..., slotted=True))")
+        qpos = (positions if positions.ndim == 2
+                else jnp.broadcast_to(positions[None, :], (b, seq)))
+        cache = update_cache(cache, k, v, qpos, write_mask=write_mask)
+        if nldpe.enabled:
+            valid = cache_valid_mask(cache["pos"], qpos, s.window)  # (B,S,L)
+            kr = jnp.repeat(_dequantize_kv(cache, "k"), s.group, axis=1)
+            vr = jnp.repeat(_dequantize_kv(cache, "v"), s.group, axis=1)
+            o = nldpe.attention(q, kr.astype(q.dtype), vr.astype(q.dtype),
+                                causal=False, mask=valid[:, None])
+        else:
+            o = cached_attention(q, cache, qpos, s, s.softcap)
     else:
         if nldpe.enabled:
             if s.window is None and prefix_len is None and positions.ndim == 1:
@@ -371,7 +494,10 @@ def attn_apply(p, s: AttnSpec, x: jax.Array, *, positions: jax.Array,
             take = min(seq, length)
             pos_new = jnp.arange(seq - take, seq, dtype=jnp.int32)
             slots = pos_new % length        # position p lives at slot p % len
-            new = {"pos": cache["pos"].at[slots].set(pos_new)}
+            if cache["pos"].ndim == 2:      # slotted: same offsets, all slots
+                new = {"pos": cache["pos"].at[:, slots].set(pos_new[None])}
+            else:
+                new = {"pos": cache["pos"].at[slots].set(pos_new)}
             if "k_scale" in cache:
                 kq, ks = _quantize_kv(k[:, :, -take:])
                 vq, vs = _quantize_kv(v[:, :, -take:])

@@ -126,6 +126,7 @@ def serve_rules(multi_pod: bool = False) -> Rules:
     batch = ("pod", "data") if multi_pod else ("data",)
     return Rules("serve", {
         "batch": batch,
+        "slots": batch,           # slotted-cache pos tracks follow the batch
         "embed": None,            # weights replicated across data (TP-only)
         "mlp": "model",
         "heads": "model",
@@ -143,6 +144,7 @@ def long_rules(multi_pod: bool = False) -> Rules:
     r = serve_rules(multi_pod).table.copy()
     r["kv_seq"] = ("data", "model")   # batch=1: shard the 500k cache 256-way
     r["batch"] = None
+    r["slots"] = None
     r["expert_group"] = None
     return Rules("long", r)
 
@@ -180,6 +182,7 @@ def serve_dshard_rules(multi_pod: bool = False) -> Rules:
     batch = ("pod", "data") if multi_pod else ("data",)
     return Rules("serve_dshard", {
         "batch": batch,
+        "slots": batch,
         "embed": "model",
         "mlp": None,
         "heads": None,

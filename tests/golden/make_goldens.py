@@ -1,0 +1,53 @@
+"""Regenerate the golden ACAM reference tables.
+
+    PYTHONPATH=src python tests/golden/make_goldens.py
+
+Only run this when ``dt.build_table`` changes *intentionally*; commit the
+regenerated .npz files together with the numerics change so the diff is
+explicit.  tests/test_acam_golden.py asserts bit-exact equality against
+these files.
+"""
+import os
+import sys
+
+import numpy as np
+
+# the cases are small (few bits, coarse grid) so the files stay tiny while
+# still covering binary + gray encodings and several function families
+GOLDEN_CASES = [
+    dict(fn="sigmoid", bits=4, encoding="gray", dense=4096),
+    dict(fn="sigmoid", bits=4, encoding="binary", dense=4096),
+    dict(fn="gelu", bits=5, encoding="gray", dense=4096),
+    dict(fn="exp", bits=4, encoding="gray", dense=4096),
+    dict(fn="tanh", bits=6, encoding="gray", dense=8192),
+]
+
+
+def case_path(case: dict, root: str) -> str:
+    name = f"acam_{case['fn']}_b{case['bits']}_{case['encoding']}.npz"
+    return os.path.join(root, name)
+
+
+def table_arrays(case: dict) -> dict:
+    from repro.core import dt
+
+    t = dt.build_table(case["fn"], bits=case["bits"],
+                       encoding=case["encoding"], dense=case["dense"])
+    return dict(
+        lo=t.lo, hi=t.hi,
+        rows_per_bit=np.asarray(t.rows_per_bit, np.int64),
+        in_domain=np.asarray(t.in_domain, np.float64),
+        out_lo=np.float64(t.out_spec.lo), out_hi=np.float64(t.out_spec.hi),
+        out_bits=np.int64(t.out_spec.bits))
+
+
+def main():
+    root = os.path.dirname(os.path.abspath(__file__))
+    for case in GOLDEN_CASES:
+        path = case_path(case, root)
+        np.savez_compressed(path, **table_arrays(case))
+        print("wrote", path)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

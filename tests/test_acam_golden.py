@@ -1,0 +1,54 @@
+"""Golden regression: dt.build_table must reproduce checked-in tables
+bit-exactly.
+
+The ACAM threshold tables are the contract between the host-side DT builder
+and every jit-side evaluator (interval matcher, Pallas kernel, compiled
+piecewise); a silent numerics drift in the builder would skew every
+downstream NL-DPE result while individual equivalence tests kept passing
+(they only compare paths against each other).  The goldens pin the builder
+itself.
+
+Regenerate deliberately with ``python tests/golden/make_goldens.py`` and
+commit the .npz diff alongside the change that caused it.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import dt
+
+from golden.make_goldens import GOLDEN_CASES, case_path, table_arrays
+
+GOLDEN_ROOT = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                           "golden")
+
+
+@pytest.mark.parametrize(
+    "case", GOLDEN_CASES,
+    ids=[f"{c['fn']}-b{c['bits']}-{c['encoding']}" for c in GOLDEN_CASES])
+def test_build_table_matches_golden(case):
+    path = case_path(case, GOLDEN_ROOT)
+    assert os.path.exists(path), \
+        f"missing golden {path}; run tests/golden/make_goldens.py"
+    want = np.load(path)
+    got = table_arrays(case)
+    for key in want.files:
+        np.testing.assert_array_equal(
+            got[key], want[key],
+            err_msg=f"{case}: field {key!r} drifted from the golden table "
+                    f"(if intentional, regenerate via make_goldens.py)")
+
+
+def test_goldens_cover_both_encodings():
+    encs = {c["encoding"] for c in GOLDEN_CASES}
+    assert encs == {"gray", "binary"}
+
+
+def test_gray_never_needs_more_rows_than_binary():
+    """The Table I claim the goldens exist to protect: Gray coding halves
+    sub-MSB toggle rates, so total row count never exceeds binary's."""
+    for fn in ("sigmoid", "relu", "exp"):
+        g = dt.build_table(fn, bits=5, encoding="gray", dense=4096)
+        b = dt.build_table(fn, bits=5, encoding="binary", dense=4096)
+        assert g.total_rows <= b.total_rows, fn

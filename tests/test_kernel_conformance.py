@@ -1,0 +1,174 @@
+"""Cross-kernel conformance suite: ONE harness for every Pallas kernel.
+
+Each kernel subpackage ships a pure-jnp oracle (``ref.py``, reachable via
+``use_ref=True`` on the public op).  Historically every kernel had its own
+ad-hoc shape grid; this suite drives all of them through a single
+parametrized matrix:
+
+* dtypes        — float32 and bfloat16 inputs,
+* shapes        — MXU-aligned, odd, and non-tile-aligned (the padding and
+                  divisor-block fallbacks are exactly where kernels rot),
+* batch/groups  — leading batch extents and GQA query-group ratios.
+
+A kernel is conformant when the Pallas path (interpret mode on CPU)
+matches its oracle within the per-dtype tolerance.  Quantizing kernels
+(ACAM, fused dual-compute) additionally get one output-grid code step of
+slack where the two paths order float reductions differently.
+"""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import dt
+from repro.core.crossbar import program_linear
+from repro.core.logdomain import DEFAULT_CFG
+from repro.kernels.acam_activation.ops import acam_apply
+from repro.kernels.crossbar_vmm.ops import crossbar_matmul
+from repro.kernels.dual_compute.ops import (fused_crossbar_acam,
+                                            logdomain_flash_attention)
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.nldpe_qmatmul.ops import nldpe_matmul_int8
+
+RNG = np.random.default_rng(2024)
+
+F32_TOL = dict(rtol=1e-4, atol=1e-4)
+BF16_TOL = dict(rtol=0.05, atol=0.05)
+
+# (M, K, N): aligned / odd / non-tile-aligned / degenerate-row
+MATMUL_SHAPES = [(128, 128, 128), (8, 16, 8), (33, 65, 17), (1, 300, 5)]
+# (B, Hq, Hkv, Lq, Lk, D): group = Hq/Hkv in {1, 2, 4}; odd lengths included
+ATTN_SHAPES = [(1, 2, 2, 16, 16, 8), (2, 4, 2, 32, 32, 16),
+               (1, 4, 1, 8, 40, 32), (1, 2, 2, 1, 24, 16),
+               (2, 2, 1, 12, 20, 8)]
+# arbitrary activation tensor shapes incl. scalar-ish and 3-d batch groups
+ACT_SHAPES = [(7,), (3, 40), (2, 5, 17), (260,), (4, 2, 2, 9)]
+
+
+def _rand(shape, dtype, scale=1.0):
+    return jnp.asarray(RNG.normal(size=shape).astype(np.float32) * scale,
+                       dtype)
+
+
+def _tol(dtype):
+    return F32_TOL if dtype == jnp.float32 else BF16_TOL
+
+
+@dataclasses.dataclass(frozen=True)
+class Case:
+    """One kernel-vs-oracle evaluation: run() -> (kernel_out, ref_out,
+    extra atol for quantized-output grids)."""
+
+    kernel: str
+    shape: tuple
+    run: object
+
+    @property
+    def id(self) -> str:
+        return f"{self.kernel}-{'x'.join(map(str, self.shape))}"
+
+
+def _crossbar_case(shape):
+    def run(dtype):
+        m, k, n = shape
+        w = _rand((k, n), jnp.float32, 0.1)
+        x = _rand((m, k), dtype)
+        plan, _ = program_linear(w)
+        return (crossbar_matmul(x, plan),
+                crossbar_matmul(x, plan, use_ref=True), 0.0)
+    return Case("crossbar_vmm", shape, run)
+
+
+def _qmatmul_case(shape):
+    def run(dtype):
+        m, k, n = shape
+        a = _rand((m, k), dtype)
+        b = _rand((k, n), dtype)
+        return (nldpe_matmul_int8(a, b),
+                nldpe_matmul_int8(a, b, use_ref=True), 0.0)
+    return Case("nldpe_qmatmul", shape, run)
+
+
+def _acam_case(shape, fn="gelu"):
+    def run(dtype):
+        t = dt.build_table(fn)
+        x = jnp.asarray(
+            RNG.uniform(*t.in_domain, size=shape).astype(np.float32), dtype)
+        # both paths quantize to the same output grid; a float tie at an
+        # interval edge may flip one code
+        return acam_apply(x, t), acam_apply(x, t, use_ref=True), t.out_spec.step
+    return Case("acam_activation", shape, run)
+
+
+def _dual_compute_case(shape, fn="sigmoid"):
+    def run(dtype):
+        m, k, n = shape
+        t = dt.build_table(fn)
+        w = _rand((k, n), jnp.float32, 0.1)
+        x = _rand((m, k), dtype)
+        plan, _ = program_linear(w)
+        return (fused_crossbar_acam(x, plan, t),
+                fused_crossbar_acam(x, plan, t, use_ref=True), t.out_spec.step)
+    return Case("dual_compute", shape, run)
+
+
+def _flash_case(shape):
+    def run(dtype):
+        b, hq, hkv, lq, lk, d = shape
+        q = _rand((b, hq, lq, d), dtype)
+        k = _rand((b, hkv, lk, d), dtype)
+        v = _rand((b, hkv, lk, d), dtype)
+        return (flash_attention(q, k, v, bq=8, bk=8),
+                flash_attention(q, k, v, use_ref=True), 0.0)
+    return Case("flash_attention", shape, run)
+
+
+def _logdomain_flash_case(shape):
+    exp_lsb = 1.0 / ((1 << DEFAULT_CFG.bits) - 1)
+
+    def run(dtype):
+        b, hq, hkv, lq, lk, d = shape
+        q = _rand((b, hq, lq, d), dtype)
+        k = _rand((b, hkv, lk, d), dtype)
+        v = _rand((b, hkv, lk, d), dtype)
+        # the production wrapper upcasts to f32 before the 1/sqrt(d) scale;
+        # hand the oracle the upcast inputs so both paths hit the log-grid
+        # code boundaries at the same precision
+        qf, kf, vf = (t.astype(jnp.float32) for t in (q, k, v))
+        return (logdomain_flash_attention(q, k, v, bq=8, bk=8),
+                logdomain_flash_attention(qf, kf, vf, use_ref=True), exp_lsb)
+    return Case("logdomain_flash", shape, run)
+
+
+CASES = (
+    [_crossbar_case(s) for s in MATMUL_SHAPES]
+    + [_qmatmul_case(s) for s in MATMUL_SHAPES]
+    + [_acam_case(s) for s in ACT_SHAPES]
+    + [_dual_compute_case(s) for s in MATMUL_SHAPES]
+    + [_flash_case(s) for s in ATTN_SHAPES]
+    + [_logdomain_flash_case(s) for s in ATTN_SHAPES]
+)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16],
+                         ids=["f32", "bf16"])
+@pytest.mark.parametrize("case", CASES, ids=[c.id for c in CASES])
+def test_kernel_matches_reference(case, dtype):
+    out_k, out_r, grid_step = case.run(dtype)
+    assert out_k.shape == out_r.shape, case.id
+    tol = dict(_tol(dtype))
+    tol["atol"] = tol["atol"] + grid_step
+    np.testing.assert_allclose(np.asarray(out_k, np.float32),
+                               np.asarray(out_r, np.float32), **tol)
+
+
+@pytest.mark.parametrize("case", CASES[:1] + CASES[len(MATMUL_SHAPES):
+                                                   len(MATMUL_SHAPES) + 1],
+                         ids=lambda c: c.id)
+def test_kernel_output_dtype_is_stable(case):
+    """Kernels may compute in f32 internally but must not change the
+    result's floatness: outputs stay a real floating dtype."""
+    out_k, out_r, _ = case.run(jnp.float32)
+    assert jnp.issubdtype(out_k.dtype, jnp.floating)
+    assert jnp.issubdtype(out_r.dtype, jnp.floating)

@@ -1,0 +1,251 @@
+"""Continuous-batching engine: correctness under irregular traffic.
+
+The determinism contract (ISSUE 2 acceptance): every request served under a
+mixed trace — staggered arrivals, varied prompt/gen lengths, slot churn —
+yields exactly the tokens of that request served alone.  OFF-mode equality
+is asserted against the *legacy lockstep* path (whole-prompt prefill +
+``python_loop_decode``), which also proves chunked prefill == whole-prompt
+prefill numerics; NL-DPE-mode equality is asserted against the same engine
+serving the request in isolation (whole-prompt NL-DPE prefill anchors its
+log-sum grid to the prompt length, so lockstep logits differ within
+quantization LSBs — DESIGN.md §5).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.engine import NLDPEConfig, OFF
+from repro.launch.engine import Request, ServeEngine
+from repro.launch.serve import (build_decode_step, build_generate_fn,
+                                python_loop_decode)
+from repro.models import lm
+from repro.nn.module import param_dtype
+
+CFG = get_config("qwen2_5_3b", reduced=True)
+MAX_LEN = 32
+FUSED = NLDPEConfig(enabled=True, fused_dual_compute=True)
+
+
+@pytest.fixture(scope="module")
+def params():
+    with param_dtype(jnp.float32):
+        return lm.init_params(jax.random.key(0), CFG)
+
+
+@pytest.fixture(scope="module")
+def engine_off(params):
+    return ServeEngine(CFG, params, max_slots=3, max_len=MAX_LEN,
+                       prefill_chunk=4, decode_block=2)
+
+
+@pytest.fixture(scope="module")
+def oracle_decode(params):
+    return jax.jit(build_decode_step(CFG))
+
+
+def run_alone_lockstep(params, decode, prompt, gen_len, nldpe=OFF):
+    """Whole-prompt prefill + the seed per-token loop, batch of one."""
+    cache = lm.init_model_cache(CFG, 1, MAX_LEN, dtype=jnp.float32)
+    logits, cache = lm.forward(params, jnp.asarray([prompt], jnp.int32), CFG,
+                               mode="prefill", cache=cache, nldpe=nldpe)
+    tok0 = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+    gen, _ = python_loop_decode(decode, params, cache, tok0, len(prompt),
+                                gen_len)
+    return [int(t) for t in np.asarray(gen)[0]]
+
+
+def mixed_trace(rng, n, vocab, max_prompt=13, max_gen=8, arrival_scale=3):
+    reqs = []
+    t = 0
+    for i in range(n):
+        t += int(rng.poisson(arrival_scale))
+        plen = int(rng.integers(2, max_prompt + 1))
+        reqs.append(Request(
+            rid=i, tokens=tuple(int(x) for x in rng.integers(0, vocab, plen)),
+            max_new_tokens=int(rng.integers(1, max_gen + 1)), arrival=t))
+    return reqs
+
+
+# ---------------------------------------------------------------------------
+# the acceptance criterion: mixed trace == run-alone, OFF and NL-DPE modes
+# ---------------------------------------------------------------------------
+
+def test_mixed_trace_matches_run_alone_off(params, engine_off, oracle_decode):
+    rng = np.random.default_rng(11)
+    reqs = mixed_trace(rng, 8, CFG.vocab_size)
+    comps = engine_off.run(reqs)
+    assert len(comps) == len(reqs)
+    assert engine_off.free_slots == engine_off.max_slots
+    for r, c in zip(reqs, comps):
+        assert c.rid == r.rid
+        ref = run_alone_lockstep(params, oracle_decode, r.tokens,
+                                 r.max_new_tokens)
+        assert c.tokens == ref, f"rid {r.rid} diverged under mixed traffic"
+        assert len(c.tokens) == r.max_new_tokens
+        assert c.finish_reason == "length"
+
+
+@pytest.mark.slow
+def test_mixed_trace_matches_run_alone_fused(params):
+    """NL-DPE fused numerics: per-request outputs are independent of slot
+    placement and co-tenants (engine vs same engine serving it alone)."""
+    eng = ServeEngine(CFG, params, max_slots=2, max_len=24, prefill_chunk=4,
+                      decode_block=2, nldpe=FUSED)
+    rng = np.random.default_rng(5)
+    reqs = mixed_trace(rng, 4, CFG.vocab_size, max_prompt=8, max_gen=4,
+                       arrival_scale=1)
+    mixed = {c.rid: c.tokens for c in eng.run(reqs)}
+    # same requests, arrivals pushed far apart: at most one slot ever active
+    solo_reqs = [Request(rid=r.rid, tokens=r.tokens,
+                         max_new_tokens=r.max_new_tokens,
+                         arrival=eng.tick + 10_000 * (i + 1))
+                 for i, r in enumerate(reqs)]
+    solo = {c.rid: c.tokens for c in eng.run(solo_reqs)}
+    assert mixed == solo
+
+
+def test_chunked_prefill_matches_whole_prompt(params, engine_off,
+                                              oracle_decode):
+    """A prompt longer than one chunk prefills across several chunk calls
+    and still matches the single whole-prompt prefill (chunk=4 vs len 11)."""
+    rng = np.random.default_rng(3)
+    prompt = tuple(int(x) for x in rng.integers(0, CFG.vocab_size, 11))
+    [c] = engine_off.run([Request(rid=0, tokens=prompt, max_new_tokens=6)])
+    assert c.tokens == run_alone_lockstep(params, oracle_decode, prompt, 6)
+
+
+# ---------------------------------------------------------------------------
+# scheduler mechanics
+# ---------------------------------------------------------------------------
+
+def test_more_requests_than_slots_all_complete(engine_off):
+    rng = np.random.default_rng(23)
+    reqs = mixed_trace(rng, 9, CFG.vocab_size, arrival_scale=0)
+    comps = engine_off.run(reqs)
+    assert sorted(c.rid for c in comps) == list(range(9))
+    assert engine_off.free_slots == engine_off.max_slots
+    # with 3 slots and simultaneous arrivals, someone had to queue
+    assert max(c.admitted_tick for c in comps) > min(c.admitted_tick
+                                                     for c in comps)
+
+
+def test_eos_finishes_early(params):
+    eng = ServeEngine(CFG, params, max_slots=2, max_len=MAX_LEN,
+                      prefill_chunk=4, decode_block=2, eos_id=3)
+    rng = np.random.default_rng(1)
+    reqs = mixed_trace(rng, 4, CFG.vocab_size, max_gen=8, arrival_scale=0)
+    comps = eng.run(reqs)
+    for c in comps:
+        if c.finish_reason == "eos":
+            assert c.tokens[-1] == 3
+            assert 3 not in c.tokens[:-1]
+        else:
+            assert 3 not in c.tokens
+
+
+def test_per_slot_sampling_is_order_independent(params, engine_off):
+    """Sampled slots draw from (seed, position) only: the same request
+    samples the same tokens alone and next to greedy neighbors."""
+    rng = np.random.default_rng(9)
+    sampled = Request(rid=0, tokens=(5, 9, 2), max_new_tokens=6,
+                      temperature=0.9, top_k=7, seed=42)
+    [alone] = engine_off.run([sampled])
+    greedy_noise = mixed_trace(rng, 4, CFG.vocab_size, arrival_scale=0)
+    comps = engine_off.run([sampled] + [Request(rid=r.rid + 1, tokens=r.tokens,
+                                                max_new_tokens=r.max_new_tokens)
+                                        for r in greedy_noise])
+    crowded = next(c for c in comps if c.rid == 0)
+    assert crowded.tokens == alone.tokens
+    # and a sampled request actually differs from greedy now and then
+    greedy_twin = Request(rid=0, tokens=(5, 9, 2), max_new_tokens=6)
+    [g] = engine_off.run([greedy_twin])
+    assert len(g.tokens) == len(alone.tokens)
+
+
+def test_submit_rejects_invalid_requests(engine_off):
+    with pytest.raises(ValueError, match="empty prompt"):
+        engine_off.submit(Request(rid=90, tokens=()))
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        engine_off.submit(Request(rid=91, tokens=(1,), max_new_tokens=0))
+    with pytest.raises(ValueError, match="max_len"):
+        engine_off.submit(Request(rid=92, tokens=tuple(range(30)),
+                                  max_new_tokens=8))
+    assert engine_off.free_slots == engine_off.max_slots
+
+
+def test_duplicate_rids_rejected(engine_off):
+    """Two in-flight requests sharing a rid would clobber each other's
+    output buffer — rejected at admission, same wave or later."""
+    with pytest.raises(ValueError, match="duplicate rids"):
+        engine_off.run([Request(rid=7, tokens=(1, 2, 3), max_new_tokens=5),
+                        Request(rid=7, tokens=(9, 8, 7), max_new_tokens=5)])
+    engine_off.submit(Request(rid=8, tokens=(1, 2), max_new_tokens=6))
+    with pytest.raises(ValueError, match="already in flight"):
+        engine_off.submit(Request(rid=8, tokens=(3, 4), max_new_tokens=6))
+    while engine_off.any_active:          # drain so the fixture stays clean
+        engine_off.step()
+    assert engine_off.free_slots == engine_off.max_slots
+    # a finished rid may be reused
+    [c] = engine_off.run([Request(rid=8, tokens=(5,), max_new_tokens=2)])
+    assert c.rid == 8
+
+
+def test_windowed_arch_matches_run_alone(params):
+    """Sliding-window layers: the engine widens windowed rings by
+    prefill_chunk-1 slack lines (a chunk's writes land before its queries
+    attend, so the chunk's first query needs the full window behind it)
+    and reproduces run-alone tokens exactly."""
+    import dataclasses
+    wcfg = dataclasses.replace(CFG, layer_pattern=("local", "attn"),
+                               window=6)
+    with param_dtype(jnp.float32):
+        wparams = lm.init_params(jax.random.key(1), wcfg)
+    eng = ServeEngine(wcfg, wparams, max_slots=2, max_len=MAX_LEN,
+                      prefill_chunk=16, decode_block=2)
+    rng = np.random.default_rng(2)
+    reqs = mixed_trace(rng, 4, CFG.vocab_size, max_prompt=12, max_gen=6,
+                       arrival_scale=1)
+    decode = jax.jit(build_decode_step(wcfg))
+    comps = eng.run(reqs)
+    for r, c in zip(reqs, comps):
+        cache = lm.init_model_cache(wcfg, 1, MAX_LEN, dtype=jnp.float32)
+        logits, cache = lm.forward(wparams, jnp.asarray([r.tokens], jnp.int32),
+                                   wcfg, mode="prefill", cache=cache)
+        tok0 = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+        gen, _ = python_loop_decode(decode, wparams, cache, tok0,
+                                    len(r.tokens), r.max_new_tokens)
+        assert c.tokens == [int(t) for t in np.asarray(gen)[0]], r.rid
+
+
+def test_engine_requires_attention_pattern(params):
+    import dataclasses
+    bad = dataclasses.replace(CFG, layer_pattern=("rec",))
+    with pytest.raises(NotImplementedError, match="attention-block"):
+        ServeEngine(bad, params, max_slots=1, max_len=8)
+
+
+# ---------------------------------------------------------------------------
+# build_generate_fn overflow guard (satellite fix)
+# ---------------------------------------------------------------------------
+
+def test_generate_fn_raises_on_cache_overflow(params):
+    gen_len = 12
+    generate = build_generate_fn(CFG, gen_len)
+    cache = lm.init_model_cache(CFG, 1, 16, dtype=jnp.float32)
+    tok0 = jnp.zeros((1,), jnp.int32)
+    with pytest.raises(ValueError, match="overflows the KV cache"):
+        generate(params, cache, tok0, jnp.int32(8))      # 8 + 12 - 1 > 16
+
+
+def test_generate_fn_allows_exact_fit(params):
+    gen_len = 6
+    generate = build_generate_fn(CFG, gen_len)
+    cache = lm.init_model_cache(CFG, 1, 16, dtype=jnp.float32)
+    prompts = jnp.zeros((1, 11), jnp.int32)
+    logits, cache = lm.forward(params, prompts, CFG, mode="prefill",
+                               cache=cache)
+    tok0 = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+    toks, _ = generate(params, cache, tok0, jnp.int32(11))  # 11+6-1 == 16
+    assert toks.shape == (1, gen_len)
