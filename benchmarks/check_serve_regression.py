@@ -17,7 +17,12 @@ import sys
 
 TOLERANCE = 0.35          # |relative change| that triggers a warning
 ROWS = ("serve/cb_tok_per_s[off]", "serve/lockstep_tok_per_s[off]",
-        "serve/cb_speedup_x[off]")
+        "serve/cb_speedup_x[off]",
+        "serve/paged_tok_per_s[shared_prefix]",
+        "serve/paged_slotted_tok_per_s[shared_prefix]",
+        "serve/paged_speedup_x[shared_prefix]",
+        "serve/paged_prefill_saved_tok[shared_prefix]",
+        "serve/paged_hit_rate[shared_prefix]")
 
 _REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -30,8 +35,9 @@ def main() -> int:
     with open(path) as f:
         baseline = {r["name"]: r for r in json.load(f)["rows"]}
 
-    from benchmarks.serve_bench import bench_continuous
+    from benchmarks.serve_bench import bench_continuous, bench_paged
     fresh = {r["name"]: r for r in bench_continuous("off")}
+    fresh.update({r["name"]: r for r in bench_paged("shared_prefix")})
 
     for name in ROWS:
         if name not in baseline:
@@ -55,6 +61,15 @@ def main() -> int:
     if speedup < 2.0:
         print(f"::warning::continuous-batching speedup {speedup:.2f}x fell "
               f"below the 2x acceptance bar (noise or regression)")
+    pg = float(fresh["serve/paged_speedup_x[shared_prefix]"]["derived"])
+    if pg < 1.5:
+        print(f"::warning::paged-engine shared-prefix speedup {pg:.2f}x "
+              f"fell below the 1.5x acceptance bar (noise or regression)")
+    saved = float(
+        fresh["serve/paged_prefill_saved_tok[shared_prefix]"]["derived"])
+    if saved <= 0:
+        print("::warning::paged engine saved zero prefill tokens on the "
+              "shared-prefix trace — the radix index is not hitting")
     return 0      # warn-only by design
 
 

@@ -41,3 +41,4 @@ from .dual_compute.ops import (fused_crossbar_acam, fused_linear_acam,
                                logdomain_flash_attention)
 from .flash_attention.ops import flash_attention
 from .nldpe_qmatmul.ops import nldpe_matmul_int8
+from .paged_attention.ops import paged_attention

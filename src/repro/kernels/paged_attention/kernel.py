@@ -1,0 +1,122 @@
+"""Pallas TPU kernel: paged decode attention (gather via block table).
+
+The streaming decode path of the paged serve engine (DESIGN.md §7,
+opt-in via ``NLDPE_PAGED_KERNEL=1`` — the engine defaults to the
+bit-exact gathered dense view in ``nn.attention.paged_dense_view``): each
+sequence's KV cache is scattered across fixed-size pages of a shared pool,
+addressed by a per-sequence block table.  The kernel never materializes the
+gathered cache — the block table rides in as a **scalar-prefetch** operand,
+so the BlockSpec index map itself performs the gather: grid step
+``(b, h, i)`` DMAs physical page ``block_tables[b, i]`` straight from the
+pool into VMEM while the previous page is still being consumed (the
+standard Pallas double-buffering pipeline makes the indirection free).
+
+Grid: (B, Hkv, NB), pages innermost.  Queries ride grouped per KV head
+(GQA): the q block is that head's (group, D) query rows, so one fetched
+page feeds the whole query group — the same sharing flash_attention's
+index maps exploit.  Online softmax carries running max/denominator across
+the page axis in revisited output buffers, exactly like
+``kernels/flash_attention``; positions ``>= lengths[b]`` are masked to
+-inf, so partially-filled tail pages and dead block-table entries (clamped
+to a valid page id by the wrapper) contribute nothing.
+
+VMEM per step (ps=64, D=128, G=8, f32): k/v page tiles 32 KB each, q/out
+4 KB, m/l tiny -> well under budget at any production shape.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .. import resolve_interpret
+
+_NEG_INF = float("-inf")
+
+
+def _paged_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+                  *, scale: float, ps: int):
+    bb, i = pl.program_id(0), pl.program_id(2)
+    nb = pl.num_programs(2)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0] * scale                        # (G, d)
+    k = k_ref[0, 0]                                # (ps, d)
+    v = v_ref[0, 0]
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)      # (G, ps)
+
+    # logical positions of this page; everything at/after lengths[b] is dead
+    pos = i * ps + jax.lax.iota(jnp.int32, ps)
+    s = jnp.where((pos < len_ref[bb])[None, :], s, _NEG_INF)
+
+    m_old = m_ref[0, 0]                            # (G,)
+    l_old = l_ref[0, 0]
+    m_new = jnp.maximum(m_old, jnp.max(s, axis=-1))
+    m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+    p = jnp.exp(s - m_safe[:, None])               # masked s=-inf -> 0
+    corr = jnp.where(jnp.isfinite(m_old), jnp.exp(m_old - m_safe), 0.0)
+    l_new = l_old * corr + jnp.sum(p, axis=-1)
+    acc = o_ref[0, 0] * corr[:, None] + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[0, 0] = m_new
+    l_ref[0, 0] = l_new
+
+    @pl.when(i == nb - 1)
+    def _final():
+        denom = jnp.where(l_new == 0.0, 1.0, l_new)
+        o_ref[0, 0] = acc / denom[:, None]
+
+    @pl.when(i != nb - 1)
+    def _store():
+        o_ref[0, 0] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_attention_kernel(q: jax.Array, k_pages: jax.Array,
+                           v_pages: jax.Array, block_tables: jax.Array,
+                           lengths: jax.Array,
+                           interpret: bool | None = None) -> jax.Array:
+    """q: (B, Hq, D); k_pages/v_pages: (P, Hkv, ps, D); block_tables:
+    (B, NB) int32 (entries must be valid page ids — clamp dead slots);
+    lengths: (B,) int32, 1 <= lengths[b] <= NB*ps.  Returns (B, Hq, D) f32.
+    """
+    b, hq, d = q.shape
+    num_pages, hkv, ps, _ = k_pages.shape
+    assert hq % hkv == 0
+    g = hq // hkv
+    nb = block_tables.shape[1]
+    scale = 1.0 / (d ** 0.5)
+    qg = q.reshape(b, hkv, g, d)
+
+    kv_spec = pl.BlockSpec((1, 1, ps, d),
+                           lambda bb, hh, i, bt, ln: (bt[bb, i], hh, 0, 0))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, hkv, nb),
+        in_specs=[pl.BlockSpec((1, 1, g, d),
+                               lambda bb, hh, i, bt, ln: (bb, hh, 0, 0)),
+                  kv_spec, kv_spec],
+        out_specs=[pl.BlockSpec((1, 1, g, d),
+                                lambda bb, hh, i, bt, ln: (bb, hh, 0, 0)),
+                   pl.BlockSpec((1, 1, g),
+                                lambda bb, hh, i, bt, ln: (bb, hh, 0)),
+                   pl.BlockSpec((1, 1, g),
+                                lambda bb, hh, i, bt, ln: (bb, hh, 0))],
+    )
+    out = pl.pallas_call(
+        functools.partial(_paged_kernel, scale=scale, ps=ps),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((b, hkv, g, d), jnp.float32),
+                   jax.ShapeDtypeStruct((b, hkv, g), jnp.float32),
+                   jax.ShapeDtypeStruct((b, hkv, g), jnp.float32)],
+        interpret=resolve_interpret(interpret),
+    )(block_tables, lengths, qg, k_pages, v_pages)
+    return out[0].reshape(b, hq, d)

@@ -1,0 +1,39 @@
+"""Public op: jit'd paged decode attention wrapper.
+
+Unlike the dense attention wrappers there is no block-size fallback to
+pick: the page *is* the KV block, so any page size works as-is (odd sizes
+included — masking, not padding, handles partially-filled tail pages).
+The wrapper upcasts to f32 (matching the production attention paths, which
+compute scores in f32) and clamps block-table entries into the valid page
+range so dead entries of never-reached blocks can't index out of bounds.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import paged_attention_kernel
+from .ref import paged_attention_ref
+
+
+def paged_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                    block_tables: jax.Array, lengths: jax.Array,
+                    interpret: bool | None = None,
+                    use_ref: bool = False) -> jax.Array:
+    """q: (B, Hq, D) decode queries; k_pages/v_pages: (P, Hkv, ps, D) page
+    pools; block_tables: (B, NB) int32; lengths: (B,) int32 — sequence
+    ``b`` attends to logical positions ``[0, lengths[b])`` (>= 1).
+    Returns (B, Hq, D) in ``q.dtype``.
+    """
+    bt = jnp.clip(block_tables.astype(jnp.int32), 0, k_pages.shape[0] - 1)
+    lengths = lengths.astype(jnp.int32)
+    if use_ref:
+        out = paged_attention_ref(q.astype(jnp.float32),
+                                  k_pages.astype(jnp.float32),
+                                  v_pages.astype(jnp.float32), bt, lengths)
+    else:
+        out = paged_attention_kernel(q.astype(jnp.float32),
+                                     k_pages.astype(jnp.float32),
+                                     v_pages.astype(jnp.float32), bt, lengths,
+                                     interpret=interpret)
+    return out.astype(q.dtype)

@@ -1,0 +1,47 @@
+"""Pure-jnp oracle: paged decode attention == gather-to-dense + masked SDPA.
+
+The oracle materializes exactly what the Pallas kernel streams: pages are
+gathered through the block table in block order, so logical position ``p``
+lands at row ``p`` of the dense view, then a single masked softmax runs
+over the first ``lengths[b]`` rows.  This is the same dense math
+``nn.attention.cached_attention`` performs against a contiguous slotted
+cache — the bitwise anchor the paged serve engine is tested against.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = float(jnp.finfo(jnp.float32).min)
+
+
+def paged_attention_ref(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                        block_tables: jax.Array,
+                        lengths: jax.Array) -> jax.Array:
+    """q: (B, Hq, D); k_pages/v_pages: (P, Hkv, ps, D);
+    block_tables: (B, NB) int32; lengths: (B,) int32 with 1 <= len <= NB*ps.
+
+    Each sequence ``b`` attends to logical positions ``[0, lengths[b])``,
+    position ``p`` stored in page ``block_tables[b, p // ps]`` at offset
+    ``p % ps``.  Returns (B, Hq, D) in f32.
+    """
+    b, hq, d = q.shape
+    _, hkv, ps, _ = k_pages.shape
+    nb = block_tables.shape[1]
+    g = hq // hkv
+
+    def gather(pages):
+        x = pages[block_tables]                     # (B, NB, Hkv, ps, D)
+        return jnp.moveaxis(x, 2, 1).reshape(b, hkv, nb * ps, d)
+
+    k = gather(k_pages).astype(jnp.float32)
+    v = gather(v_pages).astype(jnp.float32)
+    qg = q.reshape(b, hkv, g, d).astype(jnp.float32)
+    s = jnp.einsum("bkgd,bkld->bkgl", qg, k) / math.sqrt(d)
+    valid = jnp.arange(nb * ps)[None] < lengths[:, None]        # (B, L)
+    s = jnp.where(valid[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgl,bkld->bkgd", p, v)
+    return o.reshape(b, hq, d)

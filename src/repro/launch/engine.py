@@ -30,6 +30,11 @@ This module replaces that with a *server* (DESIGN.md §5):
 * **Eviction** — finishing a slot just marks it free; the next admission
   resets the row's position track, so no cleanup pass is needed.
 
+``PagedServeEngine`` below replaces the per-slot worst-case cache rows
+with a paged pool + radix prefix sharing (DESIGN.md §7): same scheduler,
+same contracts, bit-exact outputs, but physical capacity decouples from
+``max_slots * max_len`` and shared system prompts prefill once.
+
 Determinism contract (asserted in tests/test_serve_engine.py and
 tests/test_engine_properties.py): a request served under any traffic mix
 yields exactly the tokens of the same request served alone.  In OFF
@@ -54,6 +59,7 @@ import jax.tree_util as jtu
 from ..core.engine import NLDPEConfig, OFF
 from ..models import lm
 from ..models.lm import ATTN_TYPES
+from .kvpool import PagePool, nldpe_fingerprint
 from .sampling import request_key, sample_tokens, step_keys
 
 
@@ -133,12 +139,7 @@ class ServeEngine:
         self.dtype = dtype
 
         s = max_slots
-        # windowed rings get prefill_chunk-1 slack lines: a chunk's writes
-        # land before its queries attend, so the chunk's first query still
-        # needs the full window behind it (see nn.attention.init_cache)
-        self.cache = lm.init_model_cache(cfg, s, max_len, dtype=dtype,
-                                         slotted=True,
-                                         ring_slack=self.prefill_chunk - 1)
+        self.cache = self._init_cache()
         self._tok = jnp.zeros((s,), jnp.int32)
         self._pos = jnp.zeros((s,), jnp.int32)
         self._active = jnp.zeros((s,), bool)
@@ -172,6 +173,17 @@ class ServeEngine:
         # eager scatters re-specialize on every distinct wave size)
         self._state_fn = jax.jit(self._build_state_fn(),
                                  donate_argnums=tuple(range(7)))
+
+    def _init_cache(self):
+        # windowed rings get prefill_chunk-1 slack lines: a chunk's writes
+        # land before its queries attend, so the chunk's first query still
+        # needs the full window behind it (see nn.attention.init_cache)
+        return lm.init_model_cache(self.cfg, self.max_slots, self.max_len,
+                                   dtype=self.dtype, slotted=True,
+                                   ring_slack=self.prefill_chunk - 1)
+
+    def _release_slot(self, sl: int) -> None:
+        """Hook: a slot's request finished (subclasses release its pages)."""
 
     # ------------------------------------------------------------------
     # jit'd building blocks
@@ -261,11 +273,31 @@ class ServeEngine:
     # ------------------------------------------------------------------
 
     def _validate(self, req: Request):
+        """Reject degenerate requests at admission with a clear error —
+        inside the jit'd chunk fn they would silently clamp (OOB embedding
+        gathers, dropped scatters) and produce garbage tokens instead."""
         p = len(req.tokens)
         if p < 1:
             raise ValueError(f"request {req.rid}: empty prompt")
         if req.max_new_tokens < 1:
-            raise ValueError(f"request {req.rid}: max_new_tokens < 1")
+            raise ValueError(
+                f"request {req.rid}: max_new_tokens="
+                f"{req.max_new_tokens} <= 0 (nothing to generate)")
+        if p > self.max_len:
+            raise ValueError(
+                f"request {req.rid}: prompt length {p} > max_len="
+                f"{self.max_len} (prompt alone overflows the KV cache)")
+        bad = [t for t in req.tokens
+               if not (0 <= int(t) < self.cfg.vocab_size)]
+        if bad:
+            raise ValueError(
+                f"request {req.rid}: token ids {bad[:4]} outside "
+                f"[0, vocab_size={self.cfg.vocab_size}) — the embedding "
+                f"gather would clamp them silently")
+        if req.top_k < 0:
+            raise ValueError(f"request {req.rid}: top_k={req.top_k} < 0")
+        if req.temperature != req.temperature:          # NaN
+            raise ValueError(f"request {req.rid}: temperature is NaN")
         if req.rid in self._out:
             raise ValueError(f"request {req.rid}: rid already in flight")
         need = p + req.max_new_tokens - 1
@@ -340,6 +372,7 @@ class ServeEngine:
             self._admitted_tick[r.rid] = self.tick
             if r.max_new_tokens == 1 or (self.eos_id >= 0
                                          and first == self.eos_id):
+                self._release_slot(sl)
                 self._free.appendleft(sl)
                 done.append(self._complete(
                     r, "eos" if first == self.eos_id else "length"))
@@ -362,6 +395,12 @@ class ServeEngine:
                 jnp.asarray(n_temp), jnp.asarray(n_topk),
                 jnp.asarray(n_keys))
         return done
+
+    def _select_wave(self, waiting: deque) -> list[Request]:
+        """Pop the next admission wave off the waiting queue (subclasses
+        add resource admission control, e.g. page availability)."""
+        return [waiting.popleft()
+                for _ in range(min(len(waiting), len(self._free)))]
 
     def submit(self, req: Request) -> Completion | None:
         """Admit one request into a free slot (raises if none are free).
@@ -413,6 +452,7 @@ class ServeEngine:
                           else "length")
                 done.append(self._complete(req, reason))
                 self._slot_owner[s] = None
+                self._release_slot(s)
                 self._free.append(s)
         return done
 
@@ -427,9 +467,9 @@ class ServeEngine:
             while queue and queue[0].arrival <= self.tick:
                 waiting.append(queue.popleft())
             if waiting and self._free:
-                wave = [waiting.popleft()
-                        for _ in range(min(len(waiting), len(self._free)))]
-                completions.extend(self._admit_wave(wave))
+                wave = self._select_wave(waiting)
+                if wave:
+                    completions.extend(self._admit_wave(wave))
             if not self.any_active:
                 if waiting:
                     continue        # instant finishes freed slots; re-admit
@@ -439,3 +479,352 @@ class ServeEngine:
                 break
             completions.extend(self.step())
         return sorted(completions, key=lambda c: c.rid)
+
+
+class PagedServeEngine(ServeEngine):
+    """Continuous batching over a **paged** KV cache with radix prefix
+    sharing (DESIGN.md §7).
+
+    Physical KV storage is a pool of ``num_pages`` fixed-size pages per
+    layer (``launch/kvpool.py`` owns the metadata; one page id addresses
+    every layer's pool row), and each slot maps logical blocks onto pages
+    through a block-table row.  Two things fall out:
+
+    * **capacity decouples from ``max_slots * max_len``** — pages are
+      allocated for a request's *actual* ``prompt + gen`` footprint, so a
+      smaller pool oversubscribes slots (admission waits for pages instead
+      of slots) and a larger one retains finished prompts as reusable
+      cache;
+    * **shared prefixes prefill once** — admission walks the radix index;
+      every fully-matched page is mapped read-only into the new slot's
+      block table and its prefill is skipped.  Only the suffix (always
+      including the final prompt token, whose logits seed sampling) runs
+      through chunked prefill, at per-slot chunk offsets.
+
+    Copy-on-write: when cached pages cover the *whole* prompt, the
+    boundary page is forked (one device-side page copy) so recomputing the
+    final token and appending decode K/V never mutates the shared
+    original.  Shared pages are therefore read-only by construction and
+    the jit'd compute is oblivious to sharing.
+
+    Determinism contract: outputs are **bit-exact** with the slotted
+    ``ServeEngine`` on any trace, OFF and NL-DPE-fused — attention runs on
+    the gathered dense view (``nn.attention.paged_dense_view``), which
+    reproduces the slotted cache's score rows exactly (prefix-hit pages
+    hold bit-identical K/V because K/V at a position depend only on the
+    token prefix and the exp-grid anchors to the fixed cache length; see
+    DESIGN.md §7 and tests/test_paged_engine*.py).
+    """
+
+    def __init__(self, cfg, params, *, max_slots: int, max_len: int,
+                 nldpe: NLDPEConfig = OFF, prefill_chunk: int = 16,
+                 decode_block: int = 4, eos_id: int = -1,
+                 batch_groups: int = 1, dtype=jnp.float32,
+                 page_size: int = 16, num_pages: int | None = None):
+        if "local" in cfg.layer_pattern:
+            raise NotImplementedError(
+                "paged KV cache needs non-windowed attention layers: ring "
+                "wrap history would break prefix sharing (got 'local')")
+        if page_size < 1:
+            raise ValueError("page_size >= 1")
+        self.page_size = page_size
+        self.n_blocks = -(-max_len // page_size)
+        if num_pages is None:
+            num_pages = max_slots * self.n_blocks    # slotted-parity default
+        self.num_pages = num_pages
+        self.pool = PagePool(num_pages, page_size)
+        self._fp = nldpe_fingerprint(nldpe)
+        self._slot_pages: list[list[int] | None] = [None] * max_slots
+        super().__init__(cfg, params, max_slots=max_slots, max_len=max_len,
+                         nldpe=nldpe, prefill_chunk=prefill_chunk,
+                         decode_block=decode_block, eos_id=eos_id,
+                         batch_groups=batch_groups, dtype=dtype)
+        self._setup_fn = jax.jit(self._build_setup_fn(), donate_argnums=(0,))
+        self._copy_fn = jax.jit(self._build_copy_fn(), donate_argnums=(0,))
+
+    def _init_cache(self):
+        return lm.init_model_cache(self.cfg, self.max_slots, self.max_len,
+                                   dtype=self.dtype,
+                                   paged=(self.num_pages, self.page_size))
+
+    @property
+    def stats(self) -> dict:
+        """Pool + prefix-sharing counters (see kvpool.PagePool.stats)."""
+        return dict(self.pool.stats)
+
+    # ------------------------------------------------------------------
+    # jit'd building blocks (paged variants)
+    # ------------------------------------------------------------------
+
+    def _build_chunk_fn(self):
+        cfg, nldpe, groups = self.cfg, self.nldpe, self.batch_groups
+        c = self.prefill_chunk
+
+        def chunk(cache, tokens, base_pos, mask, limit):
+            """One (max_slots, prefill_chunk) suffix-prefill chunk at
+            **per-slot** base positions: prefix hits shift each slot's
+            suffix independently, so ``base_pos``/``limit`` are (S,)
+            vectors instead of the slotted engine's shared scalars."""
+            cache = ServeEngine._clip_pos(cache, mask, base_pos)
+            positions = base_pos[:, None] + jnp.arange(c, dtype=jnp.int32)
+            logits, cache = lm.forward(self.params, tokens, cfg, mode="chunk",
+                                       cache=cache, positions=positions,
+                                       nldpe=nldpe, batch_groups=groups,
+                                       write_mask=mask)
+            return logits, ServeEngine._clip_pos(cache, mask, limit)
+
+        return chunk
+
+    def _build_setup_fn(self):
+        def setup(cache, mask, reuse, new_bt):
+            """Admission reset for masked slots, one fused dispatch: the
+            block-table row is replaced and the position track becomes
+            ``[0, reuse)`` valid (the radix-hit prefix — those pages
+            already hold this prompt's K/V), everything else never-valid.
+            """
+            def one(path, leaf):
+                keys = [k.key for k in path if isinstance(k, jtu.DictKey)]
+                if not keys or keys[-1] not in ("pos", "bt"):
+                    return leaf
+                bdim = _batch_dim(path)
+                m = _per_slot(mask, leaf, bdim)
+                if keys[-1] == "pos":
+                    r = _per_slot(reuse, leaf, bdim)
+                    iota = jnp.arange(leaf.shape[-1], dtype=jnp.int32)
+                    fresh = jnp.where(iota < r, iota, jnp.int32(-1))
+                    return jnp.where(m, fresh, leaf)
+                nbt = new_bt if leaf.ndim == new_bt.ndim else new_bt[None]
+                return jnp.where(m, nbt, leaf)
+
+            return jtu.tree_map_with_path(one, cache)
+
+        return setup
+
+    def _build_copy_fn(self):
+        def copy_page(cache, src, dst):
+            """Copy-on-write fork: duplicate physical page ``src`` into
+            ``dst`` across every layer's K/V (+scale) pool."""
+            def one(path, leaf):
+                keys = [k.key for k in path if isinstance(k, jtu.DictKey)]
+                if not keys or keys[-1] not in ("k", "v", "k_scale",
+                                                "v_scale"):
+                    return leaf
+                ax = _batch_dim(path)              # pages axis of the pool
+                row = jax.lax.dynamic_index_in_dim(leaf, src, axis=ax,
+                                                   keepdims=True)
+                return jax.lax.dynamic_update_index_in_dim(leaf, row, dst,
+                                                           axis=ax)
+
+            return jtu.tree_map_with_path(one, cache)
+
+        return copy_page
+
+    # ------------------------------------------------------------------
+    # admission planning: prefix match -> page budget
+    # ------------------------------------------------------------------
+
+    def _plan(self, req: Request, *, peek: bool) -> dict:
+        """Map a request onto pages: radix-hit pages to share, an optional
+        COW fork, and the fresh pages its prompt+gen footprint needs.
+
+        ``peek=True`` (wave selection) never touches pool state and
+        additionally reports ``cost`` — the pages admission would consume:
+        fresh allocations plus refcount-0 cache hits, which retaining
+        removes from the evictable set.
+        """
+        ps = self.page_size
+        plen = len(req.tokens)
+        hit = self.pool.match(self._fp, req.tokens, peek=peek)
+        fork_src = None
+        if hit and len(hit) * ps > plen - 1:
+            # cache covers the whole prompt; the boundary page must become
+            # private (final-token recompute + decode appends land in it)
+            fork_src = hit[-1]
+            hit = hit[:-1]
+            reuse = plen - 1
+        else:
+            reuse = len(hit) * ps
+        nb_need = -(-(plen + req.max_new_tokens - 1) // ps)
+        n_fresh = nb_need - len(hit)               # fork page included
+        plan = {"hit": hit, "fork_src": fork_src, "reuse": reuse,
+                "nb_need": nb_need, "n_fresh": n_fresh}
+        if peek:
+            ref0 = sum(1 for p in hit if self.pool.refcount(p) == 0)
+            plan["cost"] = n_fresh + ref0
+        return plan
+
+    def _select_wave(self, waiting: deque) -> list[Request]:
+        """Admit requests while both a slot and their page budget fit.
+        Leaves the rest queued until completions release pages; raises if
+        the head request cannot fit even into an idle pool (it never
+        will)."""
+        wave: list[Request] = []
+        avail = self.pool.available()
+        while waiting and len(wave) < len(self._free):
+            cost = self._plan(waiting[0], peek=True)["cost"]
+            if cost > avail:
+                break
+            avail -= cost
+            wave.append(waiting.popleft())
+        if not wave and waiting and not self.any_active:
+            need = self._plan(waiting[0], peek=True)["cost"]
+            raise RuntimeError(
+                f"request {waiting[0].rid} needs {need} pages but the pool "
+                f"holds {self.pool.num_pages} (page_size="
+                f"{self.page_size}); grow num_pages or shrink the request")
+        return wave
+
+    def _release_slot(self, sl: int) -> None:
+        pages = self._slot_pages[sl]
+        if pages is not None:
+            self.pool.release(pages)
+            self._slot_pages[sl] = None
+
+    # ------------------------------------------------------------------
+    # admission: plan -> retain/alloc -> publish -> COW -> suffix prefill
+    # ------------------------------------------------------------------
+
+    def _admit_wave(self, reqs: list[Request]) -> list[Completion]:
+        assert len(reqs) <= self.free_slots
+        rids = [r.rid for r in reqs]
+        if len(set(rids)) != len(rids):
+            raise ValueError(f"duplicate rids in one admission wave: {rids}")
+        for r in reqs:
+            self._validate(r)
+        s, c, ps = self.max_slots, self.prefill_chunk, self.page_size
+
+        # Phase 1 — plan + commit pool state for every request BEFORE any
+        # publish: requests in one wave never share each other's pages
+        # (their prefill runs in the same chunk dispatches, so one slot's
+        # pages are not fully written when another's queries would attend).
+        slots = [self._free.popleft() for _ in reqs]
+        plans = []
+        for r, sl in zip(reqs, slots):
+            plan = self._plan(r, peek=False)
+            self.pool.retain(plan["hit"])
+            fresh = self.pool.alloc(plan["n_fresh"])
+            if fresh is None:                      # submit() without budget
+                self.pool.release(plan["hit"])
+                for sl2 in slots[:len(plans)]:     # roll back committed reqs
+                    self._release_slot(sl2)
+                for sl2 in reversed(slots):
+                    self._free.appendleft(sl2)
+                raise RuntimeError(
+                    f"request {r.rid}: page pool exhausted "
+                    f"({self.pool.available()} available, "
+                    f"{plan['n_fresh']} needed); check free pages before "
+                    f"submit or let run() schedule admission")
+            if plan["fork_src"] is not None:
+                fork_dst = fresh[0]
+                self.cache = self._copy_fn(self.cache,
+                                           jnp.int32(plan["fork_src"]),
+                                           jnp.int32(fork_dst))
+                self.pool.note_cow()
+                bt_row = plan["hit"] + [fork_dst] + fresh[1:]
+            else:
+                bt_row = plan["hit"] + fresh
+            assert len(bt_row) == plan["nb_need"]
+            plan["bt_row"] = bt_row
+            self._slot_pages[sl] = list(bt_row)
+            self.pool.stats["prefill_tokens_saved"] += plan["reuse"]
+            plans.append(plan)
+
+        # Phase 2 — publish full prompt pages for *future* waves (walk
+        # skips chunks already in the index, so hit/forked pages whose
+        # chunk is published stay private duplicates).
+        for r, plan in zip(reqs, plans):
+            n_full = len(r.tokens) // ps
+            self.pool.publish(self._fp, r.tokens, plan["bt_row"][:n_full])
+
+        # Phase 3 — one fused jit reset: block tables + pos tracks (the
+        # radix-hit prefix [0, reuse) is immediately valid).
+        admit = np.zeros((s,), bool)
+        reuse_np = np.zeros((s,), np.int32)
+        # unallocated blocks keep the out-of-range sentinel: padded chunk
+        # tails that reach past nb_need must drop, not hit page 0
+        new_bt = np.full((s, self.n_blocks), self.num_pages, np.int32)
+        plen_np = np.ones((s,), np.int32)
+        for r, sl, plan in zip(reqs, slots, plans):
+            admit[sl] = True
+            reuse_np[sl] = plan["reuse"]
+            new_bt[sl, :plan["nb_need"]] = plan["bt_row"]
+            plen_np[sl] = len(r.tokens)
+        self.cache = self._setup_fn(self.cache, jnp.asarray(admit),
+                                    jnp.asarray(reuse_np),
+                                    jnp.asarray(new_bt))
+
+        # Phase 4 — chunked SUFFIX prefill at per-slot base positions.
+        suffix = plen_np - reuse_np                # >= 1: last token always
+        n_chunks = -(-int(suffix[admit].max()) // c)
+        tokens = np.zeros((s, n_chunks * c), np.int32)
+        ci_np = np.zeros((s,), np.int32)
+        col_np = np.zeros((s,), np.int32)
+        keys_np = np.zeros((s, 2), np.uint32)
+        temp_np = np.zeros((s,), np.float32)
+        topk_np = np.zeros((s,), np.int32)
+        for r, sl, plan in zip(reqs, slots, plans):
+            tokens[sl, :suffix[sl]] = r.tokens[plan["reuse"]:]
+            ci_np[sl] = (suffix[sl] - 1) // c
+            col_np[sl] = (suffix[sl] - 1) % c
+            keys_np[sl] = np.asarray(
+                request_key(r.seed if r.seed is not None else r.rid))
+            temp_np[sl] = r.temperature
+            topk_np[sl] = r.top_k
+        col_j = jnp.asarray(col_np)
+
+        last = jnp.zeros((s, self.cfg.vocab_size), jnp.float32)
+        for i in range(n_chunks):
+            mask = jnp.asarray(admit & (i * c < suffix))
+            base = (reuse_np + i * c).astype(np.int32)
+            limit = np.minimum(plen_np, base + c).astype(np.int32)
+            lg, self.cache = self._chunk_fn(
+                self.cache, jnp.asarray(tokens[:, i * c:(i + 1) * c]),
+                jnp.asarray(base), mask, jnp.asarray(limit))
+            last = self._last_fn(last, lg, jnp.asarray(admit & (ci_np == i)),
+                                 col_j)
+
+        all_firsts = np.asarray(self._sample_fn(
+            last, jnp.asarray(keys_np), jnp.asarray(plen_np),
+            jnp.asarray(temp_np), jnp.asarray(topk_np)))
+        firsts = [all_firsts[sl] for sl in slots]
+
+        # Phase 5 — identical post-prefill bookkeeping to the slotted
+        # engine: record first tokens, retire instant finishes (releasing
+        # their pages), merge decode state for the rest in one jit.
+        done: list[Completion] = []
+        sel = np.zeros((s,), bool)
+        n_tok = np.zeros((s,), np.int32)
+        n_pos = np.zeros((s,), np.int32)
+        n_gen = np.zeros((s,), np.int32)
+        n_temp = np.zeros((s,), np.float32)
+        n_topk = np.zeros((s,), np.int32)
+        n_keys = np.zeros((s, 2), np.uint32)
+        for r, sl, first in zip(reqs, slots, firsts):
+            first = int(first)
+            self._out[r.rid] = [first]
+            self._admitted_tick[r.rid] = self.tick
+            if r.max_new_tokens == 1 or (self.eos_id >= 0
+                                         and first == self.eos_id):
+                self._release_slot(sl)
+                self._free.appendleft(sl)
+                done.append(self._complete(
+                    r, "eos" if first == self.eos_id else "length"))
+                continue
+            self._slot_owner[sl] = r
+            sel[sl] = True
+            n_tok[sl] = first
+            n_pos[sl] = len(r.tokens)
+            n_gen[sl] = r.max_new_tokens - 1
+            n_temp[sl] = r.temperature
+            n_topk[sl] = r.top_k
+            n_keys[sl] = keys_np[sl]
+
+        if sel.any():
+            (self._tok, self._pos, self._active, self._gen_left, self._temp,
+             self._topk, self._keys) = self._state_fn(
+                self._tok, self._pos, self._active, self._gen_left,
+                self._temp, self._topk, self._keys, jnp.asarray(sel),
+                jnp.asarray(n_tok), jnp.asarray(n_pos), jnp.asarray(n_gen),
+                jnp.asarray(n_temp), jnp.asarray(n_topk),
+                jnp.asarray(n_keys))
+        return done

@@ -1,0 +1,271 @@
+"""Paged KV-cache pool: block allocator + radix prefix index (host side).
+
+The slotted engine of ``launch/engine.py`` reserves one contiguous
+worst-case ``max_len`` cache row per slot and re-prefills every shared
+system prompt from scratch.  This module is the metadata half of the paged
+replacement (DESIGN.md §7): physical KV storage becomes a pool of
+fixed-size **pages** (``page_size`` token positions each, one page id valid
+across every layer's pool array), and each slot maps logical blocks onto
+physical pages through a block table.  All bookkeeping here is plain
+Python/numpy — device arrays never flow through this module, so the
+allocator can run between jit dispatches at zero trace cost.
+
+Three cooperating pieces:
+
+* **Free-list allocator with refcounts** — ``alloc`` hands out pages with
+  refcount 1; ``retain``/``release`` move shared pages up and down.  A page
+  whose refcount hits 0 returns to the free list immediately *unless* a
+  radix node still owns it, in which case it stays resident as reusable
+  cache until evicted.
+* **Radix (trie) prefix index** — prompts are split into full
+  ``page_size``-token chunks; each trie edge is one chunk's token tuple and
+  each node owns the page holding that chunk's K/V.  Lookups walk the trie
+  and return the pages of the longest fully-matched prefix, so a request
+  sharing a system prompt maps those pages read-only and skips their
+  prefill entirely.  Roots are keyed by an **NL-DPE config fingerprint**:
+  pages written under one numerics mode (OFF / NL-DPE / fused, bit width,
+  log-domain grid) are never served to a request running another, because
+  the cached K/V bits differ between modes.
+* **LRU eviction** — when the free list runs dry, ``alloc`` evicts
+  leaf-most radix nodes whose pages have refcount 0, least recently used
+  first (``last_use`` is a logical clock bumped on every hit).  Interior
+  nodes only become evictable once their children are gone, so the index
+  never dangles a suffix whose prefix was dropped.
+
+Copy-on-write is a *protocol* between this pool and the engine: when a
+prompt is entirely covered by cached pages, the engine still needs to
+recompute the final prompt token (its logits seed sampling) and will later
+append decode K/V into that last block — so it forks the boundary page
+(``alloc`` a private copy, device-side content copy, ``note_cow``) instead
+of mutating the shared original.  Shared pages are therefore read-only by
+construction and no masking inside jit'd compute ever has to know about
+sharing.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+
+import numpy as np
+
+
+def nldpe_fingerprint(nldpe) -> tuple:
+    """Stable, hashable fingerprint of an NLDPEConfig (nested dataclasses
+    flattened to sorted (name, value) tuples).  Two configs with the same
+    fingerprint produce bit-identical cached K/V for the same tokens."""
+    def flat(x):
+        if dataclasses.is_dataclass(x) and not isinstance(x, type):
+            return tuple(sorted(
+                (f.name, flat(getattr(x, f.name)))
+                for f in dataclasses.fields(x)))
+        if isinstance(x, (list, tuple)):
+            return tuple(flat(v) for v in x)
+        return x
+    return flat(nldpe)
+
+
+class RadixNode:
+    """One full-page chunk of a published prompt.  ``page`` is the physical
+    page holding this chunk's K/V in every layer pool."""
+
+    __slots__ = ("key", "page", "parent", "children", "last_use")
+
+    def __init__(self, key: tuple, page: int, parent: "RadixNode | None"):
+        self.key = key
+        self.page = page
+        self.parent = parent
+        self.children: dict[tuple, RadixNode] = {}
+        self.last_use = 0
+
+
+class PagePool:
+    """Block-pool allocator + radix prefix index for a paged KV cache.
+
+    One instance manages the page ids of one engine's per-layer pool
+    arrays; ``num_pages`` is the physical capacity shared by every layer
+    (page ``i`` holds block data in layer ``l``'s pool row ``i`` for all
+    ``l``).
+    """
+
+    def __init__(self, num_pages: int, page_size: int):
+        if num_pages < 1 or page_size < 1:
+            raise ValueError("num_pages and page_size must be >= 1")
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self._free: deque[int] = deque(range(num_pages))
+        self._ref = np.zeros(num_pages, np.int64)
+        self._node: list[RadixNode | None] = [None] * num_pages
+        self._roots: dict[tuple, RadixNode] = {}
+        self._clock = 0
+        self.stats = {"lookups": 0, "hits": 0, "hit_pages": 0,
+                      "prefill_tokens_saved": 0, "evicted": 0,
+                      "cow_forks": 0, "published": 0}
+
+    # ------------------------------------------------------------------
+    # allocation / refcounts
+    # ------------------------------------------------------------------
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def cached_pages(self) -> int:
+        """Pages resident only as reusable radix cache (refcount 0)."""
+        return sum(1 for p in range(self.num_pages)
+                   if self._ref[p] == 0 and self._node[p] is not None)
+
+    def available(self) -> int:
+        """Pages obtainable right now: free + evictable cache."""
+        return self.free_pages + self.cached_pages
+
+    def alloc(self, n: int) -> list[int] | None:
+        """Allocate ``n`` pages (refcount 1 each), evicting LRU cache pages
+        as needed.  Returns None — allocating nothing — if the pool cannot
+        satisfy the request even after evicting every refcount-0 page."""
+        if n < 0:
+            raise ValueError("alloc(n < 0)")
+        if self.available() < n:
+            return None
+        pages = []
+        for _ in range(n):
+            if not self._free:
+                evicted = self._evict_lru()
+                assert evicted is not None, "available() said this fits"
+            pages.append(self._free.popleft())
+        for p in pages:
+            assert self._ref[p] == 0 and self._node[p] is None
+            self._ref[p] = 1
+        return pages
+
+    def refcount(self, page: int) -> int:
+        return int(self._ref[page])
+
+    def retain(self, pages) -> None:
+        for p in pages:
+            self._ref[p] += 1
+
+    def release(self, pages) -> None:
+        """Drop one reference per page.  Unreferenced pages return to the
+        free list unless a radix node keeps them resident as cache."""
+        for p in pages:
+            if self._ref[p] <= 0:
+                raise ValueError(f"release of unreferenced page {p}")
+            self._ref[p] -= 1
+            if self._ref[p] == 0 and self._node[p] is None:
+                self._free.append(p)
+
+    def note_cow(self) -> None:
+        """Record one copy-on-write fork (the device copy happens in the
+        engine; the fork's page came from ``alloc``)."""
+        self.stats["cow_forks"] += 1
+
+    # ------------------------------------------------------------------
+    # radix prefix index
+    # ------------------------------------------------------------------
+
+    def _root(self, fingerprint: tuple) -> RadixNode:
+        if fingerprint not in self._roots:
+            self._roots[fingerprint] = RadixNode((), -1, None)
+        return self._roots[fingerprint]
+
+    def _chunks(self, tokens) -> list[tuple]:
+        ps = self.page_size
+        n_full = len(tokens) // ps
+        return [tuple(tokens[i * ps:(i + 1) * ps]) for i in range(n_full)]
+
+    def match(self, fingerprint: tuple, tokens, *, peek: bool = False) -> list[int]:
+        """Pages of the longest published full-page prefix of ``tokens``.
+
+        The caller must ``retain`` the returned pages before the next
+        ``alloc`` (eviction could otherwise reclaim a refcount-0 hit).
+        ``peek=True`` skips the LRU bump and the hit statistics — admission
+        planning uses it to cost a request without committing.
+        """
+        node = self._roots.get(fingerprint)
+        pages: list[int] = []
+        if node is not None:
+            for chunk in self._chunks(tokens):
+                child = node.children.get(chunk)
+                if child is None:
+                    break
+                pages.append(child.page)
+                node = child
+        if not peek:
+            self._clock += 1
+            for p in pages:
+                node = self._node[p]
+                if node is not None:
+                    node.last_use = self._clock
+            self.stats["lookups"] += 1
+            if pages:
+                self.stats["hits"] += 1
+                self.stats["hit_pages"] += len(pages)
+        return pages
+
+    def publish(self, fingerprint: tuple, tokens, pages) -> None:
+        """Insert the full-page chunks of ``tokens`` into the radix index,
+        chunk ``i`` backed by ``pages[i]``.  Chunks already published keep
+        their original page (the duplicate stays private to its slot and is
+        freed on release).  Published pages must be live (refcount > 0 via
+        the publishing slot); the index keeps them resident after release
+        until LRU eviction reclaims them.
+        """
+        node = self._root(fingerprint)
+        self._clock += 1
+        for chunk, page in zip(self._chunks(tokens), pages):
+            child = node.children.get(chunk)
+            if child is None:
+                if self._ref[page] <= 0:
+                    raise ValueError(f"publish of dead page {page}")
+                if self._node[page] is not None:
+                    raise ValueError(f"page {page} already published")
+                child = RadixNode(chunk, page, node)
+                node.children[chunk] = child
+                self._node[page] = child
+                self.stats["published"] += 1
+            child.last_use = self._clock
+            node = child
+
+    # ------------------------------------------------------------------
+    # LRU eviction
+    # ------------------------------------------------------------------
+
+    def _evictable(self):
+        """Leaf radix nodes whose page nobody references."""
+        for p in range(self.num_pages):
+            node = self._node[p]
+            if node is not None and self._ref[p] == 0 and not node.children:
+                yield node
+
+    def _evict_lru(self) -> int | None:
+        victim = min(self._evictable(), default=None,
+                     key=lambda n: n.last_use)
+        if victim is None:
+            return None
+        page = victim.page
+        assert victim.parent is not None
+        del victim.parent.children[victim.key]
+        self._node[page] = None
+        self._free.append(page)
+        self.stats["evicted"] += 1
+        return page
+
+    # ------------------------------------------------------------------
+    # invariants (tests call this after every trace)
+    # ------------------------------------------------------------------
+
+    def check(self) -> None:
+        """Every page is exactly one of: free, referenced, or radix-cached."""
+        free = set(self._free)
+        assert len(free) == len(self._free), "duplicate free-list entries"
+        for p in range(self.num_pages):
+            in_free = p in free
+            ref = int(self._ref[p])
+            node = self._node[p]
+            assert ref >= 0
+            if in_free:
+                assert ref == 0 and node is None, f"freed page {p} still live"
+            if node is not None:
+                assert node.page == p
+                assert not in_free

@@ -11,7 +11,9 @@ per-token Python loop survives as ``python_loop_decode``, the baseline that
 Everything here is *lockstep*: one fixed-shape batch that prefills,
 decodes, and finishes together.  Irregular traffic (staggered arrivals,
 mixed lengths, per-request sampling) goes through the continuous-batching
-engine in ``launch/engine.py`` instead — ``--continuous`` below demos it.
+engine in ``launch/engine.py`` instead — ``--continuous`` below demos it,
+and ``--paged`` demos the paged KV-cache engine with radix prefix sharing
+on a shared-system-prompt trace (DESIGN.md §7).
 
 The CLI driver below runs a reduced config end-to-end (prefill a batch of
 prompts, then decode), optionally through the NL-DPE numerics mode.
@@ -153,10 +155,20 @@ def run(argv=None):
     p.add_argument("--continuous", action="store_true",
                    help="continuous-batching engine over a mixed trace "
                         "(slot-based KV cache, staggered arrivals)")
+    p.add_argument("--paged", action="store_true",
+                   help="paged KV-cache engine with radix prefix sharing "
+                        "over a shared-system-prompt trace")
+    p.add_argument("--page-size", type=int, default=16,
+                   help="tokens per KV page for --paged")
+    p.add_argument("--num-pages", type=int, default=None,
+                   help="physical pages in the pool for --paged "
+                        "(default: slots * ceil(max_len / page_size))")
+    p.add_argument("--system-prompt-len", type=int, default=24,
+                   help="shared prefix length of the --paged demo trace")
     p.add_argument("--slots", type=int, default=4,
-                   help="KV-cache slots for --continuous")
+                   help="KV-cache slots for --continuous/--paged")
     p.add_argument("--requests", type=int, default=12,
-                   help="trace length for --continuous")
+                   help="trace length for --continuous/--paged")
     p.add_argument("--seed", type=int, default=0)
     args = p.parse_args(argv)
 
@@ -168,6 +180,44 @@ def run(argv=None):
     with param_dtype(jnp.float32):
         params = lm.init_params(key, cfg)
 
+    if args.paged:
+        import numpy as np
+
+        from .engine import PagedServeEngine, Request
+        rng = np.random.default_rng(args.seed)
+        sys_len = min(args.system_prompt_len, args.prompt_len)
+        max_len = args.prompt_len + args.gen_len
+        system = tuple(int(t) for t in rng.integers(0, cfg.vocab_size,
+                                                    sys_len))
+        reqs = [Request(rid=i,
+                        tokens=system + tuple(int(t) for t in rng.integers(
+                            0, cfg.vocab_size,
+                            int(rng.integers(1, max(
+                                2, args.prompt_len - sys_len + 1))))),
+                        max_new_tokens=int(rng.integers(2, args.gen_len + 1)),
+                        arrival=int(rng.poisson(2) * i))
+                for i in range(args.requests)]
+        eng = PagedServeEngine(cfg, params, max_slots=args.slots,
+                               max_len=max_len, nldpe=nldpe,
+                               page_size=args.page_size,
+                               num_pages=args.num_pages)
+        t0 = time.time()
+        comps = eng.run(reqs)
+        dt = time.time() - t0
+        n_tok = sum(len(c.tokens) for c in comps)
+        st = eng.stats
+        print(f"[serve] paged: {len(comps)} requests, {n_tok} tokens in "
+              f"{dt * 1e3:.0f} ms ({n_tok / max(dt, 1e-9):.1f} tok/s, "
+              f"{args.slots} slots, {eng.pool.num_pages} pages x "
+              f"{args.page_size} tok)")
+        print(f"  prefix hits {st['hits']}/{st['lookups']}, "
+              f"prefill tokens saved {st['prefill_tokens_saved']}, "
+              f"cow forks {st['cow_forks']}, evicted {st['evicted']}")
+        for c in comps[:4]:
+            print(f"  rid={c.rid} admitted@{c.admitted_tick} "
+                  f"finished@{c.finished_tick} [{c.finish_reason}] "
+                  f"tokens={c.tokens[:8]}")
+        return comps
     if args.continuous:
         import numpy as np
 

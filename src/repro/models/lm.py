@@ -28,7 +28,8 @@ import jax
 import jax.numpy as jnp
 
 from ..core.engine import NLDPEConfig, OFF
-from ..nn.attention import AttnSpec, attn_apply, attn_init, init_cache
+from ..nn.attention import (AttnSpec, attn_apply, attn_init, init_cache,
+                            init_paged_cache)
 from ..nn.basic import (embedding_apply, embedding_init, rmsnorm_apply,
                         rmsnorm_init, unembed_apply)
 from ..nn.mlp import mlp_apply, mlp_init
@@ -84,10 +85,17 @@ def init_block(key, cfg, btype: str):
 
 def init_block_cache(cfg, btype: str, batch: int, max_len: int,
                      dtype=jnp.bfloat16, slotted: bool = False,
-                     ring_slack: int = 0):
+                     ring_slack: int = 0,
+                     paged: tuple[int, int] | None = None):
     if btype in ATTN_TYPES:
+        quantized = cfg.kv_cache_dtype == "int8"
+        if paged is not None:
+            num_pages, page_size = paged
+            return {"attn": init_paged_cache(
+                _attn_spec(cfg, btype), batch, max_len, num_pages=num_pages,
+                page_size=page_size, dtype=dtype, quantized=quantized)}
         return {"attn": init_cache(_attn_spec(cfg, btype), batch, max_len, dtype,
-                                   quantized=cfg.kv_cache_dtype == "int8",
+                                   quantized=quantized,
                                    slotted=slotted, ring_slack=ring_slack)}
     if btype == "rec":
         return {"rec": recurrent_state_init(batch, cfg.d_rnn or cfg.d_model)}
@@ -182,26 +190,33 @@ def init_params(key, cfg):
 
 
 def init_model_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16,
-                     slotted: bool = False, ring_slack: int = 0):
+                     slotted: bool = False, ring_slack: int = 0,
+                     paged: tuple[int, int] | None = None):
     """slotted=True: every batch row is an independent serve slot with its
     own position track; ring_slack widens windowed rings for multi-token
-    chunk writes (see nn.attention.init_cache)."""
+    chunk writes (see nn.attention.init_cache).  paged=(num_pages,
+    page_size): attention K/V live in per-layer page pools addressed
+    through per-slot block tables (nn.attention.init_paged_cache) — one
+    page id is valid across every layer."""
     pat, n_groups, tail = _pattern_split(cfg)
     one = {f"b{i}": init_block_cache(cfg, t, batch, max_len, dtype,
-                                     slotted=slotted, ring_slack=ring_slack)
+                                     slotted=slotted, ring_slack=ring_slack,
+                                     paged=paged)
            for i, t in enumerate(pat)}
     cache = {"groups": jax.tree.map(
         lambda x: jnp.tile(x[None], (n_groups,) + (1,) * x.ndim), one)}
     if tail:
         cache["tail"] = {f"b{i}": init_block_cache(cfg, t, batch, max_len,
                                                    dtype, slotted=slotted,
-                                                   ring_slack=ring_slack)
+                                                   ring_slack=ring_slack,
+                                                   paged=paged)
                          for i, t in enumerate(tail)}
     return cache
 
 
 def cache_pspecs(cfg, batch: int, max_len: int, mesh, rules,
-                 slotted: bool = False):
+                 slotted: bool = False,
+                 paged: tuple[int, int] | None = None):
     """PartitionSpec pytree mirroring init_model_cache (for dry-run jit)."""
     from jax.sharding import PartitionSpec as P
 
@@ -209,6 +224,10 @@ def cache_pspecs(cfg, batch: int, max_len: int, mesh, rules,
 
     def attn_spec_tree(btype):
         s = _attn_spec(cfg, btype)
+        if paged is not None:
+            from ..nn.attention import cache_specs
+            return cache_specs(s, batch, max_len, mesh, rules, paged=paged,
+                               quantized=cfg.kv_cache_dtype == "int8")
         length = min(max_len, s.window) if s.window else max_len
         kv_shape = (batch, s.n_kv_heads, length, s.head_dim)
         model_size = mesh.shape.get("model", 1) if mesh is not None else 1

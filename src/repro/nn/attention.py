@@ -19,6 +19,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import os
 
 import jax
 import jax.numpy as jnp
@@ -260,6 +261,75 @@ def init_cache(s: AttnSpec, batch: int, max_len: int, dtype=jnp.bfloat16,
     return cache
 
 
+def init_paged_cache(s: AttnSpec, batch: int, max_len: int, *,
+                     num_pages: int, page_size: int, dtype=jnp.bfloat16,
+                     quantized: bool = False):
+    """Paged layout: K/V live in a pool of ``num_pages`` fixed-size pages
+    shared by every slot; each slot maps logical block ``j`` (positions
+    ``[j*page_size, (j+1)*page_size)``) onto a physical page through its
+    block-table row ``bt[slot, j]``.  Page sharing (radix prefix hits,
+    ``launch/kvpool.py``) and oversubscription both become block-table
+    edits — physical capacity decouples from ``max_slots * max_len``.
+
+    Validity stays the slotted per-slot ``pos`` track (slot, position):
+    attention never consults the block table for masking, so stale page
+    contents behind invalid positions are harmless, exactly as stale ring
+    lines are in the slotted layout.  Windowed layers are not supported:
+    their ring semantics would make page contents depend on wrap history,
+    which breaks prefix sharing (the engine gates on this).
+    """
+    if s.window is not None:
+        raise NotImplementedError(
+            "paged KV cache supports non-windowed attention layers only")
+    n_blocks = -(-max_len // page_size)
+    kv_shape = (num_pages, s.n_kv_heads, page_size, s.head_dim)
+    # unmapped block-table entries hold the sentinel ``num_pages``: writes
+    # routed through them scatter out of bounds and DROP (a chunk's padded
+    # tail positions may reach past the slot's allocated blocks — they must
+    # not land in page 0, which belongs to someone else), and reads clamp
+    # to a real page whose lanes the pos-track validity mask kills anyway
+    cache = {"pos": jnp.full((batch, max_len), -1, jnp.int32),
+             "bt": jnp.full((batch, n_blocks), num_pages, jnp.int32)}
+    if quantized:
+        cache.update({
+            "k": jnp.zeros(kv_shape, jnp.int8),
+            "v": jnp.zeros(kv_shape, jnp.int8),
+            "k_scale": jnp.zeros(kv_shape[:3], jnp.float32),
+            "v_scale": jnp.zeros(kv_shape[:3], jnp.float32),
+        })
+    else:
+        cache.update({"k": jnp.zeros(kv_shape, dtype),
+                      "v": jnp.zeros(kv_shape, dtype)})
+    return cache
+
+
+def paged_dense_view(cache) -> dict:
+    """Gather a paged cache into the dense slotted layout (B, H, L, D).
+
+    This is the lax twin of ``kernels/paged_attention`` (which gathers
+    page-by-page inside the Pallas grid): pages are taken through the block
+    table in block order, so logical position ``p`` lands at row ``p`` of
+    the view — making every downstream op (``cached_attention``, the
+    NL-DPE log-domain paths) bit-identical to the dense slotted cache,
+    including the exp-grid anchoring to the cache length ``L``.  The view
+    is sliced to the ``pos`` track's length, so a page size that does not
+    divide ``max_len`` never changes the score-row extent.
+    """
+    b, length = cache["pos"].shape
+
+    def gather(name):
+        x = cache[name][cache["bt"]]            # (B, NB, H, ps[, D])
+        x = jnp.moveaxis(x, 2, 1)               # (B, H, NB, ps[, D])
+        flat = x.reshape(x.shape[0], x.shape[1], -1, *x.shape[4:])
+        return flat[:, :, :length]
+
+    view = {"pos": cache["pos"], "k": gather("k"), "v": gather("v")}
+    if "k_scale" in cache:
+        view["k_scale"] = gather("k_scale")
+        view["v_scale"] = gather("v_scale")
+    return view
+
+
 def _quantize_kv(x: jax.Array):
     """(B, H, S, D) -> int8 codes + per-(B, H, S) scale."""
     scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0
@@ -277,9 +347,30 @@ def _dequantize_kv(cache, name: str) -> jax.Array:
 
 
 def cache_specs(s: AttnSpec, batch: int, max_len: int, mesh, rules,
-                dtype=jnp.bfloat16, slotted: bool = False):
-    """PartitionSpecs mirroring init_cache (kv-head or sequence sharded)."""
+                dtype=jnp.bfloat16, slotted: bool = False,
+                paged: tuple[int, int] | None = None,
+                quantized: bool = False):
+    """PartitionSpecs mirroring init_cache / init_paged_cache (kv-head or
+    sequence sharded; ``paged=(num_pages, page_size)`` shards the pool's
+    leading "pages" axis per the rule table instead of batch).  This is
+    the single source of paged spec trees — ``lm.cache_pspecs`` delegates
+    here."""
+    from jax.sharding import PartitionSpec as P
+
     from ..parallel.sharding import resolve
+    if paged is not None:
+        num_pages, page_size = paged
+        n_blocks = -(-max_len // page_size)
+        kv_shape = (num_pages, s.n_kv_heads, page_size, s.head_dim)
+        kv = resolve(rules, ("pages", "kv_heads", None, None), kv_shape, mesh)
+        tree = {"k": kv, "v": kv,
+                "pos": resolve(rules, ("slots", None), (batch, max_len), mesh),
+                "bt": resolve(rules, ("slots", None), (batch, n_blocks), mesh)}
+        if quantized:
+            sc = resolve(rules, ("pages", "kv_heads", None), kv_shape[:3],
+                         mesh)
+            tree.update({"k_scale": sc, "v_scale": sc})
+        return tree
     length = min(max_len, s.window) if s.window else max_len
     kv_shape = (batch, s.n_kv_heads, length, s.head_dim)
     # prefer kv-head sharding; resolver falls back per divisibility
@@ -287,7 +378,6 @@ def cache_specs(s: AttnSpec, batch: int, max_len: int, mesh, rules,
     if mesh is not None and s.n_kv_heads % mesh.shape.get("model", 1) != 0:
         kv_axes = ("batch", None, "kv_seq", None)
     spec = resolve(rules, kv_axes, kv_shape, mesh)
-    from jax.sharding import PartitionSpec as P
     pos = (resolve(rules, ("slots", None), (batch, length), mesh)
            if slotted else P())
     return {"k": spec, "v": spec, "pos": pos}
@@ -329,6 +419,9 @@ def update_cache(cache, k_new, v_new, pos: jax.Array, write_mask=None):
             cache["pos"], pos[None].astype(jnp.int32), slot, axis=0)
         return out
 
+    if "bt" in cache:                               # paged layout
+        return _update_cache_paged(cache, k_new, v_new, pos, write_mask)
+
     # slotted layout: per-slot scatter, each batch row writes only its own
     # cache line (cross-slot leakage is structurally impossible)
     b = cache["k"].shape[0]
@@ -357,6 +450,55 @@ def update_cache(cache, k_new, v_new, pos: jax.Array, write_mask=None):
         out["v"] = cache["v"].at[bidx, :, slots].set(
             jnp.swapaxes(v_new, 1, 2).astype(cache["v"].dtype), mode="drop")
     out["pos"] = cache["pos"].at[bidx, slots].set(pos2, mode="drop")
+    return out
+
+
+def _update_cache_paged(cache, k_new, v_new, pos: jax.Array, write_mask=None):
+    """Scatter new K/V steps through the block table into the page pool.
+
+    ``pos`` is (B,) — one step per slot — or (B, C) — C steps (chunked
+    prefill).  Positions are absolute (paged caches are non-windowed, so
+    there is no ring modulo): position ``p`` lands in page
+    ``bt[slot, p // page_size]`` at offset ``p % page_size``.  Masked or
+    out-of-range writes are routed to page id ``num_pages`` and dropped —
+    the same OOB-drop freeze the slotted layout uses.  The engine
+    guarantees written pages are private to their slot (shared prefix
+    pages are read-only by the COW protocol), so no two slots ever scatter
+    into the same page.
+    """
+    num_pages, _, page_size, _ = cache["k"].shape
+    b, length = cache["pos"].shape
+    out = dict(cache)
+    if pos.ndim == 0:
+        pos = jnp.broadcast_to(pos[None], (b,))
+    pos2 = (pos[:, None] if pos.ndim == 1 else pos).astype(jnp.int32)  # (B, C)
+    n_blocks = cache["bt"].shape[1]
+    block = jnp.clip(pos2 // page_size, 0, n_blocks - 1)
+    page = jnp.take_along_axis(cache["bt"], block, axis=1)             # (B, C)
+    offset = pos2 % page_size
+    ok = (pos2 >= 0) & (pos2 < length)
+    if write_mask is not None:
+        ok = ok & write_mask[:, None]
+    page = jnp.where(ok, page, num_pages)          # OOB scatter -> dropped
+    if "k_scale" in cache:
+        kq, ks = _quantize_kv(k_new)
+        vq, vs = _quantize_kv(v_new)
+        out["k"] = cache["k"].at[page, :, offset].set(
+            jnp.swapaxes(kq, 1, 2), mode="drop")
+        out["v"] = cache["v"].at[page, :, offset].set(
+            jnp.swapaxes(vq, 1, 2), mode="drop")
+        out["k_scale"] = cache["k_scale"].at[page, :, offset].set(
+            jnp.swapaxes(ks, 1, 2), mode="drop")
+        out["v_scale"] = cache["v_scale"].at[page, :, offset].set(
+            jnp.swapaxes(vs, 1, 2), mode="drop")
+    else:
+        out["k"] = cache["k"].at[page, :, offset].set(
+            jnp.swapaxes(k_new, 1, 2).astype(cache["k"].dtype), mode="drop")
+        out["v"] = cache["v"].at[page, :, offset].set(
+            jnp.swapaxes(v_new, 1, 2).astype(cache["v"].dtype), mode="drop")
+    bidx = jnp.arange(b)[:, None]
+    pos_idx = jnp.where(ok, pos2, length)
+    out["pos"] = cache["pos"].at[bidx, pos_idx].set(pos2, mode="drop")
     return out
 
 
@@ -442,17 +584,38 @@ def attn_apply(p, s: AttnSpec, x: jax.Array, *, positions: jax.Array,
         else:
             pos = positions[0]
         cache = update_cache(cache, k, v, pos, write_mask=write_mask)
+        if ("bt" in cache and pos.ndim == 1
+                and not nldpe.enabled and s.softcap is None
+                and "k_scale" not in cache
+                and os.environ.get("NLDPE_PAGED_KERNEL", "0")
+                not in ("", "0")):
+            # opt-in TPU hot path: stream pages through the Pallas kernel
+            # (block-table gather inside the grid) instead of materializing
+            # the dense view.  Matches the dense path within float
+            # tolerance, not bitwise — hence the explicit switch; engine
+            # caches are contiguous, so valid lanes are [0, pos] per slot.
+            from ..kernels.paged_attention.ops import paged_attention
+            o = paged_attention(q[:, :, 0], cache["k"], cache["v"],
+                                cache["bt"],
+                                pos.astype(jnp.int32) + 1)[:, :, None]
+            o = shard(o, "batch", "heads", None, None)
+            y = jnp.einsum("bhsk,hkd->bsd", o, p["wo"].astype(o.dtype))
+            return shard(y, "batch", None, "act_embed"), cache
+        # paged caches attend through the gathered dense view: bit-identical
+        # to the slotted layout (the lax twin of kernels/paged_attention;
+        # NLDPE_PAGED_KERNEL=1 above opts decode into the kernel itself)
+        att = paged_dense_view(cache) if "bt" in cache else cache
         if nldpe.enabled:
             # NL-DPE decode: log-domain DMMul over the cached keys/values
-            valid = cache_valid_mask(cache["pos"],
+            valid = cache_valid_mask(att["pos"],
                                      pos[:, None] if pos.ndim else pos,
                                      s.window)                     # (B|1,1,L)
-            kr = jnp.repeat(_dequantize_kv(cache, "k"), s.group, axis=1)
-            vr = jnp.repeat(_dequantize_kv(cache, "v"), s.group, axis=1)
+            kr = jnp.repeat(_dequantize_kv(att, "k"), s.group, axis=1)
+            vr = jnp.repeat(_dequantize_kv(att, "v"), s.group, axis=1)
             o = nldpe.attention(q, kr.astype(q.dtype), vr.astype(q.dtype),
                                 causal=False, mask=valid[:, None])
         else:
-            o = cached_attention(q, cache, pos, s, s.softcap)
+            o = cached_attention(q, att, pos, s, s.softcap)
     elif mode == "chunk":
         assert cache is not None
         if cache["pos"].ndim != 2:
@@ -461,14 +624,15 @@ def attn_apply(p, s: AttnSpec, x: jax.Array, *, positions: jax.Array,
         qpos = (positions if positions.ndim == 2
                 else jnp.broadcast_to(positions[None, :], (b, seq)))
         cache = update_cache(cache, k, v, qpos, write_mask=write_mask)
+        att = paged_dense_view(cache) if "bt" in cache else cache
         if nldpe.enabled:
-            valid = cache_valid_mask(cache["pos"], qpos, s.window)  # (B,S,L)
-            kr = jnp.repeat(_dequantize_kv(cache, "k"), s.group, axis=1)
-            vr = jnp.repeat(_dequantize_kv(cache, "v"), s.group, axis=1)
+            valid = cache_valid_mask(att["pos"], qpos, s.window)    # (B,S,L)
+            kr = jnp.repeat(_dequantize_kv(att, "k"), s.group, axis=1)
+            vr = jnp.repeat(_dequantize_kv(att, "v"), s.group, axis=1)
             o = nldpe.attention(q, kr.astype(q.dtype), vr.astype(q.dtype),
                                 causal=False, mask=valid[:, None])
         else:
-            o = cached_attention(q, cache, qpos, s, s.softcap)
+            o = cached_attention(q, att, qpos, s, s.softcap)
     else:
         if nldpe.enabled:
             if s.window is None and prefix_len is None and positions.ndim == 1:
@@ -490,6 +654,9 @@ def attn_apply(p, s: AttnSpec, x: jax.Array, *, positions: jax.Array,
             o = blockwise_attention(q, k, v, causal=True, window=s.window,
                                     prefix_len=prefix_len, softcap=s.softcap)
         if cache is not None:  # prefill populates the cache (ring-consistent)
+            if "bt" in cache:
+                raise ValueError("paged caches are filled via mode='chunk' "
+                                 "or mode='decode', not whole-prompt prefill")
             length = cache["k"].shape[2]
             take = min(seq, length)
             pos_new = jnp.arange(seq - take, seq, dtype=jnp.int32)

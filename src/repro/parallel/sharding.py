@@ -127,6 +127,9 @@ def serve_rules(multi_pod: bool = False) -> Rules:
     return Rules("serve", {
         "batch": batch,
         "slots": batch,           # slotted-cache pos tracks follow the batch
+        "pages": None,            # paged KV pools replicate across data: any
+                                  # slot must gather any page, and kv_heads
+                                  # already carries the TP split of the pool
         "embed": None,            # weights replicated across data (TP-only)
         "mlp": "model",
         "heads": "model",
@@ -143,6 +146,8 @@ def serve_rules(multi_pod: bool = False) -> Rules:
 def long_rules(multi_pod: bool = False) -> Rules:
     r = serve_rules(multi_pod).table.copy()
     r["kv_seq"] = ("data", "model")   # batch=1: shard the 500k cache 256-way
+    r["pages"] = "data"               # one sequence's pages spread over data
+                                      # ranks (the paged twin of kv_seq CP)
     r["batch"] = None
     r["slots"] = None
     r["expert_group"] = None
@@ -183,6 +188,7 @@ def serve_dshard_rules(multi_pod: bool = False) -> Rules:
     return Rules("serve_dshard", {
         "batch": batch,
         "slots": batch,
+        "pages": None,
         "embed": "model",
         "mlp": None,
         "heads": None,

@@ -30,6 +30,7 @@ from repro.kernels.dual_compute.ops import (fused_crossbar_acam,
                                             logdomain_flash_attention)
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.nldpe_qmatmul.ops import nldpe_matmul_int8
+from repro.kernels.paged_attention.ops import paged_attention
 
 RNG = np.random.default_rng(2024)
 
@@ -44,6 +45,11 @@ ATTN_SHAPES = [(1, 2, 2, 16, 16, 8), (2, 4, 2, 32, 32, 16),
                (2, 2, 1, 12, 20, 8)]
 # arbitrary activation tensor shapes incl. scalar-ish and 3-d batch groups
 ACT_SHAPES = [(7,), (3, 40), (2, 5, 17), (260,), (4, 2, 2, 9)]
+# (B, Hq, Hkv, P, NB, ps, D): GQA groups in {1, 2, 4}, odd page sizes,
+# ragged lengths incl. a sequence shorter than one page
+PAGED_SHAPES = [(1, 2, 2, 8, 2, 8, 8), (2, 4, 2, 12, 3, 16, 16),
+                (1, 4, 1, 9, 3, 6, 32), (2, 2, 1, 10, 4, 5, 8),
+                (1, 8, 2, 6, 2, 128, 64)]
 
 
 def _rand(shape, dtype, scale=1.0):
@@ -141,6 +147,20 @@ def _logdomain_flash_case(shape):
     return Case("logdomain_flash", shape, run)
 
 
+def _paged_case(shape):
+    def run(dtype):
+        b, hq, hkv, p, nb, ps, d = shape
+        q = _rand((b, hq, d), dtype)
+        kp = _rand((p, hkv, ps, d), dtype)
+        vp = _rand((p, hkv, ps, d), dtype)
+        bt = jnp.asarray(RNG.integers(0, p, size=(b, nb)), jnp.int32)
+        lengths = jnp.asarray(RNG.integers(1, nb * ps + 1, size=(b,)),
+                              jnp.int32)
+        return (paged_attention(q, kp, vp, bt, lengths),
+                paged_attention(q, kp, vp, bt, lengths, use_ref=True), 0.0)
+    return Case("paged_attention", shape, run)
+
+
 CASES = (
     [_crossbar_case(s) for s in MATMUL_SHAPES]
     + [_qmatmul_case(s) for s in MATMUL_SHAPES]
@@ -148,6 +168,7 @@ CASES = (
     + [_dual_compute_case(s) for s in MATMUL_SHAPES]
     + [_flash_case(s) for s in ATTN_SHAPES]
     + [_logdomain_flash_case(s) for s in ATTN_SHAPES]
+    + [_paged_case(s) for s in PAGED_SHAPES]
 )
 
 

@@ -1,0 +1,156 @@
+"""Unit tests for the paged KV pool: allocator, radix index, LRU, COW
+accounting (launch/kvpool.py — pure host-side metadata, no device arrays).
+"""
+import pytest
+
+from repro.core.engine import NLDPEConfig, OFF
+from repro.launch.kvpool import PagePool, nldpe_fingerprint
+
+FP = nldpe_fingerprint(OFF)
+
+
+def test_alloc_free_refcount_roundtrip():
+    pool = PagePool(num_pages=4, page_size=2)
+    a = pool.alloc(3)
+    assert sorted(a) == [0, 1, 2] and pool.free_pages == 1
+    assert all(pool.refcount(p) == 1 for p in a)
+    pool.retain(a[:1])
+    pool.release(a)                      # a[0] still referenced once
+    assert pool.free_pages == 3 and pool.refcount(a[0]) == 1
+    pool.release(a[:1])
+    assert pool.free_pages == 4
+    pool.check()
+
+
+def test_alloc_beyond_capacity_returns_none():
+    pool = PagePool(num_pages=2, page_size=2)
+    held = pool.alloc(2)
+    assert pool.alloc(1) is None         # nothing evictable -> refuse whole
+    pool.release(held)
+    assert pool.alloc(2) is not None
+    pool.check()
+
+
+def test_release_unreferenced_raises():
+    pool = PagePool(num_pages=2, page_size=2)
+    with pytest.raises(ValueError, match="unreferenced"):
+        pool.release([0])
+
+
+def test_radix_match_is_full_page_granular():
+    pool = PagePool(num_pages=8, page_size=4)
+    pages = pool.alloc(2)
+    tokens = tuple(range(8))
+    pool.publish(FP, tokens, pages)
+    assert pool.match(FP, tokens) == pages
+    assert pool.match(FP, tokens[:7]) == pages[:1]       # partial 2nd page
+    assert pool.match(FP, tokens[:4] + (99, 98, 97, 96)) == pages[:1]
+    assert pool.match(FP, (99,) + tokens[1:]) == []      # diverges in page 0
+    assert pool.match(FP, tokens[:3]) == []              # shorter than a page
+    pool.check()
+
+
+def test_radix_roots_are_fingerprint_separated():
+    """Pages cached under one NL-DPE numerics mode never serve another."""
+    pool = PagePool(num_pages=4, page_size=2)
+    pages = pool.alloc(1)
+    tokens = (1, 2)
+    pool.publish(FP, tokens, pages)
+    other = nldpe_fingerprint(NLDPEConfig(enabled=True))
+    assert pool.match(other, tokens) == []
+    assert pool.match(FP, tokens) == pages
+    assert nldpe_fingerprint(OFF) == FP                  # stable
+    assert nldpe_fingerprint(NLDPEConfig(enabled=True, bits=4)) != other
+
+
+def test_published_pages_survive_release_until_evicted():
+    pool = PagePool(num_pages=2, page_size=2)
+    pages = pool.alloc(2)
+    pool.publish(FP, (1, 2, 3, 4), pages)
+    pool.release(pages)
+    assert pool.free_pages == 0 and pool.cached_pages == 2
+    assert pool.match(FP, (1, 2, 3, 4)) == pages         # still a cache hit
+    fresh = pool.alloc(2)                 # forces eviction of both
+    assert sorted(fresh) == sorted(pages)
+    assert pool.match(FP, (1, 2, 3, 4)) == []
+    assert pool.stats["evicted"] == 2
+    pool.check()
+
+
+def test_lru_evicts_least_recently_matched_leaf_first():
+    pool = PagePool(num_pages=3, page_size=1)
+    a, b, c = pool.alloc(3)
+    pool.publish(FP, (10,), [a])
+    pool.publish(FP, (20,), [b])
+    pool.publish(FP, (30,), [c])
+    pool.release([a, b, c])
+    pool.match(FP, (10,))                 # a is now the most recent
+    pool.match(FP, (30,))
+    [first] = pool.alloc(1)
+    assert first == b                     # b was never re-matched
+    pool.check()
+
+
+def test_eviction_is_leaf_first_never_dangles_suffixes():
+    """An interior chunk only becomes evictable after its children go, so
+    a cached suffix can never outlive its prefix."""
+    pool = PagePool(num_pages=2, page_size=1)
+    a, b = pool.alloc(2)
+    pool.publish(FP, (1, 2), [a, b])      # a = prefix chunk, b = its child
+    pool.release([a, b])
+    [first] = pool.alloc(1)
+    assert first == b                     # leaf evicted before its parent
+    assert pool.match(FP, (1,)) == [a]    # prefix still matchable
+    [second] = pool.alloc(1)
+    assert second == a
+    pool.check()
+
+
+def test_referenced_pages_are_never_evicted():
+    pool = PagePool(num_pages=2, page_size=1)
+    a, b = pool.alloc(2)
+    pool.publish(FP, (1,), [a])
+    pool.publish(FP, (2,), [b])
+    pool.release([b])                     # a stays referenced (in flight)
+    assert pool.alloc(2) is None          # only b is reclaimable
+    [got] = pool.alloc(1)
+    assert got == b
+    pool.check()
+
+
+def test_publish_keeps_first_page_for_duplicate_chunks():
+    """Two slots publishing the same chunk (same-wave duplicates): the
+    first page stays canonical, the duplicate remains private."""
+    pool = PagePool(num_pages=4, page_size=2)
+    [a] = pool.alloc(1)
+    [b] = pool.alloc(1)
+    pool.publish(FP, (5, 6), [a])
+    pool.publish(FP, (5, 6), [b])         # no-op walk over the existing node
+    assert pool.match(FP, (5, 6)) == [a]
+    pool.release([b])
+    assert pool.free_pages == 3           # b freed immediately (not cached)
+    pool.check()
+
+
+def test_publish_rejects_dead_or_double_published_pages():
+    pool = PagePool(num_pages=4, page_size=1)
+    [a] = pool.alloc(1)
+    pool.publish(FP, (1,), [a])
+    with pytest.raises(ValueError, match="already published"):
+        pool.publish(FP, (2,), [a])
+    pool.release([a])
+    [b] = pool.alloc(1)
+    pool.release([b])
+    with pytest.raises(ValueError, match="dead page"):
+        pool.publish(FP, (3,), [b])
+
+
+def test_match_peek_has_no_side_effects():
+    pool = PagePool(num_pages=2, page_size=1)
+    [a] = pool.alloc(1)
+    pool.publish(FP, (7,), [a])
+    before = dict(pool.stats)
+    assert pool.match(FP, (7,), peek=True) == [a]
+    assert pool.stats == before
+    assert pool.match(FP, (7,)) == [a]
+    assert pool.stats["hits"] == before["hits"] + 1

@@ -175,6 +175,28 @@ def test_submit_rejects_invalid_requests(engine_off):
     assert engine_off.free_slots == engine_off.max_slots
 
 
+def test_submit_rejects_degenerate_requests(engine_off):
+    """Degenerate requests must fail loudly at admission — inside the
+    jit'd chunk fn they would clamp silently and emit garbage tokens."""
+    with pytest.raises(ValueError, match="<= 0"):
+        engine_off.submit(Request(rid=93, tokens=(1,), max_new_tokens=-3))
+    with pytest.raises(ValueError, match="prompt alone overflows"):
+        engine_off.submit(Request(rid=94, tokens=tuple([1] * (MAX_LEN + 1)),
+                                  max_new_tokens=1))
+    with pytest.raises(ValueError, match="vocab_size"):
+        engine_off.submit(Request(rid=95, tokens=(1, CFG.vocab_size),
+                                  max_new_tokens=2))
+    with pytest.raises(ValueError, match="vocab_size"):
+        engine_off.submit(Request(rid=96, tokens=(-1, 1), max_new_tokens=2))
+    with pytest.raises(ValueError, match="top_k"):
+        engine_off.submit(Request(rid=97, tokens=(1,), max_new_tokens=2,
+                                  top_k=-4))
+    with pytest.raises(ValueError, match="NaN"):
+        engine_off.submit(Request(rid=98, tokens=(1,), max_new_tokens=2,
+                                  temperature=float("nan")))
+    assert engine_off.free_slots == engine_off.max_slots
+
+
 def test_duplicate_rids_rejected(engine_off):
     """Two in-flight requests sharing a rid would clobber each other's
     output buffer — rejected at admission, same wave or later."""

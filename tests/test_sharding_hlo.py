@@ -49,6 +49,41 @@ def test_rules_tables_complete():
                 assert k in r.table
 
 
+def test_serve_rules_have_pages_axis():
+    """Every serving rule set must place the paged pool's leading axis."""
+    for mode in ("serve", "long", "serve_dshard"):
+        assert "pages" in rules_for(mode, False).table
+
+
+def test_paged_cache_pspecs_resolve():
+    """cache_pspecs(paged=...) mirrors init_model_cache(paged=...) leaf for
+    leaf, with the pool's pages axis resolved per the rule table."""
+    import jax
+    from jax.sharding import Mesh
+
+    from repro.configs import get_config
+    from repro.models import lm
+
+    import dataclasses
+
+    cfg = get_config("qwen2_5_3b", reduced=True)
+    devs = np.array(jax.devices()[:1]).reshape(1, 1)
+    mesh = Mesh(devs, ("data", "model"))
+    for kv_dtype in (cfg.kv_cache_dtype, "int8"):
+        c = dataclasses.replace(cfg, kv_cache_dtype=kv_dtype)
+        cache = lm.init_model_cache(c, 2, 24, paged=(6, 8))
+        specs = lm.cache_pspecs(c, 2, 24, mesh, rules_for("serve", False),
+                                paged=(6, 8))
+        flat_c = jax.tree_util.tree_leaves_with_path(cache)
+        flat_s = {jax.tree_util.keystr(p): s
+                  for p, s in jax.tree_util.tree_leaves_with_path(
+                      specs, is_leaf=lambda x: isinstance(x, P))}
+        assert set(jax.tree_util.keystr(p) for p, _ in flat_c) == set(flat_s)
+        for path, leaf in flat_c:
+            spec = flat_s[jax.tree_util.keystr(path)]
+            assert len(spec) <= leaf.ndim, (path, spec, leaf.shape)
+
+
 HLO_SAMPLE = """
 ENTRY %main {
   %ag = f32[256,1024]{1,0} all-gather(f32[16,1024]{1,0} %p0), replica_groups=[16,16]<=[256], dimensions={0}
