@@ -48,6 +48,7 @@ styles (DESIGN.md §5).
 from __future__ import annotations
 
 import dataclasses
+import math
 from collections import deque
 
 import numpy as np
@@ -70,7 +71,7 @@ class Request:
     rid: int
     tokens: tuple[int, ...]            # prompt token ids, length >= 1
     max_new_tokens: int = 16           # total generated tokens (incl. first)
-    temperature: float = 0.0           # <= 0 -> greedy
+    temperature: float = 0.0           # 0 -> greedy; finite, >= 0
     top_k: int = 0                     # 0 -> disabled
     seed: int | None = None            # defaults to rid
     arrival: int = 0                   # arrival time in decode ticks
@@ -296,8 +297,13 @@ class ServeEngine:
                 f"gather would clamp them silently")
         if req.top_k < 0:
             raise ValueError(f"request {req.rid}: top_k={req.top_k} < 0")
-        if req.temperature != req.temperature:          # NaN
-            raise ValueError(f"request {req.rid}: temperature is NaN")
+        if not (req.temperature >= 0 and math.isfinite(req.temperature)):
+            # catches NaN (comparison false), -inf/+inf, and negatives:
+            # 0 already means greedy, so anything below is a caller bug,
+            # and +inf would sample near-uniformly from the top-k set
+            raise ValueError(
+                f"request {req.rid}: temperature={req.temperature} must "
+                f"be finite and >= 0 (0 -> greedy)")
         if req.rid in self._out:
             raise ValueError(f"request {req.rid}: rid already in flight")
         need = p + req.max_new_tokens - 1
@@ -649,8 +655,9 @@ class PagedServeEngine(ServeEngine):
         plan = {"hit": hit, "fork_src": fork_src, "reuse": reuse,
                 "nb_need": nb_need, "n_fresh": n_fresh}
         if peek:
-            ref0 = sum(1 for p in hit if self.pool.refcount(p) == 0)
-            plan["cost"] = n_fresh + ref0
+            ref0 = [p for p in hit if self.pool.refcount(p) == 0]
+            plan["ref0_pages"] = ref0
+            plan["cost"] = n_fresh + len(ref0)
         return plan
 
     def _select_wave(self, waiting: deque) -> list[Request]:
@@ -660,10 +667,16 @@ class PagedServeEngine(ServeEngine):
         will)."""
         wave: list[Request] = []
         avail = self.pool.available()
+        charged: set[int] = set()       # ref-0 hit pages already budgeted —
         while waiting and len(wave) < len(self._free):
-            cost = self._plan(waiting[0], peek=True)["cost"]
+            plan = self._plan(waiting[0], peek=True)
+            # — wave-mates sharing a cached prefix retain the same physical
+            # pages, so each one leaves the evictable set exactly once
+            ref0_new = [p for p in plan["ref0_pages"] if p not in charged]
+            cost = plan["n_fresh"] + len(ref0_new)
             if cost > avail:
                 break
+            charged.update(ref0_new)
             avail -= cost
             wave.append(waiting.popleft())
         if not wave and waiting and not self.any_active:
@@ -705,8 +718,9 @@ class PagedServeEngine(ServeEngine):
             fresh = self.pool.alloc(plan["n_fresh"])
             if fresh is None:                      # submit() without budget
                 self.pool.release(plan["hit"])
-                for sl2 in slots[:len(plans)]:     # roll back committed reqs
-                    self._release_slot(sl2)
+                for pl in plans:                   # roll back committed reqs
+                    self.pool.release(pl["hit"])
+                    self.pool.release(pl["fresh"])
                 for sl2 in reversed(slots):
                     self._free.appendleft(sl2)
                 raise RuntimeError(
@@ -714,6 +728,14 @@ class PagedServeEngine(ServeEngine):
                     f"({self.pool.available()} available, "
                     f"{plan['n_fresh']} needed); check free pages before "
                     f"submit or let run() schedule admission")
+            plan["fresh"] = fresh
+            plans.append(plan)
+
+        # Every allocation succeeded — only now dispatch COW page copies
+        # and bump pool stats, so a failed wave leaves the device cache
+        # and the prefix-savings counters untouched.
+        for r, sl, plan in zip(reqs, slots, plans):
+            fresh = plan["fresh"]
             if plan["fork_src"] is not None:
                 fork_dst = fresh[0]
                 self.cache = self._copy_fn(self.cache,
@@ -727,7 +749,6 @@ class PagedServeEngine(ServeEngine):
             plan["bt_row"] = bt_row
             self._slot_pages[sl] = list(bt_row)
             self.pool.stats["prefill_tokens_saved"] += plan["reuse"]
-            plans.append(plan)
 
         # Phase 2 — publish full prompt pages for *future* waves (walk
         # skips chunks already in the index, so hit/forked pages whose

@@ -109,11 +109,43 @@ class PagePool:
     def free_pages(self) -> int:
         return len(self._free)
 
+    def _evictable_in(self, root: RadixNode) -> tuple[int, bool]:
+        """Post-order walk: (evictable pages under ``root`` inclusive,
+        does the subtree contain a referenced page).  A cached refcount-0
+        page is reclaimable only if *every* page in its descendant subtree
+        is also refcount 0 — ``_evict_lru`` frees leaves first, so an
+        interior node above a referenced page can never become a leaf.
+        Iterative (explicit stack): radix chains are as deep as one
+        published prompt's page count, which can exceed the recursion
+        limit."""
+        out: dict[int, tuple[int, bool]] = {}       # node id -> result
+        stack: list[tuple[RadixNode, bool]] = [(root, False)]
+        while stack:
+            node, expanded = stack.pop()
+            if not expanded:
+                stack.append((node, True))
+                stack.extend((c, False) for c in node.children.values())
+                continue
+            evictable = 0
+            referenced = False
+            for c in node.children.values():
+                e, r = out.pop(id(c))
+                evictable += e
+                referenced |= r
+            if node.page >= 0:                      # roots hold no page
+                if self._ref[node.page] > 0:
+                    referenced = True
+                elif not referenced:
+                    evictable += 1
+            out[id(node)] = (evictable, referenced)
+        return out[id(root)]
+
     @property
     def cached_pages(self) -> int:
-        """Pages resident only as reusable radix cache (refcount 0)."""
-        return sum(1 for p in range(self.num_pages)
-                   if self._ref[p] == 0 and self._node[p] is not None)
+        """Radix-cached refcount-0 pages that eviction can actually
+        reclaim (their whole descendant subtree is refcount 0 too)."""
+        return sum(self._evictable_in(root)[0]
+                   for root in self._roots.values())
 
     def available(self) -> int:
         """Pages obtainable right now: free + evictable cache."""
@@ -122,16 +154,19 @@ class PagePool:
     def alloc(self, n: int) -> list[int] | None:
         """Allocate ``n`` pages (refcount 1 each), evicting LRU cache pages
         as needed.  Returns None — allocating nothing — if the pool cannot
-        satisfy the request even after evicting every refcount-0 page."""
+        satisfy the request even after evicting every reclaimable page."""
         if n < 0:
             raise ValueError("alloc(n < 0)")
         if self.available() < n:
             return None
         pages = []
         for _ in range(n):
-            if not self._free:
-                evicted = self._evict_lru()
-                assert evicted is not None, "available() said this fits"
+            if not self._free and self._evict_lru() is None:
+                # defensive: available() promised this fits, but never
+                # crash mid-serve — hand back what we took and report
+                # exhaustion so admission defers the request instead
+                self._free.extend(pages)
+                return None
             pages.append(self._free.popleft())
         for p in pages:
             assert self._ref[p] == 0 and self._node[p] is None

@@ -1,0 +1,18 @@
+"""jax version-compatibility shims for the parallel subsystem.
+
+``jax.shard_map`` became a public top-level API (with the replication
+checker renamed ``check_vma``) only in newer jax; on the 0.4.x line the
+implementation lives in ``jax.experimental.shard_map`` and the same knob
+is called ``check_rep``.  Call sites import ``shard_map`` from here and
+always use the new-style ``check_vma`` keyword.
+"""
+import jax
+
+try:
+    shard_map = jax.shard_map                        # jax >= 0.6
+except AttributeError:
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=True):
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=check_vma)

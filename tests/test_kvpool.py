@@ -145,6 +145,45 @@ def test_publish_rejects_dead_or_double_published_pages():
         pool.publish(FP, (3,), [b])
 
 
+def test_interior_node_with_referenced_child_is_not_available():
+    """Regression: an interior radix node whose page is refcount 0 but
+    whose child page is still referenced is unevictable (eviction is
+    leaf-first), so ``available()`` must not count it and ``alloc`` must
+    refuse instead of crashing on a dry free list.
+
+    Reachable in serving: r1=[A] and r2=[A, B] wave-admitted together
+    (plans run before any publish, so r2 holds a private duplicate of A),
+    r2's B published as a child of r1's A node, then r1 completes while
+    r2 still decodes."""
+    pool = PagePool(num_pages=3, page_size=1)
+    [a] = pool.alloc(1)                   # r1's A page
+    a2, b = pool.alloc(2)                 # r2's private A duplicate + B
+    pool.publish(FP, (1,), [a])
+    pool.publish(FP, (1, 2), [a, b])      # B lands under r1's A node
+    pool.release([a])                     # r1 done: A ref 0, child B ref 1
+    assert pool.cached_pages == 0         # A is cached but unreclaimable
+    assert pool.available() == 0
+    assert pool.alloc(1) is None          # must defer, not assert/crash
+    pool.release([a2, b])                 # r2 done: whole chain reclaimable
+    assert pool.available() == 3          # a2 freed, A + B now evictable
+    assert pool.alloc(3) is not None
+    pool.check()
+
+
+def test_deep_radix_chain_survives_recursion_limit():
+    """A published chain deeper than Python's recursion limit (one node
+    per full page of a long prompt) must not crash the evictability walk."""
+    import sys
+    n = sys.getrecursionlimit() + 50
+    pool = PagePool(num_pages=n, page_size=1)
+    pages = pool.alloc(n)
+    pool.publish(FP, (7,) * n, pages)    # one chain, depth n
+    pool.release(pages)
+    assert pool.available() == n         # full chain counted, iteratively
+    assert pool.alloc(n) is not None     # leaf-first eviction drains it
+    pool.check()
+
+
 def test_match_peek_has_no_side_effects():
     pool = PagePool(num_pages=2, page_size=1)
     [a] = pool.alloc(1)

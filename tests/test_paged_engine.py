@@ -232,6 +232,36 @@ def test_submit_on_exhausted_pool_raises_and_rolls_back(params):
     assert paged.pool.available() == paged.pool.num_pages
 
 
+def test_failed_wave_leaves_stats_and_cache_untouched(params):
+    """Regression: when a later wave member's alloc fails, the rollback
+    must also leave the pool's prefix-savings stats and the device cache
+    exactly as before the wave — COW copies and stat bumps for committed
+    members only happen once every allocation in the wave succeeded."""
+    paged = PagedServeEngine(CFG, params, max_slots=3, max_len=MAX_LEN,
+                             prefill_chunk=4, decode_block=2, page_size=4,
+                             num_pages=5)
+    prompt = tuple(range(8))                    # exactly 2 full pages
+    done = paged.run([Request(rid=0, tokens=prompt, max_new_tokens=1)])
+    assert len(done) == 1                       # both prompt pages cached
+    stats_before = dict(paged.pool.stats)
+    avail_before = paged.pool.available()
+    cache_before = paged.cache
+    hit = Request(rid=1, tokens=prompt, max_new_tokens=1)      # COW fork
+    big = Request(rid=2, tokens=tuple(range(10, 22)),          # 5 fresh
+                  max_new_tokens=8)
+    with pytest.raises(RuntimeError, match="exhausted"):
+        paged._admit_wave([hit, big])
+    assert paged.cache is cache_before          # no COW copy dispatched
+    for k in ("cow_forks", "prefill_tokens_saved", "published", "evicted"):
+        assert paged.pool.stats[k] == stats_before[k]
+    assert paged.free_slots == paged.max_slots
+    assert paged.pool.available() == avail_before
+    paged.pool.check()
+    # the wave members admit fine one at a time afterwards
+    assert paged.submit(hit) is not None        # max_new_tokens=1: instant
+    paged.pool.check()
+
+
 def test_prefix_hits_share_physical_pages(params):
     """Two live requests with the same system prompt must map the same
     physical pages (refcount 2), not copies."""

@@ -191,9 +191,10 @@ def test_submit_rejects_degenerate_requests(engine_off):
     with pytest.raises(ValueError, match="top_k"):
         engine_off.submit(Request(rid=97, tokens=(1,), max_new_tokens=2,
                                   top_k=-4))
-    with pytest.raises(ValueError, match="NaN"):
-        engine_off.submit(Request(rid=98, tokens=(1,), max_new_tokens=2,
-                                  temperature=float("nan")))
+    for bad_temp in (float("nan"), float("inf"), -0.5):
+        with pytest.raises(ValueError, match="finite and >= 0"):
+            engine_off.submit(Request(rid=98, tokens=(1,), max_new_tokens=2,
+                                      temperature=bad_temp))
     assert engine_off.free_slots == engine_off.max_slots
 
 
