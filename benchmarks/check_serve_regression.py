@@ -22,7 +22,11 @@ ROWS = ("serve/cb_tok_per_s[off]", "serve/lockstep_tok_per_s[off]",
         "serve/paged_slotted_tok_per_s[shared_prefix]",
         "serve/paged_speedup_x[shared_prefix]",
         "serve/paged_prefill_saved_tok[shared_prefix]",
-        "serve/paged_hit_rate[shared_prefix]")
+        "serve/paged_hit_rate[shared_prefix]",
+        "serve/spec_tok_per_s[k4]",
+        "serve/spec_nonspec_tok_per_s[k4]",
+        "serve/spec_speedup_analog_x[k4]",
+        "serve/spec_accept_rate[k4]")
 
 _REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -35,9 +39,10 @@ def main() -> int:
     with open(path) as f:
         baseline = {r["name"]: r for r in json.load(f)["rows"]}
 
-    from benchmarks.serve_bench import bench_continuous, bench_paged
+    from benchmarks.serve_bench import bench_continuous, bench_paged, bench_spec
     fresh = {r["name"]: r for r in bench_continuous("off")}
     fresh.update({r["name"]: r for r in bench_paged("shared_prefix")})
+    fresh.update({r["name"]: r for r in bench_spec("k4")})
 
     for name in ROWS:
         if name not in baseline:
@@ -70,6 +75,15 @@ def main() -> int:
     if saved <= 0:
         print("::warning::paged engine saved zero prefill tokens on the "
               "shared-prefix trace — the radix index is not hitting")
+    sp = float(fresh["serve/spec_speedup_analog_x[k4]"]["derived"])
+    if sp < 1.0:
+        print(f"::warning::analog-modeled speculative speedup {sp:.2f}x "
+              f"fell below the 1x acceptance bar (noise or regression)")
+    acc = float(fresh["serve/spec_accept_rate[k4]"]["derived"])
+    if acc < 0.4:
+        print(f"::warning::speculative acceptance rate {acc:.2f} collapsed "
+              f"— the analog drafter is no longer tracking the digital "
+              f"path (numerics drift?)")
     return 0      # warn-only by design
 
 

@@ -1,6 +1,6 @@
-"""Pallas TPU kernel: paged decode attention (gather via block table).
+"""Pallas TPU kernel: paged attention (gather via block table), q_len >= 1.
 
-The streaming decode path of the paged serve engine (DESIGN.md §7,
+The streaming attention path of the paged serve engine (DESIGN.md §7/§8,
 opt-in via ``NLDPE_PAGED_KERNEL=1`` — the engine defaults to the
 bit-exact gathered dense view in ``nn.attention.paged_dense_view``): each
 sequence's KV cache is scattered across fixed-size pages of a shared pool,
@@ -12,16 +12,20 @@ pool into VMEM while the previous page is still being consumed (the
 standard Pallas double-buffering pipeline makes the indirection free).
 
 Grid: (B, Hkv, NB), pages innermost.  Queries ride grouped per KV head
-(GQA): the q block is that head's (group, D) query rows, so one fetched
-page feeds the whole query group — the same sharing flash_attention's
-index maps exploit.  Online softmax carries running max/denominator across
-the page axis in revisited output buffers, exactly like
-``kernels/flash_attention``; positions ``>= lengths[b]`` are masked to
--inf, so partially-filled tail pages and dead block-table entries (clamped
-to a valid page id by the wrapper) contribute nothing.
+(GQA) *and* per query position: the q block is that head's (group * q_len,
+D) rows — single-token decode is ``q_len == 1``, and the speculative
+verify pass of ``launch/spec_decode.py`` batches its ``k+1`` positions as
+``q_len == k+1`` so one fetched page feeds every query of the step.
+Ragged masking is per query row: row ``g*q_len + j`` may attend to logical
+positions ``< lengths[b] + j`` (query ``j`` sits ``j`` positions past the
+base length), which makes the causal staircase across the in-flight
+speculative tokens fall out of the same mask that handles partially-filled
+tail pages.  Online softmax carries running max/denominator across the
+page axis in revisited output buffers, exactly like
+``kernels/flash_attention``.
 
-VMEM per step (ps=64, D=128, G=8, f32): k/v page tiles 32 KB each, q/out
-4 KB, m/l tiny -> well under budget at any production shape.
+VMEM per step (ps=64, D=128, G=8, q_len=5, f32): k/v page tiles 32 KB
+each, q/out 20 KB, m/l tiny -> well under budget at any production shape.
 """
 from __future__ import annotations
 
@@ -38,7 +42,7 @@ _NEG_INF = float("-inf")
 
 
 def _paged_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
-                  *, scale: float, ps: int):
+                  *, scale: float, ps: int, q_len: int):
     bb, i = pl.program_id(0), pl.program_id(2)
     nb = pl.num_programs(2)
 
@@ -48,16 +52,19 @@ def _paged_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
         m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
         l_ref[...] = jnp.zeros_like(l_ref)
 
-    q = q_ref[0, 0] * scale                        # (G, d)
+    q = q_ref[0, 0] * scale                        # (G*q_len, d)
     k = k_ref[0, 0]                                # (ps, d)
     v = v_ref[0, 0]
-    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)      # (G, ps)
+    gq = q.shape[0]
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)   # (G*q_len, ps)
 
-    # logical positions of this page; everything at/after lengths[b] is dead
-    pos = i * ps + jax.lax.iota(jnp.int32, ps)
-    s = jnp.where((pos < len_ref[bb])[None, :], s, _NEG_INF)
+    # logical positions of this page; query row g*q_len + j attends to
+    # positions < lengths[b] + j (TPU needs >= 2-d iota: broadcasted)
+    pos = i * ps + jax.lax.broadcasted_iota(jnp.int32, (gq, ps), 1)
+    qoff = jax.lax.broadcasted_iota(jnp.int32, (gq, ps), 0) % q_len
+    s = jnp.where(pos < len_ref[bb] + qoff, s, _NEG_INF)
 
-    m_old = m_ref[0, 0]                            # (G,)
+    m_old = m_ref[0, 0]                            # (G*q_len,)
     l_old = l_ref[0, 0]
     m_new = jnp.maximum(m_old, jnp.max(s, axis=-1))
     m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
@@ -84,39 +91,42 @@ def paged_attention_kernel(q: jax.Array, k_pages: jax.Array,
                            v_pages: jax.Array, block_tables: jax.Array,
                            lengths: jax.Array,
                            interpret: bool | None = None) -> jax.Array:
-    """q: (B, Hq, D); k_pages/v_pages: (P, Hkv, ps, D); block_tables:
+    """q: (B, Hq, Q, D); k_pages/v_pages: (P, Hkv, ps, D); block_tables:
     (B, NB) int32 (entries must be valid page ids — clamp dead slots);
-    lengths: (B,) int32, 1 <= lengths[b] <= NB*ps.  Returns (B, Hq, D) f32.
+    lengths: (B,) int32, 1 <= lengths[b] <= NB*ps — query row ``j`` of
+    sequence ``b`` attends to logical positions ``[0, lengths[b] + j)``.
+    Returns (B, Hq, Q, D) f32.
     """
-    b, hq, d = q.shape
+    b, hq, q_len, d = q.shape
     num_pages, hkv, ps, _ = k_pages.shape
     assert hq % hkv == 0
     g = hq // hkv
     nb = block_tables.shape[1]
     scale = 1.0 / (d ** 0.5)
-    qg = q.reshape(b, hkv, g, d)
+    # (B, Hkv, G*q_len, D): row r = g*q_len + j keeps query j of group g
+    qg = q.reshape(b, hkv, g, q_len, d).reshape(b, hkv, g * q_len, d)
 
     kv_spec = pl.BlockSpec((1, 1, ps, d),
                            lambda bb, hh, i, bt, ln: (bt[bb, i], hh, 0, 0))
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(b, hkv, nb),
-        in_specs=[pl.BlockSpec((1, 1, g, d),
+        in_specs=[pl.BlockSpec((1, 1, g * q_len, d),
                                lambda bb, hh, i, bt, ln: (bb, hh, 0, 0)),
                   kv_spec, kv_spec],
-        out_specs=[pl.BlockSpec((1, 1, g, d),
+        out_specs=[pl.BlockSpec((1, 1, g * q_len, d),
                                 lambda bb, hh, i, bt, ln: (bb, hh, 0, 0)),
-                   pl.BlockSpec((1, 1, g),
+                   pl.BlockSpec((1, 1, g * q_len),
                                 lambda bb, hh, i, bt, ln: (bb, hh, 0)),
-                   pl.BlockSpec((1, 1, g),
+                   pl.BlockSpec((1, 1, g * q_len),
                                 lambda bb, hh, i, bt, ln: (bb, hh, 0))],
     )
     out = pl.pallas_call(
-        functools.partial(_paged_kernel, scale=scale, ps=ps),
+        functools.partial(_paged_kernel, scale=scale, ps=ps, q_len=q_len),
         grid_spec=grid_spec,
-        out_shape=[jax.ShapeDtypeStruct((b, hkv, g, d), jnp.float32),
-                   jax.ShapeDtypeStruct((b, hkv, g), jnp.float32),
-                   jax.ShapeDtypeStruct((b, hkv, g), jnp.float32)],
+        out_shape=[jax.ShapeDtypeStruct((b, hkv, g * q_len, d), jnp.float32),
+                   jax.ShapeDtypeStruct((b, hkv, g * q_len), jnp.float32),
+                   jax.ShapeDtypeStruct((b, hkv, g * q_len), jnp.float32)],
         interpret=resolve_interpret(interpret),
     )(block_tables, lengths, qg, k_pages, v_pages)
-    return out[0].reshape(b, hq, d)
+    return out[0].reshape(b, hkv, g, q_len, d).reshape(b, hq, q_len, d)

@@ -1,4 +1,4 @@
-"""Public op: jit'd paged decode attention wrapper.
+"""Public op: jit'd paged attention wrapper (decode and multi-query).
 
 Unlike the dense attention wrappers there is no block-size fallback to
 pick: the page *is* the KV block, so any page size works as-is (odd sizes
@@ -6,6 +6,11 @@ included — masking, not padding, handles partially-filled tail pages).
 The wrapper upcasts to f32 (matching the production attention paths, which
 compute scores in f32) and clamps block-table entries into the valid page
 range so dead entries of never-reached blocks can't index out of bounds.
+
+``q`` may be (B, Hq, D) — single-token decode, the PR 3 signature — or
+(B, Hq, Q, D) with ``Q > 1`` for the speculative verify pass: query row
+``j`` attends to logical positions ``[0, lengths[b] + j)``, the causal
+staircase over the in-flight speculative tokens.
 """
 from __future__ import annotations
 
@@ -20,20 +25,20 @@ def paged_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
                     block_tables: jax.Array, lengths: jax.Array,
                     interpret: bool | None = None,
                     use_ref: bool = False) -> jax.Array:
-    """q: (B, Hq, D) decode queries; k_pages/v_pages: (P, Hkv, ps, D) page
-    pools; block_tables: (B, NB) int32; lengths: (B,) int32 — sequence
-    ``b`` attends to logical positions ``[0, lengths[b])`` (>= 1).
-    Returns (B, Hq, D) in ``q.dtype``.
+    """q: (B, Hq, D) decode queries or (B, Hq, Q, D) multi-query;
+    k_pages/v_pages: (P, Hkv, ps, D) page pools; block_tables: (B, NB)
+    int32; lengths: (B,) int32 — query row ``j`` of sequence ``b`` attends
+    to logical positions ``[0, lengths[b] + j)`` (lengths >= 1).
+    Returns the same rank as ``q`` in ``q.dtype``.
     """
+    squeeze = q.ndim == 3
+    if squeeze:
+        q = q[:, :, None]
     bt = jnp.clip(block_tables.astype(jnp.int32), 0, k_pages.shape[0] - 1)
     lengths = lengths.astype(jnp.int32)
-    if use_ref:
-        out = paged_attention_ref(q.astype(jnp.float32),
-                                  k_pages.astype(jnp.float32),
-                                  v_pages.astype(jnp.float32), bt, lengths)
-    else:
-        out = paged_attention_kernel(q.astype(jnp.float32),
-                                     k_pages.astype(jnp.float32),
-                                     v_pages.astype(jnp.float32), bt, lengths,
-                                     interpret=interpret)
-    return out.astype(q.dtype)
+    fn = paged_attention_ref if use_ref else paged_attention_kernel
+    kw = {} if use_ref else {"interpret": interpret}
+    out = fn(q.astype(jnp.float32), k_pages.astype(jnp.float32),
+             v_pages.astype(jnp.float32), bt, lengths, **kw)
+    out = out.astype(q.dtype)
+    return out[:, :, 0] if squeeze else out

@@ -1,11 +1,13 @@
-"""Pure-jnp oracle: paged decode attention == gather-to-dense + masked SDPA.
+"""Pure-jnp oracle: paged attention == gather-to-dense + masked SDPA.
 
 The oracle materializes exactly what the Pallas kernel streams: pages are
 gathered through the block table in block order, so logical position ``p``
 lands at row ``p`` of the dense view, then a single masked softmax runs
-over the first ``lengths[b]`` rows.  This is the same dense math
-``nn.attention.cached_attention`` performs against a contiguous slotted
-cache — the bitwise anchor the paged serve engine is tested against.
+over the first ``lengths[b] + j`` rows for query row ``j`` (``j == 0`` is
+plain decode; ``j > 0`` is the speculative verify staircase).  This is the
+same dense math ``nn.attention.cached_attention`` performs against a
+contiguous slotted cache — the bitwise anchor the paged serve engine is
+tested against.
 """
 from __future__ import annotations
 
@@ -20,14 +22,15 @@ NEG_INF = float(jnp.finfo(jnp.float32).min)
 def paged_attention_ref(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
                         block_tables: jax.Array,
                         lengths: jax.Array) -> jax.Array:
-    """q: (B, Hq, D); k_pages/v_pages: (P, Hkv, ps, D);
+    """q: (B, Hq, Q, D); k_pages/v_pages: (P, Hkv, ps, D);
     block_tables: (B, NB) int32; lengths: (B,) int32 with 1 <= len <= NB*ps.
 
-    Each sequence ``b`` attends to logical positions ``[0, lengths[b])``,
-    position ``p`` stored in page ``block_tables[b, p // ps]`` at offset
-    ``p % ps``.  Returns (B, Hq, D) in f32.
+    Query row ``j`` of sequence ``b`` attends to logical positions
+    ``[0, lengths[b] + j)``, position ``p`` stored in page
+    ``block_tables[b, p // ps]`` at offset ``p % ps``.  Returns
+    (B, Hq, Q, D) in f32.
     """
-    b, hq, d = q.shape
+    b, hq, q_len, d = q.shape
     _, hkv, ps, _ = k_pages.shape
     nb = block_tables.shape[1]
     g = hq // hkv
@@ -38,10 +41,11 @@ def paged_attention_ref(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
 
     k = gather(k_pages).astype(jnp.float32)
     v = gather(v_pages).astype(jnp.float32)
-    qg = q.reshape(b, hkv, g, d).astype(jnp.float32)
-    s = jnp.einsum("bkgd,bkld->bkgl", qg, k) / math.sqrt(d)
-    valid = jnp.arange(nb * ps)[None] < lengths[:, None]        # (B, L)
+    qg = q.reshape(b, hkv, g, q_len, d).astype(jnp.float32)
+    s = jnp.einsum("bkgqd,bkld->bkgql", qg, k) / math.sqrt(d)
+    allowed = lengths[:, None] + jnp.arange(q_len)              # (B, Q)
+    valid = jnp.arange(nb * ps)[None, None] < allowed[..., None]  # (B, Q, L)
     s = jnp.where(valid[:, None, None], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
-    o = jnp.einsum("bkgl,bkld->bkgd", p, v)
-    return o.reshape(b, hq, d)
+    o = jnp.einsum("bkgql,bkld->bkgqd", p, v)
+    return o.reshape(b, hq, q_len, d)

@@ -33,7 +33,11 @@ This module replaces that with a *server* (DESIGN.md §5):
 ``PagedServeEngine`` below replaces the per-slot worst-case cache rows
 with a paged pool + radix prefix sharing (DESIGN.md §7): same scheduler,
 same contracts, bit-exact outputs, but physical capacity decouples from
-``max_slots * max_len`` and shared system prompts prefill once.
+``max_slots * max_len`` and shared system prompts prefill once.  With
+``spec_k > 0`` it additionally runs analog-draft speculative decoding
+(DESIGN.md §8, ``launch/spec_decode.py``): the NL-DPE low-precision path
+drafts ``spec_k`` tokens per slot and one exact batched chunk verifies
+them — greedy outputs provably unchanged, 1..spec_k+1 tokens per verify.
 
 Determinism contract (asserted in tests/test_serve_engine.py and
 tests/test_engine_properties.py): a request served under any traffic mix
@@ -49,6 +53,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import time
 from collections import deque
 
 import numpy as np
@@ -61,7 +66,10 @@ from ..core.engine import NLDPEConfig, OFF
 from ..models import lm
 from ..models.lm import ATTN_TYPES
 from .kvpool import PagePool, nldpe_fingerprint
-from .sampling import request_key, sample_tokens, step_keys
+from .sampling import TOP_K_CAP, request_key, sample_tokens, step_keys
+from .spec_decode import (batch_dim as _batch_dim, build_draft_scan_fn,
+                          build_verify_fn, clip_positions,
+                          per_slot as _per_slot, quantize_draft_params)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -87,25 +95,6 @@ class Completion:
     finish_reason: str                 # "length" | "eos"
     admitted_tick: int
     finished_tick: int
-
-
-def _pos_leaf(path) -> bool:
-    keys = [k.key for k in path if isinstance(k, jtu.DictKey)]
-    return bool(keys) and keys[-1] == "pos"
-
-
-def _batch_dim(path) -> int:
-    """Cache leaves under "groups" are stacked (n_groups, B, ...); "tail"
-    leaves are (B, ...)."""
-    keys = [k.key for k in path if isinstance(k, jtu.DictKey)]
-    return 1 if keys and keys[0] == "groups" else 0
-
-
-def _per_slot(a: jax.Array, leaf: jax.Array, bdim: int) -> jax.Array:
-    """Broadcast a per-slot vector (S,) against a cache leaf along bdim."""
-    shape = [1] * leaf.ndim
-    shape[bdim] = a.shape[0]
-    return a.reshape(shape)
 
 
 class ServeEngine:
@@ -183,8 +172,11 @@ class ServeEngine:
                                    dtype=self.dtype, slotted=True,
                                    ring_slack=self.prefill_chunk - 1)
 
-    def _release_slot(self, sl: int) -> None:
-        """Hook: a slot's request finished (subclasses release its pages)."""
+    def _release_slot(self, sl: int, seq: tuple | None = None) -> None:
+        """Hook: a slot's request finished (subclasses release its pages).
+        ``seq`` is the request's *committed* token sequence — prompt plus
+        every generated token whose K/V was written (i.e. all but the last)
+        — or None when there is nothing beyond the admission-time state."""
 
     # ------------------------------------------------------------------
     # jit'd building blocks
@@ -194,17 +186,7 @@ class ServeEngine:
     def _clip_pos(cache, mask, bound):
         """On masked slots, make every cache line at position >= bound
         never-valid (pos <- -1).  bound is () or (S,)."""
-        bound = jnp.asarray(bound, jnp.int32)
-
-        def one(path, leaf):
-            if not _pos_leaf(path):
-                return leaf
-            bdim = _batch_dim(path)
-            m = _per_slot(mask, leaf, bdim)
-            b = _per_slot(bound, leaf, bdim) if bound.ndim else bound
-            return jnp.where(m & (leaf >= b), jnp.int32(-1), leaf)
-
-        return jtu.tree_map_with_path(one, cache)
+        return clip_positions(cache, mask, bound)
 
     def _build_chunk_fn(self):
         cfg, nldpe, groups = self.cfg, self.nldpe, self.batch_groups
@@ -297,6 +279,16 @@ class ServeEngine:
                 f"gather would clamp them silently")
         if req.top_k < 0:
             raise ValueError(f"request {req.rid}: top_k={req.top_k} < 0")
+        if TOP_K_CAP < req.top_k < self.cfg.vocab_size:
+            # top_k >= vocab_size explicitly disables the restriction
+            # (sampling.process_logits); anything between the static
+            # gather cap and the vocabulary cannot be represented and
+            # would silently clamp to TOP_K_CAP inside the jit
+            raise ValueError(
+                f"request {req.rid}: top_k={req.top_k} exceeds "
+                f"TOP_K_CAP={TOP_K_CAP} (the static sampler gather width) "
+                f"but is below vocab_size={self.cfg.vocab_size}; use "
+                f"top_k <= {TOP_K_CAP}, or >= vocab_size to disable top-k")
         if not (req.temperature >= 0 and math.isfinite(req.temperature)):
             # catches NaN (comparison false), -inf/+inf, and negatives:
             # 0 already means greedy, so anything below is a caller bug,
@@ -444,7 +436,11 @@ class ServeEngine:
                                   self._active, self._gen_left, self._temp,
                                   self._topk, self._keys)
         self.tick += self.decode_block
-        emits = np.asarray(emits)                       # (block, S)
+        return self._harvest(np.asarray(emits))
+
+    def _harvest(self, emits: np.ndarray) -> list[Completion]:
+        """Fold one tick's emitted tokens (T, S), -1 = no token, into the
+        per-request outputs and retire slots that went inactive."""
         active = np.asarray(self._active)
         done: list[Completion] = []
         for s, req in enumerate(self._slot_owner):
@@ -456,9 +452,13 @@ class ServeEngine:
                 last = self._out[req.rid][-1]
                 reason = ("eos" if self.eos_id >= 0 and last == self.eos_id
                           else "length")
-                done.append(self._complete(req, reason))
+                comp = self._complete(req, reason)
+                done.append(comp)
                 self._slot_owner[s] = None
-                self._release_slot(s)
+                # committed sequence: every position with written K/V —
+                # the prompt plus all generated tokens but the last
+                self._release_slot(s, seq=comp.prompt
+                                   + tuple(comp.tokens[:-1]))
                 self._free.append(s)
         return done
 
@@ -520,19 +520,37 @@ class PagedServeEngine(ServeEngine):
     hold bit-identical K/V because K/V at a position depend only on the
     token prefix and the exp-grid anchors to the fixed cache length; see
     DESIGN.md §7 and tests/test_paged_engine*.py).
+
+    **Speculative decoding** (``spec_k > 0``, DESIGN.md §8): each decode
+    tick drafts ``spec_k`` tokens per slot through the NL-DPE
+    low-precision path (``spec_draft`` numerics over log-quant-programmed
+    weights — ``launch/spec_decode.py``) and verifies all ``spec_k + 1``
+    positions in ONE exact chunk pass with standard rejection sampling.
+    Greedy outputs stay token-for-token identical to ``spec_k=0`` (the
+    verify chunk is bit-equal to sequential decode); sampled outputs keep
+    the target distribution via the leftover-distribution correction.
+    Rejected positions roll back by position-track clip; the radix index
+    only ever sees *committed* tokens (``kvpool.publish_committed``), and
+    completed generations are published as reusable prefix cache
+    (``cache_generations``).  The live acceptance rate (``spec_stats``) is
+    the analog-fidelity signal.
     """
 
     def __init__(self, cfg, params, *, max_slots: int, max_len: int,
                  nldpe: NLDPEConfig = OFF, prefill_chunk: int = 16,
                  decode_block: int = 4, eos_id: int = -1,
                  batch_groups: int = 1, dtype=jnp.float32,
-                 page_size: int = 16, num_pages: int | None = None):
+                 page_size: int = 16, num_pages: int | None = None,
+                 spec_k: int = 0, spec_draft: NLDPEConfig | None = None,
+                 cache_generations: bool = True):
         if "local" in cfg.layer_pattern:
             raise NotImplementedError(
                 "paged KV cache needs non-windowed attention layers: ring "
                 "wrap history would break prefix sharing (got 'local')")
         if page_size < 1:
             raise ValueError("page_size >= 1")
+        if spec_k < 0:
+            raise ValueError("spec_k >= 0 (0 disables speculation)")
         self.page_size = page_size
         self.n_blocks = -(-max_len // page_size)
         if num_pages is None:
@@ -541,12 +559,42 @@ class PagedServeEngine(ServeEngine):
         self.pool = PagePool(num_pages, page_size)
         self._fp = nldpe_fingerprint(nldpe)
         self._slot_pages: list[list[int] | None] = [None] * max_slots
+        self.spec_k = int(spec_k)
+        # drafter numerics: full analog path by default (log-domain DMMul +
+        # ACAM softmax); enabled=False keeps only the conductance-programmed
+        # weights (cheap to simulate, still int8/log-quant numerics)
+        self.spec_draft = (spec_draft if spec_draft is not None
+                          else NLDPEConfig(enabled=True))
+        self.cache_generations = cache_generations
         super().__init__(cfg, params, max_slots=max_slots, max_len=max_len,
                          nldpe=nldpe, prefill_chunk=prefill_chunk,
                          decode_block=decode_block, eos_id=eos_id,
                          batch_groups=batch_groups, dtype=dtype)
         self._setup_fn = jax.jit(self._build_setup_fn(), donate_argnums=(0,))
         self._copy_fn = jax.jit(self._build_copy_fn(), donate_argnums=(0,))
+        if self.spec_k:
+            # the drafter's weights: the target parameters round-tripped
+            # through the 8-bit log grid (programmed conductances), cached
+            # on device once — no second model to train or store.  Draft
+            # and verify are two jits per step: two hardware units (analog
+            # engine / digital verifier), and the boundary lets the engine
+            # meter the analog phase's wall share exactly.
+            self._draft_params = quantize_draft_params(params)
+            self._draft_fn = jax.jit(
+                build_draft_scan_fn(cfg, self._draft_params,
+                                    spec_k=self.spec_k,
+                                    nldpe=self.spec_draft,
+                                    batch_groups=batch_groups),
+                donate_argnums=(0,))
+            self._verify_fn = jax.jit(
+                build_verify_fn(cfg, params, spec_k=self.spec_k,
+                                nldpe=nldpe, batch_groups=batch_groups,
+                                eos_id=eos_id),
+                donate_argnums=(0, 1, 2, 3, 4))
+            self._spec_steps = 0
+            self._drafted = np.zeros((max_slots,), np.int64)
+            self._accepted = np.zeros((max_slots,), np.int64)
+            self.spec_draft_seconds = 0.0
 
     def _init_cache(self):
         return lm.init_model_cache(self.cfg, self.max_slots, self.max_len,
@@ -557,6 +605,50 @@ class PagedServeEngine(ServeEngine):
     def stats(self) -> dict:
         """Pool + prefix-sharing counters (see kvpool.PagePool.stats)."""
         return dict(self.pool.stats)
+
+    @property
+    def spec_stats(self) -> dict:
+        """Speculative-decode counters: per-slot and total drafted/accepted
+        tokens.  The acceptance rate is the engine's live analog-fidelity
+        signal — how often the low-precision NL-DPE draft agrees with the
+        exact digital path (DESIGN.md §8; the paper's Fig 14 correlation,
+        observed in production instead of offline)."""
+        if not self.spec_k:
+            return {"spec_k": 0}
+        drafted = int(self._drafted.sum())
+        accepted = int(self._accepted.sum())
+        return {"spec_k": self.spec_k, "spec_steps": self._spec_steps,
+                "drafted": drafted, "accepted": accepted,
+                "acceptance_rate": accepted / max(drafted, 1),
+                "draft_seconds": self.spec_draft_seconds,
+                "drafted_by_slot": self._drafted.tolist(),
+                "accepted_by_slot": self._accepted.tolist()}
+
+    def step(self) -> list[Completion]:
+        """One decode tick.  Non-speculative engines scan ``decode_block``
+        plain steps (base class); with ``spec_k`` set, a tick is ONE
+        speculative step — k analog drafts + one exact batched verify —
+        emitting 1..k+1 tokens per active slot."""
+        if not self.spec_k:
+            return super().step()
+        # explicit copy: np.asarray of a CPU jax array can alias the device
+        # buffer, which the verify fn below donates (and so may reuse)
+        pre_active = np.array(self._active)
+        t0 = time.time()
+        self.cache, drafts, q_probs = self._draft_fn(
+            self.cache, self._tok, self._pos, self._active, self._temp,
+            self._topk, self._keys)
+        jax.block_until_ready(drafts)       # meter the analog phase alone
+        self.spec_draft_seconds += time.time() - t0
+        (self.cache, self._tok, self._pos, self._active, self._gen_left,
+         emits, accepted) = self._verify_fn(
+            self.cache, self._tok, self._pos, self._active, self._gen_left,
+            self._temp, self._topk, self._keys, drafts, q_probs)
+        self.tick += 1
+        self._spec_steps += 1
+        self._drafted += np.where(pre_active, self.spec_k, 0)
+        self._accepted += np.where(pre_active, np.asarray(accepted), 0)
+        return self._harvest(np.asarray(emits).T)      # (S, k+1) -> (T, S)
 
     # ------------------------------------------------------------------
     # jit'd building blocks (paged variants)
@@ -650,7 +742,13 @@ class PagedServeEngine(ServeEngine):
             reuse = plen - 1
         else:
             reuse = len(hit) * ps
-        nb_need = -(-(plen + req.max_new_tokens - 1) // ps)
+        # page budget includes spec_k positions of slack: every speculative
+        # step writes drafted-but-unverified K/V up to spec_k positions past
+        # the committed tip, and those writes must land in pages this slot
+        # owns (capped at max_len — the pos track drops anything beyond it)
+        footprint = min(plen + req.max_new_tokens - 1 + self.spec_k,
+                        self.max_len)
+        nb_need = -(-footprint // ps)
         n_fresh = nb_need - len(hit)               # fork page included
         plan = {"hit": hit, "fork_src": fork_src, "reuse": reuse,
                 "nb_need": nb_need, "n_fresh": n_fresh}
@@ -687,9 +785,17 @@ class PagedServeEngine(ServeEngine):
                 f"{self.page_size}); grow num_pages or shrink the request")
         return wave
 
-    def _release_slot(self, sl: int) -> None:
+    def _release_slot(self, sl: int, seq: tuple | None = None) -> None:
         pages = self._slot_pages[sl]
         if pages is not None:
+            if seq is not None and self.cache_generations:
+                # publish the request's *committed* sequence — prompt plus
+                # verified generations — so future prompts sharing it hit
+                # the cache.  publish_committed only admits pages whose
+                # every position is committed: drafted-but-rejected tokens
+                # and the spec page slack can never enter the radix index
+                # (the provisional-length protocol, DESIGN.md §8)
+                self.pool.publish_committed(self._fp, seq, pages)
             self.pool.release(pages)
             self._slot_pages[sl] = None
 

@@ -99,7 +99,7 @@ class PagePool:
         self._clock = 0
         self.stats = {"lookups": 0, "hits": 0, "hit_pages": 0,
                       "prefill_tokens_saved": 0, "evicted": 0,
-                      "cow_forks": 0, "published": 0}
+                      "cow_forks": 0, "published": 0, "gen_published": 0}
 
     # ------------------------------------------------------------------
     # allocation / refcounts
@@ -261,6 +261,30 @@ class PagePool:
                 self.stats["published"] += 1
             child.last_use = self._clock
             node = child
+
+    def publish_committed(self, fingerprint: tuple, tokens, pages,
+                          committed_len: int | None = None) -> None:
+        """Provisional-length publish for speculative decode (DESIGN.md §8).
+
+        ``tokens``/``pages`` may extend past ``committed_len`` (defaults to
+        ``len(tokens)``): a speculating slot's block table carries pages
+        holding drafted-but-unverified K/V — its ``spec_k`` page slack and,
+        transiently, positions the verify pass rejected.  Only pages whose
+        *every* position lies below the committed length enter the radix
+        index, so rejected draft tokens can never be served as cache; the
+        uncommitted tail pages stay private to the slot and return to the
+        free list on release (no leak — audited by the engine tests).
+        """
+        if committed_len is None:
+            committed_len = len(tokens)
+        if committed_len < 0 or committed_len > len(tokens):
+            raise ValueError(
+                f"committed_len={committed_len} outside [0, {len(tokens)}]")
+        n_full = committed_len // self.page_size
+        before = self.stats["published"]
+        self.publish(fingerprint, tokens[:n_full * self.page_size],
+                     pages[:n_full])
+        self.stats["gen_published"] += self.stats["published"] - before
 
     # ------------------------------------------------------------------
     # LRU eviction

@@ -12,6 +12,14 @@ randomness depends only on (request seed, token position), never on which
 slot the request landed in or who else is in the batch — the same
 order-independence guarantee the greedy path gets for free
 (tests/test_engine_properties.py).
+
+The second half of this module is the speculative-decoding math
+(``launch/spec_decode.py``): the probability vector ``sample_tokens``
+effectively draws from (``target_probs``), the leftover distribution of
+rejection sampling (``residual_probs``), and per-(request, position,
+stream) key derivation (``spec_fold``) so speculative draws stay
+placement-independent too — they fold in the *verified* token position,
+never the slot index or the spec step count.
 """
 from __future__ import annotations
 
@@ -19,6 +27,34 @@ import jax
 import jax.numpy as jnp
 
 TOP_K_CAP = 64      # static top-k gather width; per-slot top_k <= cap
+
+# speculative sampling consumes up to three independent draws per token
+# position; each stream folds a distinct constant on top of the
+# (request key, position) fold so the streams never collide with the plain
+# decode draw (stream 0 == step_keys) or each other
+DRAFT_STREAM = 1        # drafter's own sampling
+ACCEPT_STREAM = 2       # the accept/reject uniform
+CORRECT_STREAM = 3      # residual / bonus draw
+
+
+def process_logits(logits: jax.Array, top_k: jax.Array) -> jax.Array:
+    """Apply the per-slot top-k restriction: logits outside each slot's
+    top-k set go to -inf.  Explicit edge handling (previously left to jit
+    clamping): ``top_k <= 0`` and ``top_k >= vocab_size`` both disable the
+    restriction outright — a top_k covering the whole vocabulary must not
+    silently shrink to the static TOP_K_CAP gather width.  Values in
+    (TOP_K_CAP, vocab) cannot be represented by the static gather and clamp
+    to the cap; ``ServeEngine._validate`` rejects them at admission so the
+    clamp is never silently hit in the engine.
+    """
+    logits = logits.astype(jnp.float32)
+    v = logits.shape[-1]
+    kc = min(TOP_K_CAP, v)
+    vals, _ = jax.lax.top_k(logits, kc)                       # (S, kc) sorted
+    idx = jnp.clip(top_k, 1, kc) - 1
+    kth = jnp.take_along_axis(vals, idx[:, None], axis=-1)    # (S, 1)
+    use_topk = ((top_k > 0) & (top_k < v))[:, None]
+    return jnp.where(use_topk & (logits < kth), -jnp.inf, logits)
 
 
 def sample_tokens(logits: jax.Array, keys: jax.Array, temperature: jax.Array,
@@ -28,19 +64,57 @@ def sample_tokens(logits: jax.Array, keys: jax.Array, temperature: jax.Array,
 
     Per slot: temperature <= 0 -> greedy argmax; otherwise softmax sampling
     at that temperature, restricted to the top_k highest logits when
-    top_k > 0 (clipped to TOP_K_CAP).
+    top_k > 0 (see ``process_logits`` for the top_k edge cases).
     """
     logits = logits.astype(jnp.float32)
     greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    kc = min(TOP_K_CAP, logits.shape[-1])
-    vals, _ = jax.lax.top_k(logits, kc)                       # (S, kc) sorted
-    idx = jnp.clip(top_k, 1, kc) - 1
-    kth = jnp.take_along_axis(vals, idx[:, None], axis=-1)    # (S, 1)
-    use_topk = (top_k > 0)[:, None]
-    masked = jnp.where(use_topk & (logits < kth), -jnp.inf, logits)
+    masked = process_logits(logits, top_k)
     scaled = masked / jnp.maximum(temperature, 1e-6)[:, None]
     sampled = jax.vmap(jax.random.categorical)(keys, scaled).astype(jnp.int32)
     return jnp.where(temperature > 0, sampled, greedy)
+
+
+def target_probs(logits: jax.Array, temperature: jax.Array,
+                 top_k: jax.Array) -> jax.Array:
+    """The (S, V) probability vector ``sample_tokens`` draws from.
+
+    temperature > 0: softmax of the top-k-masked, temperature-scaled
+    logits.  temperature <= 0: the exact one-hot of the argmax — built from
+    ``argmax``, not a low-temperature softmax, so greedy speculative
+    verification stays bit-identical to greedy decode.
+    """
+    logits = logits.astype(jnp.float32)
+    onehot = jax.nn.one_hot(jnp.argmax(logits, axis=-1), logits.shape[-1],
+                            dtype=jnp.float32)
+    masked = process_logits(logits, top_k)
+    scaled = masked / jnp.maximum(temperature, 1e-6)[:, None]
+    return jnp.where((temperature > 0)[:, None],
+                     jax.nn.softmax(scaled, axis=-1), onehot)
+
+
+def residual_probs(p: jax.Array, q: jax.Array) -> jax.Array:
+    """Leftover distribution of rejection sampling: norm(max(p - q, 0)).
+
+    Sampling d ~ q, accepting with prob min(1, p[d]/q[d]), and drawing the
+    replacement from this residual on rejection yields exactly p (the
+    standard speculative-sampling identity).  When the residual mass is 0
+    (p == q: rejection has probability 0, so the branch is never taken —
+    only reachable through float round-off) fall back to p itself.
+    """
+    r = jnp.maximum(p - q, 0.0)
+    mass = jnp.sum(r, axis=-1, keepdims=True)
+    return jnp.where(mass > 0, r / jnp.where(mass > 0, mass, 1.0), p)
+
+
+def sample_from_probs(keys: jax.Array, probs: jax.Array) -> jax.Array:
+    """keys (S, 2), probs (S, V) -> (S,) int32 categorical samples.
+
+    Zero-probability tokens are never drawn (log 0 = -inf), and a one-hot
+    row returns its index regardless of key — which is how the greedy
+    speculative path stays deterministic while sharing this code.
+    """
+    logp = jnp.log(jnp.maximum(probs, 0.0))
+    return jax.vmap(jax.random.categorical)(keys, logp).astype(jnp.int32)
 
 
 def request_key(seed: int) -> jax.Array:
@@ -52,3 +126,21 @@ def request_key(seed: int) -> jax.Array:
 def step_keys(keys: jax.Array, positions: jax.Array) -> jax.Array:
     """(S, 2) request keys + (S,) token positions -> per-step keys."""
     return jax.vmap(jax.random.fold_in)(keys, positions)
+
+
+def spec_fold(keys: jax.Array, positions: jax.Array, stream: int) -> jax.Array:
+    """(S, 2) request keys + (S,) or (S, J) token positions -> per-position
+    keys on a speculative stream: fold_in(fold_in(key, position), stream).
+
+    Folding the *verified* token position (never the slot, the spec step
+    index, or spec_k) keeps speculative sampling trace-invariant: the same
+    request produces the same draws whatever traffic surrounds it.
+    """
+    pos = jnp.asarray(positions, jnp.int32)
+    if pos.ndim == 1:
+        k = jax.vmap(jax.random.fold_in)(keys, pos)
+        return jax.vmap(jax.random.fold_in, (0, None))(k, stream)
+    s, j = pos.shape
+    rep = jnp.repeat(keys, j, axis=0)                       # (S*J, 2)
+    out = spec_fold(rep, pos.reshape(-1), stream)
+    return out.reshape(s, j, 2)

@@ -12,8 +12,9 @@ Everything here is *lockstep*: one fixed-shape batch that prefills,
 decodes, and finishes together.  Irregular traffic (staggered arrivals,
 mixed lengths, per-request sampling) goes through the continuous-batching
 engine in ``launch/engine.py`` instead — ``--continuous`` below demos it,
-and ``--paged`` demos the paged KV-cache engine with radix prefix sharing
-on a shared-system-prompt trace (DESIGN.md §7).
+``--paged`` demos the paged KV-cache engine with radix prefix sharing
+on a shared-system-prompt trace (DESIGN.md §7), and ``--paged --spec K``
+adds analog-draft speculative decoding (DESIGN.md §8).
 
 The CLI driver below runs a reduced config end-to-end (prefill a batch of
 prompts, then decode), optionally through the NL-DPE numerics mode.
@@ -165,6 +166,15 @@ def run(argv=None):
                         "(default: slots * ceil(max_len / page_size))")
     p.add_argument("--system-prompt-len", type=int, default=24,
                    help="shared prefix length of the --paged demo trace")
+    p.add_argument("--spec", type=int, default=0, metavar="K",
+                   help="speculative decode for --paged: K analog drafts "
+                        "(NL-DPE log-quant numerics) per exact batched "
+                        "verify pass (0 = off)")
+    p.add_argument("--spec-full-analog", action="store_true",
+                   help="draft with the full analog numerics (log-domain "
+                        "DMMul + ACAM softmax) instead of the "
+                        "conductance-programmed weights only; much slower "
+                        "to *simulate* on CPU, identical outputs")
     p.add_argument("--slots", type=int, default=4,
                    help="KV-cache slots for --continuous/--paged")
     p.add_argument("--requests", type=int, default=12,
@@ -197,22 +207,33 @@ def run(argv=None):
                         max_new_tokens=int(rng.integers(2, args.gen_len + 1)),
                         arrival=int(rng.poisson(2) * i))
                 for i in range(args.requests)]
+        spec_draft = (NLDPEConfig(enabled=True) if args.spec_full_analog
+                      else NLDPEConfig(enabled=False))
         eng = PagedServeEngine(cfg, params, max_slots=args.slots,
                                max_len=max_len, nldpe=nldpe,
                                page_size=args.page_size,
-                               num_pages=args.num_pages)
+                               num_pages=args.num_pages, spec_k=args.spec,
+                               spec_draft=spec_draft)
         t0 = time.time()
         comps = eng.run(reqs)
         dt = time.time() - t0
         n_tok = sum(len(c.tokens) for c in comps)
         st = eng.stats
+        mode = f", spec_k={args.spec}" if args.spec else ""
         print(f"[serve] paged: {len(comps)} requests, {n_tok} tokens in "
               f"{dt * 1e3:.0f} ms ({n_tok / max(dt, 1e-9):.1f} tok/s, "
               f"{args.slots} slots, {eng.pool.num_pages} pages x "
-              f"{args.page_size} tok)")
+              f"{args.page_size} tok{mode})")
         print(f"  prefix hits {st['hits']}/{st['lookups']}, "
               f"prefill tokens saved {st['prefill_tokens_saved']}, "
               f"cow forks {st['cow_forks']}, evicted {st['evicted']}")
+        if args.spec:
+            sp = eng.spec_stats
+            print(f"  speculative: {sp['spec_steps']} steps, accepted "
+                  f"{sp['accepted']}/{sp['drafted']} drafts "
+                  f"({sp['acceptance_rate']:.1%} — the analog-fidelity "
+                  f"signal), {n_tok / max(sp['spec_steps'], 1):.2f} "
+                  f"tokens/verify pass")
         for c in comps[:4]:
             print(f"  rid={c.rid} admitted@{c.admitted_tick} "
                   f"finished@{c.finished_tick} [{c.finish_reason}] "

@@ -624,6 +624,24 @@ def attn_apply(p, s: AttnSpec, x: jax.Array, *, positions: jax.Array,
         qpos = (positions if positions.ndim == 2
                 else jnp.broadcast_to(positions[None, :], (b, seq)))
         cache = update_cache(cache, k, v, qpos, write_mask=write_mask)
+        if ("bt" in cache and not nldpe.enabled and s.softcap is None
+                and "k_scale" not in cache
+                and os.environ.get("NLDPE_PAGED_KERNEL", "0")
+                not in ("", "0")):
+            # opt-in TPU hot path, q_len > 1: chunk queries sit at
+            # consecutive per-slot offsets (suffix prefill and the
+            # speculative verify pass both write the chunk's K/V first),
+            # so query i of slot b attends to [0, qpos[b, 0] + i] — the
+            # kernel's ragged staircase with base lengths = qpos[:, 0]+1.
+            # Same float-tolerance caveat as the decode opt-in below.
+            from ..kernels.paged_attention.ops import paged_attention
+            lengths = jnp.clip(qpos[:, 0].astype(jnp.int32) + 1, 1,
+                               cache["pos"].shape[1])
+            o = paged_attention(q, cache["k"], cache["v"], cache["bt"],
+                                lengths)
+            o = shard(o, "batch", "heads", None, None)
+            y = jnp.einsum("bhsk,hkd->bsd", o, p["wo"].astype(o.dtype))
+            return shard(y, "batch", None, "act_embed"), cache
         att = paged_dense_view(cache) if "bt" in cache else cache
         if nldpe.enabled:
             valid = cache_valid_mask(att["pos"], qpos, s.window)    # (B,S,L)

@@ -1,0 +1,146 @@
+"""Shared trace machinery for every serve-engine equivalence suite.
+
+One place owns the reduced model, the lazily-built engines (jit compiles
+amortized across hypothesis examples — the PR 2/PR 3 property files each
+used to carry a private copy of this), the run-alone lockstep oracle, and
+the hypothesis strategies for random Poisson traces: tiny token alphabet
+(dense prefix collisions -> radix hits, COW forks), mixed
+greedy/temperature/top-k sampling, staggered arrivals, zero-headroom page
+pools (constant LRU eviction pressure).
+
+tests/test_engine_differential.py drives the full engine matrix through
+it; tests/test_engine_properties.py and
+tests/test_paged_engine_properties.py keep only their distinctive
+assertions on top.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.engine import NLDPEConfig
+from repro.launch.engine import PagedServeEngine, Request, ServeEngine
+from repro.launch.serve import build_decode_step, python_loop_decode
+from repro.models import lm
+from repro.nn.module import param_dtype
+
+CFG = get_config("qwen2_5_3b", reduced=True)
+MAX_LEN = 24
+PAGE = 4
+SLOTS = 2
+# zero-headroom pool: slots * ceil(max_len / page) pages, so radix-cached
+# prompts are evicted as soon as live requests need their pages
+NUM_PAGES = SLOTS * (-(-MAX_LEN // PAGE))
+# weight-quant-only drafter for the fast suites: the conductance-programmed
+# weights without the (simulation-expensive) analog activation numerics —
+# greedy spec exactness holds for ANY drafter, so tests keep the cheap one
+# and a dedicated slow test exercises the full analog path
+WQ_DRAFT = NLDPEConfig(enabled=False)
+
+_STATE = {}
+
+
+def shared_params():
+    if "params" not in _STATE:
+        with param_dtype(jnp.float32):
+            _STATE["params"] = lm.init_params(jax.random.key(0), CFG)
+    return _STATE["params"]
+
+
+def engine_kwargs(**over):
+    kw = dict(max_slots=SLOTS, max_len=MAX_LEN, prefill_chunk=4,
+              decode_block=2)
+    kw.update(over)
+    return kw
+
+
+def slotted_engine() -> ServeEngine:
+    if "slotted" not in _STATE:
+        _STATE["slotted"] = ServeEngine(CFG, shared_params(),
+                                        **engine_kwargs())
+    return _STATE["slotted"]
+
+
+def paged_engine(spec_k: int = 0, **over) -> PagedServeEngine:
+    """Module-level singletons per spec_k (compile cache); the carried
+    radix index must be invisible in outputs — carried cache can only turn
+    misses into hits, never change tokens."""
+    key = ("paged", spec_k, tuple(sorted(over.items())))
+    if key not in _STATE:
+        kw = engine_kwargs(page_size=PAGE, num_pages=NUM_PAGES, **over)
+        if spec_k:
+            kw.update(spec_k=spec_k, spec_draft=WQ_DRAFT)
+        _STATE[key] = PagedServeEngine(CFG, shared_params(), **kw)
+    return _STATE[key]
+
+
+def run_alone(prompt: tuple, gen_len: int) -> list:
+    """The seed lockstep oracle: whole-prompt prefill + python_loop_decode,
+    greedy, one request alone.  Cached per (prompt, gen)."""
+    if "decode" not in _STATE:
+        _STATE["decode"] = jax.jit(build_decode_step(CFG))
+        _STATE["alone"] = {}
+    key = (tuple(prompt), gen_len)
+    if key not in _STATE["alone"]:
+        cache = lm.init_model_cache(CFG, 1, MAX_LEN, dtype=jnp.float32)
+        logits, cache = lm.forward(shared_params(),
+                                   jnp.asarray([prompt], jnp.int32), CFG,
+                                   mode="prefill", cache=cache)
+        tok0 = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+        gen, _ = python_loop_decode(_STATE["decode"], shared_params(), cache,
+                                    tok0, len(prompt), gen_len)
+        _STATE["alone"][key] = [int(t) for t in np.asarray(gen)[0]]
+    return _STATE["alone"][key]
+
+
+def to_requests(trace, base_tick: int = 0) -> list:
+    """trace: list of (prompt, gen, gap[, temperature, top_k]) tuples."""
+    reqs, t = [], 0
+    for i, spec in enumerate(trace):
+        prompt, gen, gap = spec[:3]
+        temp, topk = (spec[3], spec[4]) if len(spec) > 3 else (0.0, 0)
+        t += gap
+        reqs.append(Request(rid=i, tokens=tuple(prompt), max_new_tokens=gen,
+                            temperature=temp, top_k=topk,
+                            arrival=base_tick + t))
+    return reqs
+
+
+def run_trace(engine, trace) -> dict:
+    comps = engine.run(to_requests(trace, engine.tick))
+    assert sorted(c.rid for c in comps) == list(range(len(trace)))
+    return {c.rid: c.tokens for c in comps}
+
+
+def audit(paged: PagedServeEngine) -> None:
+    """Post-trace pool invariants: every slot free, allocator consistent,
+    every page reclaimable (no leaks — speculative rejections included)."""
+    assert paged.free_slots == paged.max_slots
+    paged.pool.check()
+    assert paged.pool.available() == paged.pool.num_pages, \
+        "page leak: rejected speculative pages must return to the pool"
+
+
+def make_strategies():
+    """Hypothesis strategies (imported lazily so collection degrades to a
+    skip when hypothesis is absent, mirroring the property files)."""
+    from hypothesis import strategies as st
+
+    # tiny alphabet + short lengths -> dense prefix collisions; lengths at
+    # exact page multiples force the COW fork path
+    greedy_request = st.tuples(
+        st.lists(st.integers(0, 2), min_size=1, max_size=10),  # prompt
+        st.integers(1, 6),          # max_new_tokens
+        st.integers(0, 8),          # arrival gap to previous request
+    )
+    # mixed sampling: greedy, temperature, temperature+top-k — top_k
+    # includes 0 (disabled) and a value >= vocab_size (explicitly disabled)
+    mixed_request = st.tuples(
+        st.lists(st.integers(0, 2), min_size=1, max_size=10),
+        st.integers(1, 5),
+        st.integers(0, 6),
+        st.sampled_from([0.0, 0.0, 0.7, 1.3]),
+        st.sampled_from([0, 1, 3, CFG.vocab_size + 7]),
+    )
+    return (st.lists(greedy_request, min_size=1, max_size=5),
+            st.lists(mixed_request, min_size=1, max_size=5))

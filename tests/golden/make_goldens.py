@@ -41,13 +41,20 @@ def table_arrays(case: dict) -> dict:
         out_bits=np.int64(t.out_spec.bits))
 
 
-def main():
-    root = os.path.dirname(os.path.abspath(__file__))
+def main(root: str | None = None):
+    """Write every golden .npz under ``root`` (defaults to this directory).
+    The freshness guard in tests/test_acam_golden.py calls this with a
+    temp dir and diffs the output against the committed files."""
+    if root is None:
+        root = os.path.dirname(os.path.abspath(__file__))
+    paths = []
     for case in GOLDEN_CASES:
         path = case_path(case, root)
         np.savez_compressed(path, **table_arrays(case))
         print("wrote", path)
+        paths.append(path)
+    return paths
 
 
 if __name__ == "__main__":
-    sys.exit(main())
+    sys.exit(main() and None)

@@ -40,6 +40,33 @@ def test_build_table_matches_golden(case):
                     f"(if intentional, regenerate via make_goldens.py)")
 
 
+def test_goldens_are_fresh(tmp_path):
+    """Freshness guard (ISSUE 4 satellite): regenerate every golden via the
+    actual ``make_goldens.main`` entry point into a temp dir and diff the
+    files against the committed .npz set.  ``test_build_table_matches_golden``
+    pins the *builder*; this pins the *regenerator* — a drifted case list,
+    field set, or filename scheme would silently turn the golden suite into
+    a no-op (missing/renamed files skip, stale fields never compared)."""
+    from golden import make_goldens
+
+    written = make_goldens.main(str(tmp_path))
+    committed = sorted(f for f in os.listdir(GOLDEN_ROOT)
+                       if f.endswith(".npz"))
+    fresh = sorted(os.path.basename(p) for p in written)
+    assert fresh == committed, \
+        "regenerated golden file set differs from the committed files " \
+        "(case list or naming drifted; rerun make_goldens.py and commit)"
+    for name in committed:
+        want = np.load(os.path.join(GOLDEN_ROOT, name))
+        got = np.load(os.path.join(str(tmp_path), name))
+        assert sorted(want.files) == sorted(got.files), name
+        for key in want.files:
+            np.testing.assert_array_equal(
+                got[key], want[key],
+                err_msg=f"{name}:{key} — committed golden is stale; "
+                        f"numerics drifted without regenerating")
+
+
 def test_goldens_cover_both_encodings():
     encs = {c["encoding"] for c in GOLDEN_CASES}
     assert encs == {"gray", "binary"}

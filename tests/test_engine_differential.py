@@ -1,0 +1,221 @@
+"""Cross-engine differential fuzz suite (ISSUE 4 satellite + acceptance).
+
+ONE trace runner asserts, request for request:
+
+    lockstep run-alone == ServeEngine == PagedServeEngine
+                       == PagedServeEngine(spec_k in {1, 2, 4})
+
+token-for-token under greedy — on random Poisson traces over a tiny token
+alphabet (dense shared prefixes -> radix hits and COW forks) against a
+zero-headroom page pool (constant LRU eviction).  Every future engine
+variant gets the full trace-equivalence battery by being added to
+ENGINES() below.
+
+The seeded np.random traces below run everywhere (hypothesis is an
+optional dev dep — importorskip would silence the acceptance criterion on
+hosts without it); when hypothesis IS present, the @given variants fuzz
+the same runner with minimized counterexamples.
+
+Sampled requests (temperature > 0) are *distribution*-equivalent, not
+draw-equivalent, between spec and non-spec (tests/test_spec_sampling.py
+carries the chi-square proof); here they must still be trace-invariant —
+identical tokens whatever the submission order or co-tenants — and must
+never perturb greedy co-tenants.
+
+``NLDPE_SPEC_KS`` bounds the speculative depths tested (CI's
+spec-interpret leg sets ``2``: the full matrix under the Pallas
+interpreter would dominate the leg's budget).
+"""
+import os
+
+import numpy as np
+import pytest
+
+import engine_harness as H
+from repro.launch.engine import Request
+
+try:
+    from hypothesis import given, settings
+    HAVE_HYPOTHESIS = True
+except ImportError:                     # optional dev dep; degrade
+    HAVE_HYPOTHESIS = False
+
+SPEC_KS = [int(k) for k in
+           os.environ.get("NLDPE_SPEC_KS", "1,2,4").split(",")]
+
+
+def ENGINES():
+    """The engine matrix under differential test (greedy contract)."""
+    return [("slotted", H.slotted_engine()),
+            ("paged", H.paged_engine())] + [
+            (f"spec{k}", H.paged_engine(spec_k=k)) for k in SPEC_KS]
+
+
+def random_greedy_trace(rng):
+    n = int(rng.integers(1, 6))
+    return [(tuple(int(x) for x in rng.integers(0, 3,
+                                                int(rng.integers(1, 11)))),
+             int(rng.integers(1, 7)), int(rng.integers(0, 9)))
+            for _ in range(n)]
+
+
+def random_mixed_trace(rng):
+    temps = [0.0, 0.0, 0.7, 1.3]
+    topks = [0, 1, 3, H.CFG.vocab_size + 7]
+    n = int(rng.integers(1, 6))
+    return [(tuple(int(x) for x in rng.integers(0, 3,
+                                                int(rng.integers(1, 11)))),
+             int(rng.integers(1, 6)), int(rng.integers(0, 7)),
+             temps[int(rng.integers(0, 4))], topks[int(rng.integers(0, 4))])
+            for _ in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# the trace runners (shared by the seeded and the hypothesis variants)
+# ---------------------------------------------------------------------------
+
+def check_greedy_trace(trace):
+    outs = {}
+    for name, eng in ENGINES():
+        outs[name] = H.run_trace(eng, trace)
+        if hasattr(eng, "pool"):
+            H.audit(eng)
+    for rid, (prompt, gen, _) in enumerate(trace):
+        alone = H.run_alone(tuple(prompt), gen)
+        for name, out in outs.items():
+            assert out[rid] == alone, \
+                f"{name} rid {rid} diverged from the run-alone oracle"
+
+
+def check_mixed_trace(trace):
+    """slotted == paged bit-exactly on every request; the speculative
+    engine matches them on every *greedy* request; and the speculative
+    engine is trace-invariant — the same requests in reverse submission
+    order reproduce every output, sampled ones included."""
+    slotted = H.run_trace(H.slotted_engine(), trace)
+    paged = H.run_trace(H.paged_engine(), trace)
+    assert slotted == paged
+    spec = H.paged_engine(spec_k=SPEC_KS[0])
+    out_a = H.run_trace(spec, trace)
+    for rid, t in enumerate(trace):
+        if t[3] <= 0:               # greedy request
+            assert out_a[rid] == slotted[rid], \
+                f"speculation changed greedy rid {rid}"
+        assert all(0 <= tok < H.CFG.vocab_size for tok in out_a[rid])
+    reqs = H.to_requests(trace, spec.tick)
+    rev = [Request(rid=r.rid, tokens=r.tokens,
+                   max_new_tokens=r.max_new_tokens, temperature=r.temperature,
+                   top_k=r.top_k, seed=r.seed, arrival=spec.tick)
+           for r in reversed(reqs)]
+    out_b = {c.rid: c.tokens for c in spec.run(rev)}
+    assert out_a == out_b, "speculative sampling is not trace-invariant"
+    H.audit(spec)
+
+
+# ---------------------------------------------------------------------------
+# seeded fuzz: runs everywhere
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_random_greedy_traces_all_engines_agree(seed):
+    check_greedy_trace(random_greedy_trace(np.random.default_rng(seed)))
+
+
+@pytest.mark.parametrize("seed", [10, 11])
+def test_random_mixed_traces_contracts(seed):
+    check_mixed_trace(random_mixed_trace(np.random.default_rng(seed)))
+
+
+def test_shared_prefix_cow_eviction_trace():
+    """Deterministic acceptance-criterion trace: repeated identical prompts
+    (COW forks), page-multiple prompt lengths, and enough distinct long
+    prompts to force eviction in the zero-headroom pool — spec output must
+    stay bit-equal to non-spec paged at every tested depth, with no page
+    leaks."""
+    rng = np.random.default_rng(17)
+    shared = tuple(int(x) for x in rng.integers(0, H.CFG.vocab_size,
+                                                2 * H.PAGE))
+    trace = [(shared, 4, 0),                       # publishes both pages
+             (shared, 4, 3),                       # full-prompt hit -> COW
+             (shared + (1, 2), 3, 2),              # prefix hit + suffix
+             (tuple(int(x) for x in rng.integers(0, 64, 11)), 5, 1),
+             (shared, 2, 1),                       # hit after eviction churn
+             (tuple(int(x) for x in rng.integers(0, 64, 9)), 4, 0)]
+    base = H.paged_engine()
+    out_base = H.run_trace(base, trace)
+    H.audit(base)
+    assert base.stats["hits"] >= 1
+    for spec_k in SPEC_KS:
+        spec = H.paged_engine(spec_k=spec_k)
+        out_spec = H.run_trace(spec, trace)
+        assert out_spec == out_base, f"spec_k={spec_k} diverged"
+        H.audit(spec)
+        assert spec.spec_stats["drafted"] > 0
+
+
+def test_spec_engine_through_paged_kernel(monkeypatch):
+    """NLDPE_PAGED_KERNEL=1 routes the q_len = spec_k+1 verify chunk (and
+    the drafts' decode steps) through the Pallas paged-attention kernel.
+    Float-tolerance, not bitwise — but greedy argmax over well-separated
+    logits must still emit the slotted oracle's tokens (the PR 3 decode
+    opt-in test, extended to the multi-query grid)."""
+    monkeypatch.setenv("NLDPE_PAGED_KERNEL", "1")
+    rng = np.random.default_rng(29)
+    trace = [(tuple(int(x) for x in rng.integers(0, H.CFG.vocab_size,
+                                                 int(rng.integers(1, 9)))),
+              int(rng.integers(2, 6)), int(rng.integers(0, 3)))
+             for _ in range(4)]
+    # a distinct singleton key: its jits must trace (and so read the env
+    # var) inside this test, not reuse a dense-path compilation
+    spec = H.paged_engine(spec_k=2, eos_id=-2)
+    slotted = H.run_trace(H.slotted_engine(), trace)
+    out = H.run_trace(spec, trace)
+    assert out == slotted
+    H.audit(spec)
+
+
+def test_eos_truncation_matches_non_spec():
+    """Mid-speculation eos: accepted drafts past the first eos must be
+    dropped (never emitted, never committed) and the finish reason must
+    match non-speculative decode exactly."""
+    prompt = (0, 1, 2)
+    alone = H.run_alone(prompt, 6)
+    eos = alone[2]                      # fires on the third generated token
+    base = H.paged_engine(eos_id=eos)
+    spec = H.paged_engine(spec_k=2, eos_id=eos)
+    reqs = H.to_requests([(prompt, 6, 0)], base.tick)
+    a = {c.rid: (c.tokens, c.finish_reason) for c in base.run(reqs)}
+    reqs = H.to_requests([(prompt, 6, 0)], spec.tick)
+    b = {c.rid: (c.tokens, c.finish_reason) for c in spec.run(reqs)}
+    assert a == b
+    assert a[0][1] == "eos"
+    H.audit(spec)
+
+
+def test_spec_stats_expose_acceptance():
+    spec = H.paged_engine(spec_k=SPEC_KS[-1])
+    H.run_trace(spec, [((0, 1, 2), 6, 0)])
+    st = spec.spec_stats
+    for key in ("spec_steps", "drafted", "accepted", "acceptance_rate",
+                "drafted_by_slot", "accepted_by_slot"):
+        assert key in st
+    assert 0.0 <= st["acceptance_rate"] <= 1.0
+    assert sum(st["drafted_by_slot"]) == st["drafted"]
+
+
+# ---------------------------------------------------------------------------
+# hypothesis fuzz: extra depth when the optional dep is present
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    GREEDY_TRACES, MIXED_TRACES = H.make_strategies()
+
+    @given(GREEDY_TRACES)
+    @settings(max_examples=6, deadline=None)
+    def test_hypothesis_greedy_traces_all_engines_agree(trace):
+        check_greedy_trace(trace)
+
+    @given(MIXED_TRACES)
+    @settings(max_examples=6, deadline=None)
+    def test_hypothesis_mixed_traces_contracts(trace):
+        check_mixed_trace(trace)

@@ -5,96 +5,46 @@ indistinguishable, per request, from running each request alone through the
 seed ``python_loop_decode`` path: order-independence and zero cross-slot
 leakage, whatever admission order, slot reuse, or eviction pattern the
 trace induces.
+
+The trace machinery (engines, run-alone oracle, strategies) lives in
+``tests/engine_harness.py``, shared with the cross-engine differential
+suite (tests/test_engine_differential.py) — this file keeps only the
+slotted-engine-specific properties.
 """
-import jax
-import jax.numpy as jnp
-import numpy as np
 import pytest
 
 pytest.importorskip("hypothesis")  # optional dev dep; degrade, don't error
-from hypothesis import given, settings, strategies as st
+from hypothesis import given, settings
 
-from repro.configs import get_config
-from repro.launch.engine import Request, ServeEngine
-from repro.launch.serve import build_decode_step, python_loop_decode
-from repro.models import lm
-from repro.nn.module import param_dtype
+import engine_harness as H
+from repro.launch.engine import Request
 
-CFG = get_config("qwen2_5_3b", reduced=True)
-MAX_LEN = 24
-
-_STATE = {}
+GREEDY_TRACES, _ = H.make_strategies()
 
 
-def _engine():
-    """Module-level lazy singletons: one param set, one engine, one oracle
-    (jit compiles amortized across hypothesis examples)."""
-    if not _STATE:
-        with param_dtype(jnp.float32):
-            params = lm.init_params(jax.random.key(0), CFG)
-        _STATE["params"] = params
-        _STATE["engine"] = ServeEngine(CFG, params, max_slots=2,
-                                       max_len=MAX_LEN, prefill_chunk=4,
-                                       decode_block=2)
-        _STATE["decode"] = jax.jit(build_decode_step(CFG))
-        _STATE["alone"] = {}
-    return _STATE
-
-
-def _run_alone(prompt: tuple, gen_len: int) -> list:
-    s = _engine()
-    key = (prompt, gen_len)
-    if key not in s["alone"]:
-        cache = lm.init_model_cache(CFG, 1, MAX_LEN, dtype=jnp.float32)
-        logits, cache = lm.forward(s["params"],
-                                   jnp.asarray([prompt], jnp.int32), CFG,
-                                   mode="prefill", cache=cache)
-        tok0 = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
-        gen, _ = python_loop_decode(s["decode"], s["params"], cache, tok0,
-                                    len(prompt), gen_len)
-        s["alone"][key] = [int(t) for t in np.asarray(gen)[0]]
-    return s["alone"][key]
-
-
-request_strategy = st.tuples(
-    st.lists(st.integers(0, CFG.vocab_size - 1), min_size=1, max_size=10),
-    st.integers(1, 6),          # max_new_tokens
-    st.integers(0, 8),          # arrival gap to previous request
-)
-
-
-@given(st.lists(request_strategy, min_size=1, max_size=5))
+@given(GREEDY_TRACES)
 @settings(max_examples=8, deadline=None)
 def test_trace_outputs_equal_run_alone(trace):
-    eng = _engine()["engine"]
-    reqs, t = [], 0
-    for i, (prompt, gen, gap) in enumerate(trace):
-        t += gap
-        reqs.append(Request(rid=i, tokens=tuple(prompt), max_new_tokens=gen,
-                            arrival=eng.tick + t))
-    comps = eng.run(reqs)
-    assert sorted(c.rid for c in comps) == list(range(len(reqs)))
+    eng = H.slotted_engine()
+    out = H.run_trace(eng, trace)
     assert eng.free_slots == eng.max_slots          # everything evicted
-    for r, c in zip(reqs, sorted(comps, key=lambda c: c.rid)):
-        assert c.tokens == _run_alone(r.tokens, r.max_new_tokens), \
-            f"rid {r.rid}: cross-slot contamination or order dependence"
+    for rid, (prompt, gen, _) in enumerate(trace):
+        assert out[rid] == H.run_alone(tuple(prompt), gen), \
+            f"rid {rid}: cross-slot contamination or order dependence"
 
 
-@given(st.lists(request_strategy, min_size=2, max_size=4),
-       st.randoms(use_true_random=False))
+@given(GREEDY_TRACES)
 @settings(max_examples=6, deadline=None)
-def test_submission_order_is_irrelevant_for_outputs(trace, shuffler):
+def test_submission_order_is_irrelevant_for_outputs(trace):
     """Same requests, all arriving at once, admitted in two different
     orders: identical per-request outputs (slot assignment is invisible)."""
-    eng = _engine()["engine"]
+    eng = H.slotted_engine()
     base = [Request(rid=i, tokens=tuple(p), max_new_tokens=g,
                     arrival=eng.tick)
             for i, (p, g, _) in enumerate(trace)]
     out_a = {c.rid: c.tokens for c in eng.run(base)}
-    shuffled = list(base)
-    shuffler.shuffle(shuffled)
     shuffled = [Request(rid=r.rid, tokens=r.tokens,
                         max_new_tokens=r.max_new_tokens, arrival=eng.tick)
-                for r in shuffled]
+                for r in reversed(base)]
     out_b = {c.rid: c.tokens for c in eng.run(shuffled)}
     assert out_a == out_b

@@ -50,6 +50,11 @@ ACT_SHAPES = [(7,), (3, 40), (2, 5, 17), (260,), (4, 2, 2, 9)]
 PAGED_SHAPES = [(1, 2, 2, 8, 2, 8, 8), (2, 4, 2, 12, 3, 16, 16),
                 (1, 4, 1, 9, 3, 6, 32), (2, 2, 1, 10, 4, 5, 8),
                 (1, 8, 2, 6, 2, 128, 64)]
+# (B, Hq, Hkv, P, NB, ps, D, q_len): the speculative-verify grid — q_len
+# queries per sequence with the per-row ragged staircase (query j attends
+# to lengths[b] + j positions); q_len spanning a page boundary included
+PAGED_MQ_SHAPES = [(1, 2, 2, 8, 2, 8, 8, 2), (2, 4, 2, 12, 3, 16, 16, 3),
+                   (1, 4, 1, 9, 3, 6, 32, 5), (2, 2, 1, 10, 4, 5, 8, 7)]
 
 
 def _rand(shape, dtype, scale=1.0):
@@ -161,6 +166,21 @@ def _paged_case(shape):
     return Case("paged_attention", shape, run)
 
 
+def _paged_mq_case(shape):
+    def run(dtype):
+        b, hq, hkv, p, nb, ps, d, ql = shape
+        q = _rand((b, hq, ql, d), dtype)
+        kp = _rand((p, hkv, ps, d), dtype)
+        vp = _rand((p, hkv, ps, d), dtype)
+        bt = jnp.asarray(RNG.integers(0, p, size=(b, nb)), jnp.int32)
+        # leave room for the staircase: lengths[b] + ql - 1 <= NB*ps
+        lengths = jnp.asarray(
+            RNG.integers(1, nb * ps - ql + 2, size=(b,)), jnp.int32)
+        return (paged_attention(q, kp, vp, bt, lengths),
+                paged_attention(q, kp, vp, bt, lengths, use_ref=True), 0.0)
+    return Case("paged_attention_mq", shape, run)
+
+
 CASES = (
     [_crossbar_case(s) for s in MATMUL_SHAPES]
     + [_qmatmul_case(s) for s in MATMUL_SHAPES]
@@ -169,6 +189,7 @@ CASES = (
     + [_flash_case(s) for s in ATTN_SHAPES]
     + [_logdomain_flash_case(s) for s in ATTN_SHAPES]
     + [_paged_case(s) for s in PAGED_SHAPES]
+    + [_paged_mq_case(s) for s in PAGED_MQ_SHAPES]
 )
 
 

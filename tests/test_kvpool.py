@@ -193,3 +193,53 @@ def test_match_peek_has_no_side_effects():
     assert pool.stats == before
     assert pool.match(FP, (7,)) == [a]
     assert pool.stats["hits"] == before["hits"] + 1
+
+
+def test_publish_committed_only_admits_fully_committed_pages():
+    """The provisional-length protocol (ISSUE 4): a speculating slot's
+    token tail and page slack hold drafted-but-unverified K/V — only pages
+    whose every position lies below the committed length may enter the
+    radix index."""
+    pool = PagePool(num_pages=6, page_size=2)
+    pages = pool.alloc(4)                  # 8 positions of footprint
+    toks = (1, 2, 3, 4, 5, 6, 7)           # 7 tokens, 5 committed
+    pool.publish_committed(FP, toks, pages, committed_len=5)
+    # committed 5 positions -> 2 full pages published, pages[2:] private
+    assert pool.match(FP, toks, peek=True) == pages[:2]
+    assert pool.stats["gen_published"] == 2
+    pool.release(pages)
+    # uncommitted tail pages returned straight to the free list (no leak)
+    assert pool.free_pages == 4            # 2 free originally + pages[2:]
+    assert pool.available() == 6
+    pool.check()
+
+
+def test_publish_committed_defaults_to_full_length_and_validates():
+    pool = PagePool(num_pages=4, page_size=2)
+    pages = pool.alloc(2)
+    pool.publish_committed(FP, (1, 2, 3, 4), pages)
+    assert pool.match(FP, (1, 2, 3, 4), peek=True) == pages
+    with pytest.raises(ValueError, match="committed_len"):
+        pool.publish_committed(FP, (1, 2), pages[:1], committed_len=3)
+    with pytest.raises(ValueError, match="committed_len"):
+        pool.publish_committed(FP, (1, 2), pages[:1], committed_len=-1)
+    pool.release(pages)
+    pool.check()
+
+
+def test_publish_committed_skips_already_published_prefix():
+    """Completion-time publish walks through the admission-time prompt
+    nodes: existing chunks keep their original pages, only the generated
+    suffix's pages are newly published."""
+    pool = PagePool(num_pages=8, page_size=2)
+    prompt_pages = pool.alloc(2)
+    pool.publish(FP, (1, 2, 3, 4), prompt_pages)      # admission publish
+    gen_pages = pool.alloc(2)
+    seq = (1, 2, 3, 4, 9, 8, 7)                       # prompt + generated
+    pool.publish_committed(FP, seq, prompt_pages + gen_pages,
+                           committed_len=6)
+    assert pool.match(FP, seq, peek=True) == prompt_pages + gen_pages[:1]
+    assert pool.stats["gen_published"] == 1           # only the new chunk
+    pool.release(prompt_pages)
+    pool.release(gen_pages)
+    pool.check()

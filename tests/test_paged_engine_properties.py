@@ -3,105 +3,48 @@
 Random Poisson traces — with prompts drawn from a tiny token alphabet so
 prefixes collide constantly, and a pool sized to force LRU eviction and
 copy-on-write forks — must reproduce the PR 2 slotted engine's tokens
-**bit-exactly**, request for request.  The slotted oracle reuses one
-engine across examples (jit amortization); the paged engine is rebuilt
-per example so every trace starts from a cold radix index.
+**bit-exactly**, request for request.
+
+The trace machinery (engines, strategies, pool audits) lives in
+``tests/engine_harness.py``, shared with the cross-engine differential
+suite (tests/test_engine_differential.py) — this file keeps only the
+paged-specific cache-invisibility property and the slotted-parity check.
 """
-import jax
-import jax.numpy as jnp
-import numpy as np
 import pytest
 
 pytest.importorskip("hypothesis")  # optional dev dep; degrade, don't error
-from hypothesis import given, settings, strategies as st
+from hypothesis import given, settings
 
-from repro.configs import get_config
-from repro.launch.engine import PagedServeEngine, Request, ServeEngine
-from repro.models import lm
-from repro.nn.module import param_dtype
+import engine_harness as H
 
-CFG = get_config("qwen2_5_3b", reduced=True)
-MAX_LEN = 24
-PAGE = 4
-SLOTS = 2
-# zero-headroom pool: slots * ceil(max_len / page) pages, so radix-cached
-# prompts are evicted as soon as live requests need their pages
-NUM_PAGES = SLOTS * (-(-MAX_LEN // PAGE))
-
-_STATE = {}
+GREEDY_TRACES, _ = H.make_strategies()
 
 
-def _shared():
-    if not _STATE:
-        with param_dtype(jnp.float32):
-            params = lm.init_params(jax.random.key(0), CFG)
-        _STATE["params"] = params
-        _STATE["slotted"] = ServeEngine(CFG, params, max_slots=SLOTS,
-                                        max_len=MAX_LEN, prefill_chunk=4,
-                                        decode_block=2)
-        # ONE paged engine across examples (compile cache); its radix index
-        # carries over, which must be invisible in the outputs — carried
-        # cache can only turn misses into hits, never change tokens
-        _STATE["paged"] = PagedServeEngine(CFG, params, max_slots=SLOTS,
-                                           max_len=MAX_LEN, prefill_chunk=4,
-                                           decode_block=2, page_size=PAGE,
-                                           num_pages=NUM_PAGES)
-    return _STATE
-
-
-# tiny alphabet + short lengths -> dense prefix collisions; lengths that
-# are exact page multiples force the COW fork path
-request_strategy = st.tuples(
-    st.lists(st.integers(0, 2), min_size=1, max_size=10),   # prompt tokens
-    st.integers(1, 5),          # max_new_tokens
-    st.integers(0, 6),          # arrival gap to previous request
-)
-
-
-@given(st.lists(request_strategy, min_size=1, max_size=5))
+@given(GREEDY_TRACES)
 @settings(max_examples=8, deadline=None)
 def test_paged_trace_is_bit_exact_with_slotted(trace):
-    s = _shared()
-    slotted, paged = s["slotted"], s["paged"]
-    t = 0
-    reqs_a, reqs_b = [], []
-    for i, (prompt, gen, gap) in enumerate(trace):
-        t += gap
-        for reqs, eng in ((reqs_a, slotted), (reqs_b, paged)):
-            reqs.append(Request(rid=i, tokens=tuple(prompt),
-                                max_new_tokens=gen, arrival=eng.tick + t))
-    out_a = {c.rid: c.tokens for c in slotted.run(reqs_a)}
-    out_b = {c.rid: c.tokens for c in paged.run(reqs_b)}
+    out_a = H.run_trace(H.slotted_engine(), trace)
+    out_b = H.run_trace(H.paged_engine(), trace)
     assert out_a == out_b, "paged engine diverged from the slotted oracle"
-    assert paged.free_slots == paged.max_slots
-    paged.pool.check()
-    # every page is reclaimable once the trace drains (no leaks)
-    assert paged.pool.available() == paged.pool.num_pages
+    H.audit(H.paged_engine())       # incl. no-leak free-count audit
 
 
-@given(st.lists(request_strategy, min_size=2, max_size=4))
+@given(GREEDY_TRACES)
 @settings(max_examples=6, deadline=None)
 def test_prefix_cache_state_is_invisible_in_outputs(trace):
     """Serving the same trace twice back-to-back: the second pass may hit
-    pages the first pass published (or miss them after eviction), but the
-    tokens must be identical — cached K/V are bit-equal to recomputed K/V.
+    pages the first pass published (prompt pages at admission, committed
+    generations at completion), or miss them after eviction — but the
+    tokens must be identical: cached K/V are bit-equal to recomputed K/V.
     """
-    s = _shared()
-    paged = s["paged"]
-
-    def serve():
-        reqs = [Request(rid=i, tokens=tuple(p), max_new_tokens=g,
-                        arrival=paged.tick + gap)
-                for i, (p, g, gap) in enumerate(trace)]
-        return {c.rid: c.tokens for c in paged.run(reqs)}
-
-    first = serve()
+    paged = H.paged_engine()
+    first = H.run_trace(paged, trace)
     hits_before = paged.stats["hit_pages"]
-    second = serve()
+    second = H.run_trace(paged, trace)
     assert first == second
     paged.pool.check()
     # the tiny alphabet guarantees at least prompt prefixes recur; the
     # second pass must have consulted the radix index (hit or evicted)
     assert (paged.stats["hit_pages"] > hits_before
             or paged.stats["evicted"] > 0
-            or all(len(p) < PAGE for p, _, _ in trace))
+            or all(len(p) < H.PAGE for p, _, _ in trace))

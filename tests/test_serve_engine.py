@@ -191,6 +191,18 @@ def test_submit_rejects_degenerate_requests(engine_off):
     with pytest.raises(ValueError, match="top_k"):
         engine_off.submit(Request(rid=97, tokens=(1,), max_new_tokens=2,
                                   top_k=-4))
+    # between the static gather cap and the vocabulary: unrepresentable —
+    # it would silently clamp to TOP_K_CAP inside the jit
+    from repro.launch.sampling import TOP_K_CAP
+    if TOP_K_CAP + 1 < CFG.vocab_size:
+        with pytest.raises(ValueError, match="TOP_K_CAP"):
+            engine_off.submit(Request(rid=99, tokens=(1,), max_new_tokens=2,
+                                      top_k=TOP_K_CAP + 1))
+    # explicitly fine: 0 disables, >= vocab_size disables, <= cap works
+    for ok_k in (0, CFG.vocab_size, CFG.vocab_size + 5,
+                 min(TOP_K_CAP, CFG.vocab_size - 1)):
+        engine_off._validate(Request(rid=100 + ok_k, tokens=(1,),
+                                     max_new_tokens=2, top_k=ok_k))
     for bad_temp in (float("nan"), float("inf"), -0.5):
         with pytest.raises(ValueError, match="finite and >= 0"):
             engine_off.submit(Request(rid=98, tokens=(1,), max_new_tokens=2,

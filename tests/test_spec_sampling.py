@@ -1,0 +1,203 @@
+"""Speculative sampling math (ISSUE 4 satellite).
+
+Unit tests pin the residual-distribution identity and the explicit top-k
+edge cases in ``launch/sampling.py``; the slow-marked chi-square test
+proves the acceptance criterion that matters: speculative rejection
+sampling at temperature > 0 draws from exactly the distribution
+non-speculative ``sample_tokens`` draws from, on a tiny vocabulary, with
+the real ``speculative_accept`` pipeline end to end.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.sampling import (DRAFT_STREAM, TOP_K_CAP, process_logits,
+                                   residual_probs, sample_from_probs,
+                                   sample_tokens, spec_fold, step_keys,
+                                   target_probs)
+from repro.launch.spec_decode import speculative_accept
+
+RNG = np.random.default_rng(123)
+
+
+# ---------------------------------------------------------------------------
+# process_logits / sample_tokens top-k edges
+# ---------------------------------------------------------------------------
+
+def _logits(s, v):
+    return jnp.asarray(RNG.normal(size=(s, v)).astype(np.float32))
+
+
+def test_top_k_zero_disables():
+    lg = _logits(3, 10)
+    out = process_logits(lg, jnp.zeros((3,), jnp.int32))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(lg))
+
+
+def test_top_k_at_or_above_vocab_disables():
+    """top_k >= vocab_size keeps every token — it must NOT silently clamp
+    to the static TOP_K_CAP gather width (the pre-fix behavior)."""
+    v = TOP_K_CAP + 36
+    lg = _logits(2, v)
+    for k in (v, v + 1, 10 * v):
+        out = process_logits(lg, jnp.full((2,), k, jnp.int32))
+        assert np.isfinite(np.asarray(out)).all(), f"top_k={k} masked tokens"
+
+
+def test_top_k_normal_keeps_exactly_k():
+    lg = _logits(4, 32)
+    for k in (1, 3, 7):
+        out = np.asarray(process_logits(lg, jnp.full((4,), k, jnp.int32)))
+        assert (np.isfinite(out).sum(-1) == k).all()
+
+
+def test_top_k_between_cap_and_vocab_clamps_to_cap():
+    """Unrepresentable by the static gather: documented clamp (the engine
+    rejects these at _validate so the clamp is never silently hit)."""
+    v = TOP_K_CAP + 100
+    lg = _logits(2, v)
+    out = np.asarray(process_logits(lg, jnp.full((2,), TOP_K_CAP + 10,
+                                                 jnp.int32)))
+    assert (np.isfinite(out).sum(-1) == TOP_K_CAP).all()
+
+
+def test_greedy_never_consumes_keys():
+    lg = _logits(3, 16)
+    t0 = sample_tokens(lg, jnp.zeros((3, 2), jnp.uint32),
+                       jnp.zeros((3,)), jnp.zeros((3,), jnp.int32))
+    t1 = sample_tokens(lg, jnp.ones((3, 2), jnp.uint32) * 999,
+                       jnp.zeros((3,)), jnp.zeros((3,), jnp.int32))
+    np.testing.assert_array_equal(np.asarray(t0), np.asarray(t1))
+    np.testing.assert_array_equal(np.asarray(t0),
+                                  np.asarray(jnp.argmax(lg, -1)))
+
+
+# ---------------------------------------------------------------------------
+# residual-distribution math
+# ---------------------------------------------------------------------------
+
+def test_residual_is_normalized_positive_part():
+    p = jnp.asarray([[0.5, 0.3, 0.2]])
+    q = jnp.asarray([[0.2, 0.5, 0.3]])
+    r = np.asarray(residual_probs(p, q))[0]
+    np.testing.assert_allclose(r, [1.0, 0.0, 0.0], atol=1e-7)
+    p = jnp.asarray([[0.6, 0.3, 0.1]])
+    q = jnp.asarray([[0.2, 0.2, 0.6]])
+    r = np.asarray(residual_probs(p, q))[0]
+    np.testing.assert_allclose(r, [0.4 / 0.5, 0.1 / 0.5, 0.0], atol=1e-6)
+
+
+def test_residual_identical_distributions_falls_back_to_p():
+    p = jnp.asarray([[0.25, 0.25, 0.5]])
+    r = np.asarray(residual_probs(p, p))[0]
+    np.testing.assert_allclose(r, np.asarray(p)[0], atol=1e-7)
+
+
+def test_residual_preserves_target_distribution_identity():
+    """The speculative-sampling identity, checked in closed form:
+    P[token = t] = q[t] * min(1, p[t]/q[t]) + P[reject] * residual[t]
+    must equal p[t] for every t."""
+    rng = np.random.default_rng(7)
+    for _ in range(20):
+        p = rng.dirichlet(np.ones(9))
+        q = rng.dirichlet(np.ones(9))
+        accept = q * np.minimum(1.0, p / q)
+        p_reject = 1.0 - accept.sum()
+        res = np.asarray(residual_probs(jnp.asarray(p)[None],
+                                        jnp.asarray(q)[None]))[0]
+        np.testing.assert_allclose(accept + p_reject * res, p, atol=1e-6)
+
+
+def test_one_hot_sampling_is_key_independent():
+    probs = jnp.asarray([[0.0, 1.0, 0.0], [1.0, 0.0, 0.0]])
+    for seed in (0, 3, 99):
+        keys = jax.vmap(jax.random.PRNGKey)(jnp.asarray([seed, seed + 1]))
+        np.testing.assert_array_equal(
+            np.asarray(sample_from_probs(keys, probs)), [1, 0])
+
+
+def test_target_probs_greedy_is_exact_argmax_one_hot():
+    lg = _logits(5, 33)
+    p = np.asarray(target_probs(lg, jnp.zeros((5,)),
+                                jnp.zeros((5,), jnp.int32)))
+    am = np.asarray(jnp.argmax(lg, -1))
+    assert (p.argmax(-1) == am).all()
+    assert (p.sum(-1) == 1.0).all() and ((p == 0) | (p == 1)).all()
+
+
+# ---------------------------------------------------------------------------
+# speculative_accept: greedy contract
+# ---------------------------------------------------------------------------
+
+def _accept_inputs(s, k, v, drafts, qlogits, vlogits, temp=0.0, topk=0):
+    q = target_probs(qlogits.reshape(s * k, v),
+                     jnp.full((s * k,), temp), jnp.full((s * k,), topk,
+                                                        jnp.int32))
+    return speculative_accept(
+        jnp.asarray(drafts, jnp.int32), q.reshape(s, k, v),
+        jnp.asarray(vlogits), jnp.full((s,), temp),
+        jnp.full((s,), topk, jnp.int32),
+        jax.vmap(jax.random.PRNGKey)(jnp.arange(s)),
+        jnp.full((s,), 4, jnp.int32))
+
+
+def test_greedy_accepts_matching_prefix_and_corrects_with_argmax():
+    v, k = 11, 3
+    vlogits = _logits(1, (k + 1) * v).reshape(1, k + 1, v)
+    tgt = np.asarray(jnp.argmax(vlogits, -1))[0]           # (k+1,)
+    # drafts match at 0, diverge at 1
+    drafts = np.array([[tgt[0], (tgt[1] + 1) % v, tgt[2]]])
+    qlogits = _logits(1, k * v).reshape(1, k, v)
+    a, corr = _accept_inputs(1, k, v, drafts, qlogits, vlogits)
+    assert int(a[0]) == 1
+    assert int(corr[0]) == tgt[1]                          # verify argmax
+    # all-match: bonus token from the last verify distribution
+    a, corr = _accept_inputs(1, k, v, np.array([tgt[:k]]), qlogits, vlogits)
+    assert int(a[0]) == k and int(corr[0]) == tgt[k]
+
+
+# ---------------------------------------------------------------------------
+# the distribution proof (slow): spec pipeline == sample_tokens
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+@pytest.mark.parametrize("temp,topk", [(0.8, 0), (1.3, 3)])
+def test_chi_square_spec_matches_nonspec_distribution(temp, topk):
+    """Run the full draft->accept->correct pipeline N times (vectorized as
+    N slots) on one fixed (draft logits, target logits) pair and compare
+    the emitted-first-token histogram against non-speculative
+    ``sample_tokens`` draws from the same target logits, two-sample
+    chi-square.  Seeded and deterministic; df = V-1 = 6, critical value
+    at alpha = 1e-3 is 22.46."""
+    v, k, n = 7, 2, 20000
+    rng = np.random.default_rng(11)
+    qlog = jnp.asarray(rng.normal(size=v).astype(np.float32))
+    plog = jnp.asarray(rng.normal(size=v).astype(np.float32))
+    temp_v = jnp.full((n,), temp)
+    topk_v = jnp.full((n,), topk, jnp.int32)
+    keys = jax.vmap(jax.random.PRNGKey)(jnp.arange(n))
+    pos = jnp.full((n,), 9, jnp.int32)
+
+    # draft exactly as build_draft_scan_fn does: d ~ q on the DRAFT stream
+    qprob = target_probs(jnp.tile(qlog[None], (n, 1)), temp_v, topk_v)
+    d0 = sample_from_probs(spec_fold(keys, pos + 1, DRAFT_STREAM), qprob)
+    drafts = jnp.stack([d0, d0], axis=1)            # second draft unused
+    q_full = jnp.tile(qprob[:, None], (1, k, 1))
+    vlogits = jnp.tile(plog[None, None], (n, k + 1, 1))
+    a, corr = speculative_accept(drafts, q_full, vlogits, temp_v, topk_v,
+                                 keys, pos)
+    first = np.asarray(jnp.where(a >= 1, drafts[:, 0], corr))
+
+    ref = np.asarray(sample_tokens(jnp.tile(plog[None], (n, 1)),
+                                   step_keys(keys, pos + 1), temp_v, topk_v))
+    obs = np.bincount(first, minlength=v).astype(np.float64)
+    exp = np.bincount(ref, minlength=v).astype(np.float64)
+    # two-sample chi-square on the pooled estimate
+    tot = obs + exp
+    live = tot > 0
+    chi2 = (((obs - exp) ** 2) / np.maximum(tot, 1))[live].sum()
+    df = live.sum() - 1
+    assert df <= 6
+    assert chi2 < 22.46, f"chi2={chi2:.1f} over df={df}: spec sampling " \
+                         f"does not match the non-speculative distribution"
