@@ -26,7 +26,12 @@ ROWS = ("serve/cb_tok_per_s[off]", "serve/lockstep_tok_per_s[off]",
         "serve/spec_tok_per_s[k4]",
         "serve/spec_nonspec_tok_per_s[k4]",
         "serve/spec_speedup_analog_x[k4]",
-        "serve/spec_accept_rate[k4]")
+        "serve/spec_accept_rate[k4]",
+        "serve/sharded_single_tok_per_s[4Lx256d]",
+        "serve/sharded_tok_per_s[4Lx256d_m2x1]",
+        "serve/sharded_tok_per_s[4Lx256d_m1x2]",
+        "serve/sharded_tok_per_s[4Lx256d_m2x2]",
+        "serve/sharded_rel_x[4Lx256d_m2x2]")
 
 _REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
@@ -39,10 +44,12 @@ def main() -> int:
     with open(path) as f:
         baseline = {r["name"]: r for r in json.load(f)["rows"]}
 
-    from benchmarks.serve_bench import bench_continuous, bench_paged, bench_spec
+    from benchmarks.serve_bench import (bench_continuous, bench_paged,
+                                        bench_sharded, bench_spec)
     fresh = {r["name"]: r for r in bench_continuous("off")}
     fresh.update({r["name"]: r for r in bench_paged("shared_prefix")})
     fresh.update({r["name"]: r for r in bench_spec("k4")})
+    fresh.update({r["name"]: r for r in bench_sharded("4Lx256d")})
 
     for name in ROWS:
         if name not in baseline:
@@ -84,6 +91,11 @@ def main() -> int:
         print(f"::warning::speculative acceptance rate {acc:.2f} collapsed "
               f"— the analog drafter is no longer tracking the digital "
               f"path (numerics drift?)")
+    rel = float(fresh["serve/sharded_rel_x[4Lx256d_m2x2]"]["derived"])
+    if rel < 0.05:
+        print(f"::warning::dp x tp sharded serving collapsed to "
+              f"{rel:.2f}x of single-device — sharding overhead exploded "
+              f"(fake-device collectives should cost ~constant factors)")
     return 0      # warn-only by design
 
 

@@ -69,6 +69,19 @@ PREFIX_POOL = 48                         # 6 slots x 6 blocks + cache headroom
 SPEC_N, SPEC_SLOTS, SPEC_K = 10, 4, 4
 SPEC_MAX_LEN, SPEC_PAGE, SPEC_CHUNK, SPEC_BLOCK = 64, 16, 16, 8
 
+# Mesh-sharded serving cell (ISSUE 5): the paged engine on (dp, tp) meshes
+# over 8 forced host devices vs mesh=None in the SAME 8-device subprocess
+# (so the relative factor isolates sharding overhead from the forced
+# device-count runtime).  On this CPU host the "devices" are slices of one
+# machine, so collectives are pure overhead and rel_x < 1 is expected —
+# the cell tracks that overhead release over release; real speedups need
+# real parallel hardware.  4L x 256d: heads 8 / kv 2 divide model=2, slots
+# 4 divide data=2.
+SHARDED_MESHES = ((2, 1), (1, 2), (2, 2))
+SHARDED_N, SHARDED_SLOTS = 16, 4
+SHARDED_MAX_LEN, SHARDED_PAGE = 104, 16
+SHARDED_CHUNK, SHARDED_BLOCK = 24, 8
+
 
 def _trace_cfg():
     import dataclasses
@@ -405,6 +418,92 @@ def bench_spec(label: str, spec_k: int = SPEC_K):
     ]
 
 
+def _sharded_child():
+    """Child half of ``bench_sharded`` — run me in a subprocess with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` already in the
+    environment (it must precede the jax import, which is why the parent
+    cannot measure in-process).  Prints one ``SHARDED_JSON {...}`` line:
+    mesh label -> {serve_s, useful}."""
+    import json
+
+    from repro.launch.mesh import serve_mesh
+
+    cfg = _trace_cfg()
+    key = jax.random.key(0)
+    with param_dtype(jnp.float32):
+        params = lm.init_params(key, cfg)
+    rng = np.random.default_rng(11)
+    reqs = poisson_trace(rng, SHARDED_N)
+    useful = sum(r.max_new_tokens for r in reqs)
+    kw = dict(max_slots=SHARDED_SLOTS, max_len=SHARDED_MAX_LEN,
+              prefill_chunk=SHARDED_CHUNK, decode_block=SHARDED_BLOCK,
+              page_size=SHARDED_PAGE)
+
+    def measure(mesh):
+        eng = PagedServeEngine(cfg, params, mesh=mesh, **kw)
+        eng.run(_shift(poisson_trace(rng, 4), eng.tick))    # warm the jits
+        best = float("inf")
+        for _ in range(3):
+            shifted = _shift(reqs, eng.tick)
+            t0 = time.time()
+            comps = eng.run(shifted)
+            best = min(best, time.time() - t0)
+            assert sum(len(c.tokens) for c in comps) == useful
+        return best
+
+    results = {"single": {"serve_s": measure(None), "useful": useful}}
+    for shape in SHARDED_MESHES:
+        mesh = serve_mesh(*shape)
+        label = f"m{shape[0]}x{shape[1]}"
+        results[label] = {"serve_s": measure(mesh), "useful": useful}
+    print("SHARDED_JSON " + json.dumps(results), flush=True)
+
+
+def bench_sharded(label: str):
+    """Paged serving tokens/sec vs mesh shape (ISSUE 5 tracking cell).
+
+    Spawns one subprocess with 8 forced host devices (the flag must be set
+    before jax initializes) that serves the same Poisson trace on
+    mesh=None and on every ``SHARDED_MESHES`` shape; commits absolute
+    tokens/sec per mesh plus the factor relative to the in-subprocess
+    single-device serve.  See ``SHARDED_MESHES`` for why rel_x < 1 is the
+    expected shape on a CPU host."""
+    import json
+    import os
+    import subprocess
+    import sys
+
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.pathsep.join(
+        [repo, os.path.join(repo, "src")]
+        + ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else []))
+    out = subprocess.run(
+        [sys.executable, "-c",
+         "from benchmarks.serve_bench import _sharded_child; "
+         "_sharded_child()"],
+        capture_output=True, text=True, env=env, timeout=1800)
+    assert out.returncode == 0, out.stdout[-2000:] + out.stderr[-4000:]
+    line = [l for l in out.stdout.splitlines()
+            if l.startswith("SHARDED_JSON ")][-1]
+    results = json.loads(line[len("SHARDED_JSON "):])
+    single = results.pop("single")
+    s_tps = single["useful"] / single["serve_s"]
+    rows = [row(f"serve/sharded_single_tok_per_s[{label}]",
+                single["serve_s"] / single["useful"] * 1e6,
+                round(s_tps, 1))]
+    for mlabel, r in results.items():
+        tps = r["useful"] / r["serve_s"]
+        rows += [
+            row(f"serve/sharded_tok_per_s[{label}_{mlabel}]",
+                r["serve_s"] / r["useful"] * 1e6, round(tps, 1)),
+            row(f"serve/sharded_rel_x[{label}_{mlabel}]", 0.0,
+                round(tps / max(s_tps, 1e-9), 2)),
+        ]
+    return rows
+
+
 def main(verbose: bool = True):
     rows = []
     for label, nldpe, gen_len, loops in [
@@ -417,6 +516,7 @@ def main(verbose: bool = True):
     rows += bench_continuous("off")
     rows += bench_paged("shared_prefix")
     rows += bench_spec(f"k{SPEC_K}")
+    rows += bench_sharded("4Lx256d")
     if verbose:
         for r in rows:
             print(f"{r['name']:44s} {r['us_per_call']:>12.1f} us  {r['derived']}")

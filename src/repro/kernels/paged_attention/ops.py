@@ -42,3 +42,60 @@ def paged_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
              v_pages.astype(jnp.float32), bt, lengths, **kw)
     out = out.astype(q.dtype)
     return out[:, :, 0] if squeeze else out
+
+
+def _divides(mesh, axis, *dims) -> bool:
+    """True when ``axis`` exists on ``mesh`` and divides every dim."""
+    if axis is None:
+        return False
+    flat = tuple(axis) if isinstance(axis, (tuple, list)) else (axis,)
+    if any(a not in mesh.shape for a in flat):
+        return False
+    from ...parallel.sharding import _axis_size
+    size = _axis_size(mesh, axis)
+    return all(d % size == 0 for d in dims)
+
+
+def paged_attention_sharded(q: jax.Array, k_pages: jax.Array,
+                            v_pages: jax.Array, block_tables: jax.Array,
+                            lengths: jax.Array, mesh, rules,
+                            interpret: bool | None = None,
+                            use_ref: bool = False) -> jax.Array:
+    """``paged_attention`` under ``shard_map``: the Pallas grid runs once
+    per shard on that shard's heads and sequences (DESIGN.md §9).
+
+    A ``pallas_call`` cannot be partitioned by GSPMD, so under a mesh the
+    kernel is dispatched per-shard explicitly: query/kv heads shard over
+    the rule table's "kv_heads" mesh axis (both head counts must divide so
+    every GQA group stays shard-local), sequences over "slots".  The block
+    table and lengths ride **replicated across the model axis** — every
+    head shard gathers through the same table into its own head slice of
+    the page pools, and the gather indices carry no float math, so the
+    per-shard outputs are exactly the head slices of the unsharded call.
+    The pools' pages axis is always replicated here (a "pages"->data
+    mapping, as in the LONG rules, is resharded in at the boundary).
+    Any non-divisible axis falls back to replication — never an error.
+    """
+    from ...parallel.compat import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    b, hq = q.shape[0], q.shape[1]
+    hkv = k_pages.shape[1]
+    model_ax = rules.lookup("kv_heads")
+    if not _divides(mesh, model_ax, hq, hkv):
+        model_ax = None
+    data_ax = rules.lookup("slots")
+    if not _divides(mesh, data_ax, b):
+        data_ax = None
+    q_spec = P(data_ax, model_ax, *(None,) * (q.ndim - 2))
+    kv_spec = P(None, model_ax, None, None)
+
+    def local(q_, kp_, vp_, bt_, ln_):
+        return paged_attention(q_, kp_, vp_, bt_, ln_,
+                               interpret=interpret, use_ref=use_ref)
+
+    return shard_map(
+        local, mesh=mesh,
+        in_specs=(q_spec, kv_spec, kv_spec, P(data_ax, None), P(data_ax)),
+        out_specs=q_spec, check_vma=False,
+    )(q, k_pages, v_pages, block_tables, lengths)

@@ -30,6 +30,14 @@ This module replaces that with a *server* (DESIGN.md §5):
 * **Eviction** — finishing a slot just marks it free; the next admission
   resets the row's position track, so no cleanup pass is needed.
 
+Both engines serve **mesh-sharded** when given ``mesh=`` (DESIGN.md §9):
+params/caches/state are placed per a logical-axis rule table (``rules=``,
+default ``serve_exact``) and the per-tick jits trace under the sharding
+context — heads shard over "model", slots over "data", the paged-attention
+kernel dispatches per-shard via shard_map, and host-side scheduling stays
+global.  Under the default rules, sharded outputs are bit-identical to
+``mesh=None`` (tests/test_engine_sharded.py).
+
 ``PagedServeEngine`` below replaces the per-slot worst-case cache rows
 with a paged pool + radix prefix sharing (DESIGN.md §7): same scheduler,
 same contracts, bit-exact outputs, but physical capacity decouples from
@@ -65,6 +73,8 @@ import jax.tree_util as jtu
 from ..core.engine import NLDPEConfig, OFF
 from ..models import lm
 from ..models.lm import ATTN_TYPES
+from ..parallel import sharding
+from ..parallel.context import sharding_ctx
 from .kvpool import PagePool, nldpe_fingerprint
 from .sampling import TOP_K_CAP, request_key, sample_tokens, step_keys
 from .spec_decode import (batch_dim as _batch_dim, build_draft_scan_fn,
@@ -108,7 +118,8 @@ class ServeEngine:
     def __init__(self, cfg, params, *, max_slots: int, max_len: int,
                  nldpe: NLDPEConfig = OFF, prefill_chunk: int = 16,
                  decode_block: int = 4, eos_id: int = -1,
-                 batch_groups: int = 1, dtype=jnp.float32):
+                 batch_groups: int = 1, dtype=jnp.float32,
+                 mesh=None, rules=None):
         bad = [t for t in cfg.layer_pattern if t not in ATTN_TYPES]
         if bad:
             raise NotImplementedError(
@@ -118,7 +129,19 @@ class ServeEngine:
             raise ValueError("max_slots, prefill_chunk, decode_block >= 1")
         prefill_chunk = min(prefill_chunk, max_len)
         self.cfg = cfg
-        self.params = params
+        # Mesh-sharded serving (DESIGN.md §9): with ``mesh`` set, params and
+        # every cache/state leaf are placed per the logical-axis ``rules``
+        # (a Rules table or a rules_for name; default "serve_exact" — heads
+        # shard over "model", slots/pages over "data") and every per-tick
+        # jit traces under the sharding context so in-model constraints
+        # resolve.  Host-side scheduling stays global.  Under the default
+        # exact rules, sharded outputs are bit-identical to mesh=None.
+        self.mesh = mesh
+        if isinstance(rules, str):
+            rules = sharding.rules_for(rules, False)
+        self.rules = rules if rules is not None \
+            else sharding.serve_exact_rules()
+        self.params = self._place_params(params)
         self.max_slots = max_slots
         self.max_len = max_len
         self.nldpe = nldpe
@@ -129,14 +152,16 @@ class ServeEngine:
         self.dtype = dtype
 
         s = max_slots
-        self.cache = self._init_cache()
-        self._tok = jnp.zeros((s,), jnp.int32)
-        self._pos = jnp.zeros((s,), jnp.int32)
-        self._active = jnp.zeros((s,), bool)
-        self._gen_left = jnp.zeros((s,), jnp.int32)
-        self._temp = jnp.zeros((s,), jnp.float32)
-        self._topk = jnp.zeros((s,), jnp.int32)
-        self._keys = jnp.zeros((s, 2), jnp.uint32)
+        self.cache = self._place_cache(self._init_cache())
+        slot_sh = self._named(("slots",), (s,))
+        self._tok = self._put(jnp.zeros((s,), jnp.int32), slot_sh)
+        self._pos = self._put(jnp.zeros((s,), jnp.int32), slot_sh)
+        self._active = self._put(jnp.zeros((s,), bool), slot_sh)
+        self._gen_left = self._put(jnp.zeros((s,), jnp.int32), slot_sh)
+        self._temp = self._put(jnp.zeros((s,), jnp.float32), slot_sh)
+        self._topk = self._put(jnp.zeros((s,), jnp.int32), slot_sh)
+        self._keys = self._put(jnp.zeros((s, 2), jnp.uint32),
+                               self._named(("slots", None), (s, 2)))
 
         self._slot_owner: list[Request | None] = [None] * s
         self._free = deque(range(s))
@@ -144,8 +169,9 @@ class ServeEngine:
         self._admitted_tick: dict[int, int] = {}
         self.tick = 0
 
-        self._chunk_fn = jax.jit(self._build_chunk_fn(), donate_argnums=(0,))
-        self._decode_fn = jax.jit(self._build_decode_fn(),
+        self._chunk_fn = jax.jit(self._ctx(self._build_chunk_fn()),
+                                 donate_argnums=(0,))
+        self._decode_fn = jax.jit(self._ctx(self._build_decode_fn()),
                                   donate_argnums=(0, 1, 2, 3, 4))
         # running (S, V) last-logits merge: each chunk contributes only the
         # rows of slots whose last real prompt token lives in it, so wave
@@ -154,15 +180,75 @@ class ServeEngine:
         def merge_last(last, lg, take, col):
             rows = lg[jnp.arange(lg.shape[0]), col]            # (S, V)
             return jnp.where(take[:, None], rows, last)
-        self._last_fn = jax.jit(merge_last, donate_argnums=(0,))
+        self._last_fn = jax.jit(self._ctx(merge_last), donate_argnums=(0,))
         # first-token sampler, fixed (max_slots, V) shape so it compiles once
-        self._sample_fn = jax.jit(
+        self._sample_fn = jax.jit(self._ctx(
             lambda logits, keys, positions, temp, topk:
-            sample_tokens(logits, step_keys(keys, positions), temp, topk))
+            sample_tokens(logits, step_keys(keys, positions), temp, topk)))
         # admission state writes as ONE fixed-shape masked merge (per-index
         # eager scatters re-specialize on every distinct wave size)
-        self._state_fn = jax.jit(self._build_state_fn(),
+        self._state_fn = jax.jit(self._ctx(self._build_state_fn()),
                                  donate_argnums=tuple(range(7)))
+
+    # ------------------------------------------------------------------
+    # mesh placement (no-ops when mesh is None)
+    # ------------------------------------------------------------------
+
+    def _ctx(self, f):
+        """Trace ``f`` under the engine's sharding context, so logical-axis
+        ``shard(...)`` constraints inside the model resolve against
+        (mesh, rules) — including the all-gather constraints at contraction
+        boundaries that keep exact-rule sharding bit-identical, and the
+        shard_map dispatch of the paged-attention kernel."""
+        if self.mesh is None:
+            return f
+        mesh, rules = self.mesh, self.rules
+
+        def traced(*args):
+            with sharding_ctx(mesh, rules):
+                return f(*args)
+
+        return traced
+
+    def _named(self, axes: tuple, shape: tuple):
+        if self.mesh is None:
+            return None
+        return sharding.named(self.rules, axes, shape, self.mesh)
+
+    @staticmethod
+    def _put(x, sh):
+        return x if sh is None else jax.device_put(x, sh)
+
+    def _place_params(self, params):
+        """Place every parameter leaf per the rule table (spec-mode init
+        mirrors the param pytree without materializing arrays)."""
+        if self.mesh is None:
+            return params
+        from jax.sharding import NamedSharding, PartitionSpec
+        from ..nn.module import spec_mode
+        with spec_mode(self.mesh, self.rules):
+            pspecs = lm.init_params(jax.random.key(0), self.cfg)
+        shardings = jax.tree.map(
+            lambda p: NamedSharding(self.mesh, p), pspecs,
+            is_leaf=lambda x: isinstance(x, PartitionSpec))
+        return jax.device_put(params, shardings)
+
+    def _cache_pspecs(self):
+        return lm.cache_pspecs(self.cfg, self.max_slots, self.max_len,
+                               self.mesh, self.rules, slotted=True,
+                               ring_slack=self.prefill_chunk - 1)
+
+    def _place_cache(self, cache):
+        """Give every cache leaf (K/V pools, pos tracks, block tables) its
+        ``cache_pspecs`` sharding: kv-heads over "model", slots over
+        "data", pages replicated per the serve tables."""
+        if self.mesh is None:
+            return cache
+        from jax.sharding import NamedSharding, PartitionSpec
+        shardings = jax.tree.map(
+            lambda p: NamedSharding(self.mesh, p), self._cache_pspecs(),
+            is_leaf=lambda x: isinstance(x, PartitionSpec))
+        return jax.device_put(cache, shardings)
 
     def _init_cache(self):
         # windowed rings get prefill_chunk-1 slack lines: a chunk's writes
@@ -542,7 +628,8 @@ class PagedServeEngine(ServeEngine):
                  batch_groups: int = 1, dtype=jnp.float32,
                  page_size: int = 16, num_pages: int | None = None,
                  spec_k: int = 0, spec_draft: NLDPEConfig | None = None,
-                 cache_generations: bool = True):
+                 cache_generations: bool = True,
+                 mesh=None, rules=None):
         if "local" in cfg.layer_pattern:
             raise NotImplementedError(
                 "paged KV cache needs non-windowed attention layers: ring "
@@ -569,27 +656,34 @@ class PagedServeEngine(ServeEngine):
         super().__init__(cfg, params, max_slots=max_slots, max_len=max_len,
                          nldpe=nldpe, prefill_chunk=prefill_chunk,
                          decode_block=decode_block, eos_id=eos_id,
-                         batch_groups=batch_groups, dtype=dtype)
-        self._setup_fn = jax.jit(self._build_setup_fn(), donate_argnums=(0,))
-        self._copy_fn = jax.jit(self._build_copy_fn(), donate_argnums=(0,))
+                         batch_groups=batch_groups, dtype=dtype,
+                         mesh=mesh, rules=rules)
+        self._setup_fn = jax.jit(self._ctx(self._build_setup_fn()),
+                                 donate_argnums=(0,))
+        self._copy_fn = jax.jit(self._ctx(self._build_copy_fn()),
+                                donate_argnums=(0,))
         if self.spec_k:
             # the drafter's weights: the target parameters round-tripped
             # through the 8-bit log grid (programmed conductances), cached
             # on device once — no second model to train or store.  Draft
             # and verify are two jits per step: two hardware units (analog
             # engine / digital verifier), and the boundary lets the engine
-            # meter the analog phase's wall share exactly.
-            self._draft_params = quantize_draft_params(params)
+            # meter the analog phase's wall share exactly.  Quantizing
+            # self.params (not the raw argument) keeps the drafter's
+            # weights on the engine's mesh placement.
+            self._draft_params = quantize_draft_params(self.params)
             self._draft_fn = jax.jit(
-                build_draft_scan_fn(cfg, self._draft_params,
-                                    spec_k=self.spec_k,
-                                    nldpe=self.spec_draft,
-                                    batch_groups=batch_groups),
+                self._ctx(build_draft_scan_fn(cfg, self._draft_params,
+                                              spec_k=self.spec_k,
+                                              nldpe=self.spec_draft,
+                                              batch_groups=batch_groups)),
                 donate_argnums=(0,))
             self._verify_fn = jax.jit(
-                build_verify_fn(cfg, params, spec_k=self.spec_k,
-                                nldpe=nldpe, batch_groups=batch_groups,
-                                eos_id=eos_id),
+                self._ctx(build_verify_fn(cfg, self.params,
+                                          spec_k=self.spec_k,
+                                          nldpe=nldpe,
+                                          batch_groups=batch_groups,
+                                          eos_id=eos_id)),
                 donate_argnums=(0, 1, 2, 3, 4))
             self._spec_steps = 0
             self._drafted = np.zeros((max_slots,), np.int64)
@@ -600,6 +694,14 @@ class PagedServeEngine(ServeEngine):
         return lm.init_model_cache(self.cfg, self.max_slots, self.max_len,
                                    dtype=self.dtype,
                                    paged=(self.num_pages, self.page_size))
+
+    def _cache_pspecs(self):
+        # page *contents* shard over kv-heads ("model"); the pages axis
+        # itself replicates under the serve tables (any slot must gather
+        # any page) and block tables / pos tracks follow "slots"
+        return lm.cache_pspecs(self.cfg, self.max_slots, self.max_len,
+                               self.mesh, self.rules,
+                               paged=(self.num_pages, self.page_size))
 
     @property
     def stats(self) -> dict:

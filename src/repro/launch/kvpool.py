@@ -40,6 +40,14 @@ append decode K/V into that last block — so it forks the boundary page
 of mutating the shared original.  Shared pages are therefore read-only by
 construction and no masking inside jit'd compute ever has to know about
 sharing.
+
+Mesh-sharded serving (DESIGN.md §9) does not fork this module: the pool
+allocates **global** page ids exactly as on one device, because the serve
+rule tables replicate the pages axis and shard page *contents* over
+kv-heads — every device holds the same page layout, each owning a head
+slice of every page.  Radix walks, COW forks, eviction, and refcounts are
+therefore mesh-oblivious, which is what makes the sharded engines'
+scheduling (and their stats) bit-identical to single-device serving.
 """
 from __future__ import annotations
 

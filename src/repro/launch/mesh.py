@@ -23,5 +23,20 @@ def make_mesh(shape: tuple, axes: tuple):
     return jax.make_mesh(shape, axes)
 
 
+def serve_mesh(dp: int, tp: int):
+    """The serving mesh shape: (dp, tp) over ("data", "model") — slots and
+    pos tracks shard over "data", heads/KV pools over "model" (DESIGN.md
+    §9).  Needs dp * tp visible devices; on a CPU-only host force them
+    with ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` *before*
+    the first jax import (the sharded test/bench subprocesses do)."""
+    if dp * tp > len(jax.devices()):
+        raise ValueError(
+            f"serve mesh ({dp}, {tp}) needs {dp * tp} devices, have "
+            f"{len(jax.devices())}; set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={dp * tp} "
+            f"before jax initializes (CPU), or shrink the mesh")
+    return jax.make_mesh((dp, tp), ("data", "model"))
+
+
 def single_device_mesh():
     return Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))

@@ -16,6 +16,20 @@ engine in ``launch/engine.py`` instead — ``--continuous`` below demos it,
 on a shared-system-prompt trace (DESIGN.md §7), and ``--paged --spec K``
 adds analog-draft speculative decoding (DESIGN.md §8).
 
+Mesh-sharded serving (``--mesh DP,TP``, DESIGN.md §9): both engine demos
+accept a mesh shape and serve tensor/data-parallel — heads and KV pools
+shard over the "model" axis, slots over "data", host-side scheduling
+stays global.  ``DP * TP`` must not exceed the process's device count; on
+a CPU-only host, fake the devices first::
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+      python -m repro.launch.serve --paged --spec 2 --mesh 2,4
+
+Outputs are bit-identical to the unsharded engine under the default
+``serve_exact`` rules (pass ``--mesh-rules serve`` / ``serve_dshard`` for
+the production psum-based tables, which trade that exactness back for
+lower collective volume).
+
 The CLI driver below runs a reduced config end-to-end (prefill a batch of
 prompts, then decode), optionally through the NL-DPE numerics mode.
 """
@@ -179,8 +193,22 @@ def run(argv=None):
                    help="KV-cache slots for --continuous/--paged")
     p.add_argument("--requests", type=int, default=12,
                    help="trace length for --continuous/--paged")
+    p.add_argument("--mesh", default=None, metavar="DP,TP",
+                   help="serve --continuous/--paged on a (data, model) "
+                        "mesh, e.g. 2,4 (needs DP*TP devices; see the "
+                        "module docstring for the CPU fake-device flag)")
+    p.add_argument("--mesh-rules", default=None,
+                   help="sharding rule table for --mesh (default "
+                        "serve_exact: bit-identical to unsharded; "
+                        "also: serve, serve_dshard, long)")
     p.add_argument("--seed", type=int, default=0)
     args = p.parse_args(argv)
+
+    mesh = None
+    if args.mesh:
+        from .mesh import serve_mesh
+        dp, tp = (int(x) for x in args.mesh.split(","))
+        mesh = serve_mesh(dp, tp)
 
     cfg = get_config(args.arch, reduced=True)
     nldpe = NLDPEConfig(enabled=args.nldpe or args.fused,
@@ -213,13 +241,16 @@ def run(argv=None):
                                max_len=max_len, nldpe=nldpe,
                                page_size=args.page_size,
                                num_pages=args.num_pages, spec_k=args.spec,
-                               spec_draft=spec_draft)
+                               spec_draft=spec_draft, mesh=mesh,
+                               rules=args.mesh_rules)
         t0 = time.time()
         comps = eng.run(reqs)
         dt = time.time() - t0
         n_tok = sum(len(c.tokens) for c in comps)
         st = eng.stats
         mode = f", spec_k={args.spec}" if args.spec else ""
+        if mesh is not None:
+            mode += f", mesh {args.mesh} [{eng.rules.name}]"
         print(f"[serve] paged: {len(comps)} requests, {n_tok} tokens in "
               f"{dt * 1e3:.0f} ms ({n_tok / max(dt, 1e-9):.1f} tok/s, "
               f"{args.slots} slots, {eng.pool.num_pages} pages x "
@@ -253,7 +284,7 @@ def run(argv=None):
                         arrival=int(rng.poisson(2) * i))
                 for i in range(args.requests)]
         eng = ServeEngine(cfg, params, max_slots=args.slots, max_len=max_len,
-                          nldpe=nldpe)
+                          nldpe=nldpe, mesh=mesh, rules=args.mesh_rules)
         t0 = time.time()
         comps = eng.run(reqs)
         dt = time.time() - t0

@@ -40,6 +40,15 @@ Per spec step a slot emits between 1 (draft rejected immediately: the
 correction token) and ``k+1`` (all drafts accepted + the bonus token)
 tokens; the acceptance rate is the analog-fidelity signal — the software
 mirror of the paper's Fig 14 device-noise correlation.
+
+Mesh-sharded serving (DESIGN.md §9): the engine traces the draft scan and
+the verify pass under its sharding context, so both phases shard exactly
+like plain decode — drafter weights follow the target params' placement
+(``PagedServeEngine`` quantizes the *placed* params), heads over "model",
+slots over "data".  Under the exact rule tables the draft tokens, accept
+draws, and rollback clips are all bit-identical to single-device, which
+is why the sharded differential matrix can assert acceptance-counter
+equality, not just token equality.
 """
 from __future__ import annotations
 

@@ -215,9 +215,11 @@ def init_model_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16,
 
 
 def cache_pspecs(cfg, batch: int, max_len: int, mesh, rules,
-                 slotted: bool = False,
+                 slotted: bool = False, ring_slack: int = 0,
                  paged: tuple[int, int] | None = None):
-    """PartitionSpec pytree mirroring init_model_cache (for dry-run jit)."""
+    """PartitionSpec pytree mirroring init_model_cache (dry-run jit and the
+    serve engines' mesh placement); ``ring_slack`` must match the value
+    given to init_model_cache so windowed-ring leaf shapes line up."""
     from jax.sharding import PartitionSpec as P
 
     from ..parallel.sharding import resolve
@@ -228,7 +230,7 @@ def cache_pspecs(cfg, batch: int, max_len: int, mesh, rules,
             from ..nn.attention import cache_specs
             return cache_specs(s, batch, max_len, mesh, rules, paged=paged,
                                quantized=cfg.kv_cache_dtype == "int8")
-        length = min(max_len, s.window) if s.window else max_len
+        length = min(max_len, s.window + ring_slack) if s.window else max_len
         kv_shape = (batch, s.n_kv_heads, length, s.head_dim)
         model_size = mesh.shape.get("model", 1) if mesh is not None else 1
         if mesh is not None and s.n_kv_heads % model_size == 0:

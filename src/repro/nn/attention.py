@@ -58,8 +58,11 @@ def attn_init(key, s: AttnSpec):
                      ("embed", "kv_heads", None)),
         "wv": _param(kv, (s.d_model, s.n_kv_heads, s.head_dim),
                      ("embed", "kv_heads", None)),
+        # "o_heads", not "heads": this is the output projection's
+        # *contraction* dim — rule tables that must stay bit-exact under
+        # sharding replicate it (parallel/sharding.INEXACT_AXES)
         "wo": _param(ko, (s.n_heads, s.head_dim, s.d_model),
-                     ("heads", None, "embed"),
+                     ("o_heads", None, "embed"),
                      scale=(s.n_heads * s.head_dim) ** -0.5),
     }
     if s.qkv_bias:
@@ -502,6 +505,22 @@ def _update_cache_paged(cache, k_new, v_new, pos: jax.Array, write_mask=None):
     return out
 
 
+def _paged_kernel_dispatch(cache, q: jax.Array, lengths: jax.Array):
+    """Route the NLDPE_PAGED_KERNEL opt-in through the Pallas kernel —
+    per-shard under ``shard_map`` when an ambient sharding context is
+    installed (GSPMD cannot partition a ``pallas_call``), plain otherwise.
+    ``q`` is (B, Hq, D) decode or (B, Hq, Q, D) chunk/verify queries."""
+    from ..kernels.paged_attention.ops import (paged_attention,
+                                               paged_attention_sharded)
+    from ..parallel.context import current as _sharding_context
+    ctx = _sharding_context()
+    if ctx is not None:
+        mesh, rules = ctx
+        return paged_attention_sharded(q, cache["k"], cache["v"],
+                                       cache["bt"], lengths, mesh, rules)
+    return paged_attention(q, cache["k"], cache["v"], cache["bt"], lengths)
+
+
 def cache_valid_mask(kp: jax.Array, q_pos: jax.Array, window: int | None):
     """Which cache lines each query may attend to.
 
@@ -594,11 +613,13 @@ def attn_apply(p, s: AttnSpec, x: jax.Array, *, positions: jax.Array,
             # the dense view.  Matches the dense path within float
             # tolerance, not bitwise — hence the explicit switch; engine
             # caches are contiguous, so valid lanes are [0, pos] per slot.
-            from ..kernels.paged_attention.ops import paged_attention
-            o = paged_attention(q[:, :, 0], cache["k"], cache["v"],
-                                cache["bt"],
-                                pos.astype(jnp.int32) + 1)[:, :, None]
+            # Under an ambient mesh the kernel dispatches per-shard via
+            # shard_map (GSPMD cannot partition a pallas_call), block
+            # table replicated across the model axis (DESIGN.md §9).
+            o = _paged_kernel_dispatch(cache, q[:, :, 0],
+                                       pos.astype(jnp.int32) + 1)[:, :, None]
             o = shard(o, "batch", "heads", None, None)
+            o = shard(o, "batch", "o_heads", None, None)
             y = jnp.einsum("bhsk,hkd->bsd", o, p["wo"].astype(o.dtype))
             return shard(y, "batch", None, "act_embed"), cache
         # paged caches attend through the gathered dense view: bit-identical
@@ -633,13 +654,13 @@ def attn_apply(p, s: AttnSpec, x: jax.Array, *, positions: jax.Array,
             # speculative verify pass both write the chunk's K/V first),
             # so query i of slot b attends to [0, qpos[b, 0] + i] — the
             # kernel's ragged staircase with base lengths = qpos[:, 0]+1.
-            # Same float-tolerance caveat as the decode opt-in below.
-            from ..kernels.paged_attention.ops import paged_attention
+            # Same float-tolerance and shard_map notes as the decode
+            # opt-in below.
             lengths = jnp.clip(qpos[:, 0].astype(jnp.int32) + 1, 1,
                                cache["pos"].shape[1])
-            o = paged_attention(q, cache["k"], cache["v"], cache["bt"],
-                                lengths)
+            o = _paged_kernel_dispatch(cache, q, lengths)
             o = shard(o, "batch", "heads", None, None)
+            o = shard(o, "batch", "o_heads", None, None)
             y = jnp.einsum("bhsk,hkd->bsd", o, p["wo"].astype(o.dtype))
             return shard(y, "batch", None, "act_embed"), cache
         att = paged_dense_view(cache) if "bt" in cache else cache
@@ -696,5 +717,10 @@ def attn_apply(p, s: AttnSpec, x: jax.Array, *, positions: jax.Array,
             cache = new
 
     o = shard(o, "batch", "heads", None, None)
+    # contraction boundary: exact serving tables map "o_heads" to None so
+    # the head shards all-gather (concatenation — bit-exact) BEFORE the
+    # output projection; train tables keep "model" and psum partials as
+    # before.  See nn/mlp.py for the same pattern on the down-projection.
+    o = shard(o, "batch", "o_heads", None, None)
     y = jnp.einsum("bhsk,hkd->bsd", o, p["wo"].astype(o.dtype))
     return shard(y, "batch", None, "act_embed"), cache

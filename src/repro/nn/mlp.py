@@ -11,8 +11,10 @@ from .module import param
 
 def mlp_init(key, d_model: int, d_ff: int, gated: bool = True):
     k1, k2, k3 = jax.random.split(key, 3)
+    # the down-projection's d_ff dim is a contraction ("mlp_in"): exact
+    # serving rule tables replicate it (parallel/sharding.INEXACT_AXES)
     p = {"up": param(k1, (d_model, d_ff), ("embed", "mlp")),
-         "down": param(k3, (d_ff, d_model), ("mlp", "embed"))}
+         "down": param(k3, (d_ff, d_model), ("mlp_in", "embed"))}
     if gated:
         p["gate"] = param(k2, (d_model, d_ff), ("embed", "mlp"))
     return p
@@ -31,5 +33,12 @@ def mlp_apply(p, x: jax.Array, act: str = "silu",
     else:
         h = nldpe.linear_activation(x, p["up"], act)
         h = shard(h, "batch", None, "mlp")
+    # contraction boundary: the "mlp_in" constraint decides how the sharded
+    # d_ff axis combines.  Exact serving tables map it to None, forcing an
+    # all-gather (concatenation — bit-exact) BEFORE the down-projection;
+    # train tables keep it on "model", so partials psum exactly as before.
+    # Without this, GSPMD is free to pick partial-sum + all-reduce, whose
+    # float-addition order differs from the single-device contraction.
+    h = shard(h, "batch", None, "mlp_in")
     y = h.astype(x.dtype) @ p["down"].astype(x.dtype)
     return shard(y, "batch", None, "act_embed")

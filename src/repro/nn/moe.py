@@ -53,7 +53,7 @@ def moe_init(key, d_model: int, s: MoESpec):
         "up": param(k2, (s.n_experts, d_model, s.d_expert_ff),
                     ("experts", "embed", "mlp")),
         "down": param(k3, (s.n_experts, s.d_expert_ff, d_model),
-                      ("experts", "mlp", "embed")),
+                      ("experts", "mlp_in", "embed")),
     }
 
 
@@ -109,6 +109,11 @@ def moe_apply(p, x: jax.Array, s: MoESpec, act: str = "silu",
     hg = jnp.einsum("gecd,edf->gecf", buf, p["gate"].astype(x.dtype))
     hu = jnp.einsum("gecd,edf->gecf", buf, p["up"].astype(x.dtype))
     h = nldpe.elementwise_mul(nldpe.activation(hg, act), hu).astype(x.dtype)
+    # contraction boundary (same pattern as nn/mlp.py): exact serving
+    # tables map "mlp_in" to None, all-gathering the f shards BEFORE the
+    # down-projection so the contraction is bit-exact; train tables keep
+    # "model" and psum partials as before
+    h = shard(h, "expert_group", None, None, "mlp_in")
     y = jnp.einsum("gecf,efd->gecd", h, p["down"].astype(x.dtype))
     y = shard(y, "expert_group", None, None, None)
 

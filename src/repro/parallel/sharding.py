@@ -14,6 +14,18 @@ Rule sets:
   SERVE  — TP(model) weights, DP(data) batch; KV cache kv-head-sharded when
            divisible, else sequence-sharded (context parallelism).
   LONG   — batch=1 decode: KV sequence sharded over (data, model).
+  SERVE_EXACT — the serving rules with every *contraction-dimension*
+           mapping dropped (``exact``): sharded outputs combine only by
+           concatenation (all-gather), never by partial-sum all-reduce, so
+           sharded serving is bit-identical to single-device serving
+           (DESIGN.md §9).  This is what the serve engines default to.
+
+Logical names distinguish a weight's output dims from its contraction
+dims: "heads"/"mlp" tag dims along which shards produce disjoint output
+slices (exact under any mapping), while "o_heads"/"mlp_in" tag the
+contraction dims of the attention output projection and the MLP
+down-projection — sharding those makes every device hold a *partial* sum
+that an all-reduce must combine, which reorders float addition.
 """
 from __future__ import annotations
 
@@ -111,7 +123,9 @@ def train_rules(multi_pod: bool = False) -> Rules:
         "batch": batch,
         "embed": "data",          # FSDP shard of the d_model dim of weights
         "mlp": "model",
+        "mlp_in": "model",        # down-proj contraction: partials psum (TP)
         "heads": "model",
+        "o_heads": "model",       # wo contraction: same TP psum as megatron
         "kv_heads": "model",
         "vocab": "model",
         "experts": None,
@@ -132,7 +146,9 @@ def serve_rules(multi_pod: bool = False) -> Rules:
                                   # already carries the TP split of the pool
         "embed": None,            # weights replicated across data (TP-only)
         "mlp": "model",
+        "mlp_in": "model",
         "heads": "model",
+        "o_heads": "model",
         "kv_heads": "model",
         "vocab": "model",
         "experts": None,
@@ -165,7 +181,9 @@ def train_fsdp_rules(multi_pod: bool = False) -> Rules:
         "batch": batch,
         "embed": "data",
         "mlp": "model",
+        "mlp_in": "model",
         "heads": "model",
+        "o_heads": "model",
         "kv_heads": "model",
         "vocab": "model",         # table (vocab, d) shards fully; only the
                                   # logits' vocab dim falls back (batch owns
@@ -191,7 +209,9 @@ def serve_dshard_rules(multi_pod: bool = False) -> Rules:
         "pages": None,
         "embed": "model",
         "mlp": None,
+        "mlp_in": None,
         "heads": None,
+        "o_heads": None,
         "kv_heads": None,
         "vocab": None,
         "experts": None,
@@ -202,7 +222,41 @@ def serve_dshard_rules(multi_pod: bool = False) -> Rules:
     })
 
 
+# Logical axes whose sharding splits a *contraction* (or a later reduction
+# over that axis): each shard then holds a partial sum and the cross-shard
+# combine is a float all-reduce, whose addition order differs from the
+# single-device contraction.  Everything else shards batch or output dims,
+# where the cross-shard combine is concatenation — exact.
+INEXACT_AXES = ("o_heads", "mlp_in", "embed", "kv_seq", "vocab", "seq",
+                "act_embed")
+
+
+def exact(rules: Rules) -> Rules:
+    """Derive the bit-exact variant of a rule table: drop every mapping
+    that would shard a contraction dimension.  Per-shard compute then
+    evaluates exactly the slice of the single-device computation it owns
+    (row/head/page-independent float ops), and shards only ever combine by
+    all-gather — so sharded outputs are bit-identical to single-device
+    outputs (the serve engines' numerics contract, DESIGN.md §9).
+
+    Note ``exact(serve_dshard_rules())`` degenerates to data-parallel-only:
+    that table carries its whole TP split on the d_model contraction."""
+    table = dict(rules.table)
+    for ax in INEXACT_AXES:
+        if ax in table:
+            table[ax] = None
+    return Rules(f"{rules.name}_exact", table)
+
+
+def serve_exact_rules(multi_pod: bool = False) -> Rules:
+    """The serve engines' default: TP(model) over heads/kv-heads/ffn output
+    dims, DP(data) over slots, contraction dims replicated -> sharded
+    serving bit-identical to single-device serving."""
+    return exact(serve_rules(multi_pod))
+
+
 def rules_for(mode: str, multi_pod: bool) -> Rules:
     return {"train": train_rules, "serve": serve_rules, "long": long_rules,
             "train_fsdp": train_fsdp_rules,
-            "serve_dshard": serve_dshard_rules}[mode](multi_pod)
+            "serve_dshard": serve_dshard_rules,
+            "serve_exact": serve_exact_rules}[mode](multi_pod)

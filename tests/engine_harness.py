@@ -2,16 +2,24 @@
 
 One place owns the reduced model, the lazily-built engines (jit compiles
 amortized across hypothesis examples — the PR 2/PR 3 property files each
-used to carry a private copy of this), the run-alone lockstep oracle, and
-the hypothesis strategies for random Poisson traces: tiny token alphabet
+used to carry a private copy of this), the run-alone lockstep oracle, the
+seeded np.random trace generators (the always-run mirrors of the
+hypothesis strategies — hypothesis is an optional dev dep), and the
+hypothesis strategies for random Poisson traces: tiny token alphabet
 (dense prefix collisions -> radix hits, COW forks), mixed
 greedy/temperature/top-k sampling, staggered arrivals, zero-headroom page
 pools (constant LRU eviction pressure).
 
+Engines take a ``mesh_shape`` axis: ``(dp, tp)`` builds a
+``("data", "model")`` mesh over the first ``dp * tp`` host devices and
+serves sharded (slots over "data", heads over "model" — ISSUE 5).  The
+process must expose enough devices
+(``XLA_FLAGS=--xla_force_host_platform_device_count=8``, set by the
+subprocess drivers in tests/test_engine_sharded.py).
+
 tests/test_engine_differential.py drives the full engine matrix through
-it; tests/test_engine_properties.py and
-tests/test_paged_engine_properties.py keep only their distinctive
-assertions on top.
+it; tests/test_engine_properties.py, tests/test_paged_engine_properties.py
+and tests/sharded_driver.py keep only their distinctive assertions on top.
 """
 import jax
 import jax.numpy as jnp
@@ -20,6 +28,7 @@ import numpy as np
 from repro.configs import get_config
 from repro.core.engine import NLDPEConfig
 from repro.launch.engine import PagedServeEngine, Request, ServeEngine
+from repro.launch.mesh import serve_mesh
 from repro.launch.serve import build_decode_step, python_loop_decode
 from repro.models import lm
 from repro.nn.module import param_dtype
@@ -54,23 +63,38 @@ def engine_kwargs(**over):
     return kw
 
 
-def slotted_engine() -> ServeEngine:
-    if "slotted" not in _STATE:
-        _STATE["slotted"] = ServeEngine(CFG, shared_params(),
-                                        **engine_kwargs())
-    return _STATE["slotted"]
+def mesh_for(mesh_shape):
+    """(dp, tp) -> the serving mesh over the first dp*tp devices (cached;
+    raises with the fake-device hint when the process is short — the
+    sharded suites run in subprocesses that force 8)."""
+    if mesh_shape is None:
+        return None
+    key = ("mesh", tuple(mesh_shape))
+    if key not in _STATE:
+        _STATE[key] = serve_mesh(*mesh_shape)
+    return _STATE[key]
 
 
-def paged_engine(spec_k: int = 0, **over) -> PagedServeEngine:
-    """Module-level singletons per spec_k (compile cache); the carried
-    radix index must be invisible in outputs — carried cache can only turn
-    misses into hits, never change tokens."""
-    key = ("paged", spec_k, tuple(sorted(over.items())))
+def slotted_engine(mesh_shape=None) -> ServeEngine:
+    key = ("slotted", None if mesh_shape is None else tuple(mesh_shape))
+    if key not in _STATE:
+        _STATE[key] = ServeEngine(CFG, shared_params(), **engine_kwargs(),
+                                  mesh=mesh_for(mesh_shape))
+    return _STATE[key]
+
+
+def paged_engine(spec_k: int = 0, mesh_shape=None, **over) -> PagedServeEngine:
+    """Module-level singletons per (spec_k, mesh_shape) (compile cache);
+    the carried radix index must be invisible in outputs — carried cache
+    can only turn misses into hits, never change tokens."""
+    key = ("paged", spec_k, None if mesh_shape is None else tuple(mesh_shape),
+           tuple(sorted(over.items())))
     if key not in _STATE:
         kw = engine_kwargs(page_size=PAGE, num_pages=NUM_PAGES, **over)
         if spec_k:
             kw.update(spec_k=spec_k, spec_draft=WQ_DRAFT)
-        _STATE[key] = PagedServeEngine(CFG, shared_params(), **kw)
+        _STATE[key] = PagedServeEngine(CFG, shared_params(), **kw,
+                                       mesh=mesh_for(mesh_shape))
     return _STATE[key]
 
 
@@ -119,6 +143,49 @@ def audit(paged: PagedServeEngine) -> None:
     paged.pool.check()
     assert paged.pool.available() == paged.pool.num_pages, \
         "page leak: rejected speculative pages must return to the pool"
+
+
+# ---------------------------------------------------------------------------
+# seeded np.random trace generators — the always-run mirrors of the
+# hypothesis strategies below (hypothesis is an optional dev dep: on hosts
+# without it, importorskip'd suites silently skip, so every
+# acceptance-critical property must also run from these)
+# ---------------------------------------------------------------------------
+
+def random_greedy_trace(rng):
+    """Tiny-alphabet Poisson trace: greedy requests only."""
+    n = int(rng.integers(1, 6))
+    return [(tuple(int(x) for x in rng.integers(0, 3,
+                                                int(rng.integers(1, 11)))),
+             int(rng.integers(1, 7)), int(rng.integers(0, 9)))
+            for _ in range(n)]
+
+
+def random_mixed_trace(rng):
+    """Mixed sampling: greedy, temperature, temperature+top-k (top_k
+    includes 0 = disabled and >= vocab_size = explicitly disabled)."""
+    temps = [0.0, 0.0, 0.7, 1.3]
+    topks = [0, 1, 3, CFG.vocab_size + 7]
+    n = int(rng.integers(1, 6))
+    return [(tuple(int(x) for x in rng.integers(0, 3,
+                                                int(rng.integers(1, 11)))),
+             int(rng.integers(1, 6)), int(rng.integers(0, 7)),
+             temps[int(rng.integers(0, 4))], topks[int(rng.integers(0, 4))])
+            for _ in range(n)]
+
+
+def shared_prefix_cow_trace(seed: int = 17):
+    """Deterministic acceptance trace: repeated identical prompts (COW
+    forks), page-multiple prompt lengths, and enough distinct long prompts
+    to force eviction in the zero-headroom pool."""
+    rng = np.random.default_rng(seed)
+    shared = tuple(int(x) for x in rng.integers(0, CFG.vocab_size, 2 * PAGE))
+    return [(shared, 4, 0),                        # publishes both pages
+            (shared, 4, 3),                        # full-prompt hit -> COW
+            (shared + (1, 2), 3, 2),               # prefix hit + suffix
+            (tuple(int(x) for x in rng.integers(0, 64, 11)), 5, 1),
+            (shared, 2, 1),                        # hit after eviction churn
+            (tuple(int(x) for x in rng.integers(0, 64, 9)), 4, 0)]
 
 
 def make_strategies():

@@ -1,0 +1,116 @@
+"""Sharded differential driver — run in a subprocess with forced devices.
+
+``tests/test_engine_sharded.py`` launches this with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the main pytest
+process never changes its own device count) and a JSON cell spec:
+
+    {"meshes": [[2, 1], [1, 2]],     # (dp, tp) mesh shapes to test
+     "engines": ["paged"],           # "paged" and/or "slotted"
+     "spec_ks": [0, 2],              # speculative depths (paged only)
+     "traces": ["greedy", "cow"],    # greedy | mixed | cow
+     "seeds": [0],                   # np.random seeds for random traces
+     "numerics": "off"}              # off | fused
+
+For every (engine, spec_k, trace) cell it serves the trace once on a
+mesh=None engine and once per mesh shape, asserting
+
+* token-for-token identical outputs (the DESIGN.md §9 exactness contract:
+  under the default serve_exact rules, sharded combine points are
+  all-gathers, so per-shard float ops are exactly the single-device ones),
+* identical pool/spec stats deltas (hits, cow_forks, prefill tokens
+  saved, evictions, drafted/accepted — host-side scheduling is global and
+  must be oblivious to the mesh),
+* post-trace page-leak audits on every paged engine.
+
+Engines are the ``engine_harness`` singletons, so the mesh=None baseline
+and every mesh cell see the *same* history of carried radix state.
+Prints SHARDED-OK when every cell passed.
+"""
+import json
+import sys
+
+
+def _build_traces(spec):
+    import numpy as np
+
+    import engine_harness as H
+
+    traces = []
+    for kind in spec.get("traces", ["greedy"]):
+        if kind == "cow":
+            traces.append(("cow", H.shared_prefix_cow_trace()))
+            continue
+        gen = (H.random_mixed_trace if kind == "mixed"
+               else H.random_greedy_trace)
+        for seed in spec.get("seeds", [0]):
+            traces.append((f"{kind}{seed}",
+                           gen(np.random.default_rng(seed))))
+    return traces
+
+
+def _engine(H, kind, spec_k, mesh_shape, over):
+    if kind == "slotted":
+        return H.slotted_engine(mesh_shape=mesh_shape)
+    return H.paged_engine(spec_k=spec_k, mesh_shape=mesh_shape, **over)
+
+
+def _stats(eng):
+    st = dict(eng.stats) if hasattr(eng, "stats") else {}
+    if getattr(eng, "spec_k", 0):
+        sp = eng.spec_stats
+        st.update(drafted=sp["drafted"], accepted=sp["accepted"])
+    st.pop("spec_k", None)
+    return st
+
+
+def _delta(before, after):
+    return {k: after[k] - before[k] for k in after
+            if isinstance(after[k], (int, float))}
+
+
+def main(argv) -> int:
+    spec = json.loads(argv[1])
+
+    import engine_harness as H
+
+    over = {}
+    if spec.get("numerics") == "fused":
+        from repro.core.engine import NLDPEConfig
+        over["nldpe"] = NLDPEConfig(enabled=True, fused_dual_compute=True)
+
+    traces = _build_traces(spec)
+    meshes = [tuple(m) for m in spec["meshes"]]
+    cells = 0
+    for kind in spec.get("engines", ["paged"]):
+        for spec_k in spec.get("spec_ks", [0]):
+            if kind == "slotted" and spec_k:
+                continue
+            for tname, trace in traces:
+                base = _engine(H, kind, spec_k, None, over)
+                b0 = _stats(base)
+                want = H.run_trace(base, trace)
+                base_delta = _delta(b0, _stats(base))
+                if kind == "paged":
+                    H.audit(base)
+                for ms in meshes:
+                    eng = _engine(H, kind, spec_k, ms, over)
+                    s0 = _stats(eng)
+                    got = H.run_trace(eng, trace)
+                    cell = f"{kind}/spec{spec_k}/{tname}/mesh{ms}"
+                    assert got == want, (
+                        f"{cell}: sharded output diverged from the "
+                        f"single-device engine\n  want {want}\n  got {got}")
+                    mesh_delta = _delta(s0, _stats(eng))
+                    assert mesh_delta == base_delta, (
+                        f"{cell}: host-side stats diverged "
+                        f"(mesh {mesh_delta} vs single {base_delta})")
+                    if kind == "paged":
+                        H.audit(eng)
+                    cells += 1
+                    print(f"ok {cell}", flush=True)
+    print(f"SHARDED-OK ({cells} cells)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

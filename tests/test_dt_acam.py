@@ -1,9 +1,13 @@
-"""DT builder + ACAM evaluation: the paper's §III-C claims as tests."""
+"""DT builder + ACAM evaluation: the paper's §III-C claims as tests.
+
+A module-level ``importorskip("hypothesis")`` used to silently skip this
+*whole file* — including the plain Table-I structure tests — on hosts
+without the optional dep (ISSUE 5): the former @given variants now run
+exhaustively (bit widths) or from a seeded grid (pointwise quant match).
+"""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-pytest.importorskip("hypothesis")  # optional dev dep; degrade, don't error
-from hypothesis import given, settings, strategies as st
 
 from repro.core import acam, dt
 from repro.core.functions import FUNCTIONS, TABLE1_FUNCTIONS
@@ -79,19 +83,19 @@ def test_acam_activation_model_op():
     assert float(np.max(np.abs(np.asarray(y) - ref))) < 4 * t.out_spec.step
 
 
-@given(st.integers(min_value=4, max_value=9))
-@settings(max_examples=6, deadline=None)
+@pytest.mark.parametrize("bits", range(4, 10))
 def test_rows_scale_with_bits(bits):
     t = dt.build_table("sigmoid", bits=bits, encoding="gray")
     assert t.total_rows == 2 ** (bits - 1)
 
 
-@given(st.floats(min_value=-7.9, max_value=7.9))
-@settings(max_examples=50, deadline=None)
-def test_acam_matches_quant_pointwise(x):
+def test_acam_matches_quant_pointwise():
     t = acam.get_table("tanh")
-    y = acam.eval_table_np(t, np.asarray([x]))[0]
     spec = t.out_spec
-    target = spec.dequantize(np.clip(np.round((np.tanh(x) - spec.lo) / spec.step),
-                                     0, spec.levels - 1))
-    assert abs(y - target) < spec.step * 1.5
+    xs = np.random.default_rng(6).uniform(-7.9, 7.9, 256)
+    for x in xs:
+        y = acam.eval_table_np(t, np.asarray([x]))[0]
+        target = spec.dequantize(np.clip(
+            np.round((np.tanh(x) - spec.lo) / spec.step), 0,
+            spec.levels - 1))
+        assert abs(y - target) < spec.step * 1.5, x

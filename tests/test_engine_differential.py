@@ -51,23 +51,10 @@ def ENGINES():
             (f"spec{k}", H.paged_engine(spec_k=k)) for k in SPEC_KS]
 
 
-def random_greedy_trace(rng):
-    n = int(rng.integers(1, 6))
-    return [(tuple(int(x) for x in rng.integers(0, 3,
-                                                int(rng.integers(1, 11)))),
-             int(rng.integers(1, 7)), int(rng.integers(0, 9)))
-            for _ in range(n)]
-
-
-def random_mixed_trace(rng):
-    temps = [0.0, 0.0, 0.7, 1.3]
-    topks = [0, 1, 3, H.CFG.vocab_size + 7]
-    n = int(rng.integers(1, 6))
-    return [(tuple(int(x) for x in rng.integers(0, 3,
-                                                int(rng.integers(1, 11)))),
-             int(rng.integers(1, 6)), int(rng.integers(0, 7)),
-             temps[int(rng.integers(0, 4))], topks[int(rng.integers(0, 4))])
-            for _ in range(n)]
+# seeded trace generators live in engine_harness (shared with the sharded
+# differential driver, tests/sharded_driver.py)
+random_greedy_trace = H.random_greedy_trace
+random_mixed_trace = H.random_mixed_trace
 
 
 # ---------------------------------------------------------------------------
@@ -132,15 +119,7 @@ def test_shared_prefix_cow_eviction_trace():
     prompts to force eviction in the zero-headroom pool — spec output must
     stay bit-equal to non-spec paged at every tested depth, with no page
     leaks."""
-    rng = np.random.default_rng(17)
-    shared = tuple(int(x) for x in rng.integers(0, H.CFG.vocab_size,
-                                                2 * H.PAGE))
-    trace = [(shared, 4, 0),                       # publishes both pages
-             (shared, 4, 3),                       # full-prompt hit -> COW
-             (shared + (1, 2), 3, 2),              # prefix hit + suffix
-             (tuple(int(x) for x in rng.integers(0, 64, 11)), 5, 1),
-             (shared, 2, 1),                       # hit after eviction churn
-             (tuple(int(x) for x in rng.integers(0, 64, 9)), 4, 0)]
+    trace = H.shared_prefix_cow_trace()
     base = H.paged_engine()
     out_base = H.run_trace(base, trace)
     H.audit(base)

@@ -1,4 +1,4 @@
-"""Hypothesis properties for the continuous-batching scheduler.
+"""Properties of the continuous-batching scheduler (seeded + hypothesis).
 
 Random arrival/length traces through the slot scheduler must be
 indistinguishable, per request, from running each request alone through the
@@ -6,25 +6,35 @@ seed ``python_loop_decode`` path: order-independence and zero cross-slot
 leakage, whatever admission order, slot reuse, or eviction pattern the
 trace induces.
 
-The trace machinery (engines, run-alone oracle, strategies) lives in
-``tests/engine_harness.py``, shared with the cross-engine differential
-suite (tests/test_engine_differential.py) — this file keeps only the
-slotted-engine-specific properties.
-"""
-import pytest
+The seeded ``np.random`` variants below always run — hypothesis is an
+optional dev dep, and an ``importorskip`` at module level used to silence
+this whole file on hosts without it (ISSUE 5: tier-1 was weaker than CI).
+When hypothesis IS present, the ``@given`` variants fuzz the same checkers
+with minimized counterexamples.
 
-pytest.importorskip("hypothesis")  # optional dev dep; degrade, don't error
-from hypothesis import given, settings
+The trace machinery (engines, run-alone oracle, seeded generators,
+strategies) lives in ``tests/engine_harness.py``, shared with the
+cross-engine differential suite (tests/test_engine_differential.py) —
+this file keeps only the slotted-engine-specific properties.
+"""
+import numpy as np
+import pytest
 
 import engine_harness as H
 from repro.launch.engine import Request
 
-GREEDY_TRACES, _ = H.make_strategies()
+try:
+    from hypothesis import given, settings
+    HAVE_HYPOTHESIS = True
+except ImportError:                     # optional dev dep; degrade
+    HAVE_HYPOTHESIS = False
 
 
-@given(GREEDY_TRACES)
-@settings(max_examples=8, deadline=None)
-def test_trace_outputs_equal_run_alone(trace):
+# ---------------------------------------------------------------------------
+# the property checkers (shared by the seeded and the hypothesis variants)
+# ---------------------------------------------------------------------------
+
+def check_trace_outputs_equal_run_alone(trace):
     eng = H.slotted_engine()
     out = H.run_trace(eng, trace)
     assert eng.free_slots == eng.max_slots          # everything evicted
@@ -33,9 +43,7 @@ def test_trace_outputs_equal_run_alone(trace):
             f"rid {rid}: cross-slot contamination or order dependence"
 
 
-@given(GREEDY_TRACES)
-@settings(max_examples=6, deadline=None)
-def test_submission_order_is_irrelevant_for_outputs(trace):
+def check_submission_order_is_irrelevant(trace):
     """Same requests, all arriving at once, admitted in two different
     orders: identical per-request outputs (slot assignment is invisible)."""
     eng = H.slotted_engine()
@@ -48,3 +56,37 @@ def test_submission_order_is_irrelevant_for_outputs(trace):
                 for r in reversed(base)]
     out_b = {c.rid: c.tokens for c in eng.run(shuffled)}
     assert out_a == out_b
+
+
+# ---------------------------------------------------------------------------
+# seeded variants: run everywhere, hypothesis installed or not
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [20, 21])
+def test_trace_outputs_equal_run_alone_seeded(seed):
+    check_trace_outputs_equal_run_alone(
+        H.random_greedy_trace(np.random.default_rng(seed)))
+
+
+@pytest.mark.parametrize("seed", [23])
+def test_submission_order_is_irrelevant_seeded(seed):
+    check_submission_order_is_irrelevant(
+        H.random_greedy_trace(np.random.default_rng(seed)))
+
+
+# ---------------------------------------------------------------------------
+# hypothesis variants: extra depth when the optional dep is present
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    GREEDY_TRACES, _ = H.make_strategies()
+
+    @given(GREEDY_TRACES)
+    @settings(max_examples=8, deadline=None)
+    def test_trace_outputs_equal_run_alone(trace):
+        check_trace_outputs_equal_run_alone(trace)
+
+    @given(GREEDY_TRACES)
+    @settings(max_examples=6, deadline=None)
+    def test_submission_order_is_irrelevant_for_outputs(trace):
+        check_submission_order_is_irrelevant(trace)

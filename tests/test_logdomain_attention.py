@@ -1,10 +1,14 @@
-"""Log-domain DMMul/Softmax (Fig 6) + NL-DPE attention numerics."""
+"""Log-domain DMMul/Softmax (Fig 6) + NL-DPE attention numerics.
+
+A module-level ``importorskip("hypothesis")`` used to silently skip this
+*whole file* — the Fig 6 numerics claims included — on hosts without the
+optional dep (ISSUE 5): the seeded grid mirror of the mul error bound
+always runs; the hypothesis variant stays as a CI extra.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-pytest.importorskip("hypothesis")  # optional dev dep; degrade, don't error
-from hypothesis import given, settings, strategies as st
 
 from repro.core import attention as att
 from repro.core import logdomain as ld
@@ -95,11 +99,28 @@ def test_nldpe_attention_respects_causality():
                                np.asarray(o2[:, :, :5]), atol=1e-4)
 
 
-@given(st.floats(-0.99, 0.99), st.floats(-0.99, 0.99))
-@settings(max_examples=60, deadline=None)
-def test_mul_relative_error_bound(a, b):
+def check_mul_relative_error_bound(a, b):
     y = float(ld.nldpe_mul(jnp.float32(a), jnp.float32(b), CFG_UNIT, mode="fused"))
     ab = a * b
     step = CFG_UNIT.mag_spec.step
     tol = abs(ab) * (np.exp(step) - 1) + 2e-4  # two half-step log errors
-    assert abs(y - ab) <= tol + 1e-6
+    assert abs(y - ab) <= tol + 1e-6, (a, b)
+
+
+def test_mul_relative_error_bound_seeded():
+    rng = np.random.default_rng(7)
+    for a, b in rng.uniform(-0.99, 0.99, (60, 2)):
+        check_mul_relative_error_bound(float(a), float(b))
+    for edge in (0.0, 0.99, -0.99, 1e-5):     # strategy boundary values
+        check_mul_relative_error_bound(edge, 0.5)
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    @given(st.floats(-0.99, 0.99), st.floats(-0.99, 0.99))
+    @settings(max_examples=60, deadline=None)
+    def test_mul_relative_error_bound(a, b):
+        check_mul_relative_error_bound(a, b)
+except ImportError:                     # optional dev dep; degrade
+    pass

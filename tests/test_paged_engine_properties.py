@@ -1,37 +1,46 @@
-"""Hypothesis properties for the paged serve engine (ISSUE 3 satellite).
+"""Properties of the paged serve engine (seeded + hypothesis, ISSUE 3/5).
 
 Random Poisson traces — with prompts drawn from a tiny token alphabet so
 prefixes collide constantly, and a pool sized to force LRU eviction and
 copy-on-write forks — must reproduce the PR 2 slotted engine's tokens
 **bit-exactly**, request for request.
 
-The trace machinery (engines, strategies, pool audits) lives in
-``tests/engine_harness.py``, shared with the cross-engine differential
-suite (tests/test_engine_differential.py) — this file keeps only the
-paged-specific cache-invisibility property and the slotted-parity check.
-"""
-import pytest
+The seeded ``np.random`` variants below always run — hypothesis is an
+optional dev dep, and an ``importorskip`` at module level used to silence
+this whole file on hosts without it (ISSUE 5: tier-1 was weaker than CI).
+When hypothesis IS present, the ``@given`` variants fuzz the same checkers
+with minimized counterexamples.
 
-pytest.importorskip("hypothesis")  # optional dev dep; degrade, don't error
-from hypothesis import given, settings
+The trace machinery (engines, seeded generators, strategies, pool audits)
+lives in ``tests/engine_harness.py``, shared with the cross-engine
+differential suite (tests/test_engine_differential.py) — this file keeps
+only the paged-specific cache-invisibility property and the
+slotted-parity check.
+"""
+import numpy as np
+import pytest
 
 import engine_harness as H
 
-GREEDY_TRACES, _ = H.make_strategies()
+try:
+    from hypothesis import given, settings
+    HAVE_HYPOTHESIS = True
+except ImportError:                     # optional dev dep; degrade
+    HAVE_HYPOTHESIS = False
 
 
-@given(GREEDY_TRACES)
-@settings(max_examples=8, deadline=None)
-def test_paged_trace_is_bit_exact_with_slotted(trace):
+# ---------------------------------------------------------------------------
+# the property checkers (shared by the seeded and the hypothesis variants)
+# ---------------------------------------------------------------------------
+
+def check_paged_trace_is_bit_exact_with_slotted(trace):
     out_a = H.run_trace(H.slotted_engine(), trace)
     out_b = H.run_trace(H.paged_engine(), trace)
     assert out_a == out_b, "paged engine diverged from the slotted oracle"
     H.audit(H.paged_engine())       # incl. no-leak free-count audit
 
 
-@given(GREEDY_TRACES)
-@settings(max_examples=6, deadline=None)
-def test_prefix_cache_state_is_invisible_in_outputs(trace):
+def check_prefix_cache_state_is_invisible(trace):
     """Serving the same trace twice back-to-back: the second pass may hit
     pages the first pass published (prompt pages at admission, committed
     generations at completion), or miss them after eviction — but the
@@ -48,3 +57,37 @@ def test_prefix_cache_state_is_invisible_in_outputs(trace):
     assert (paged.stats["hit_pages"] > hits_before
             or paged.stats["evicted"] > 0
             or all(len(p) < H.PAGE for p, _, _ in trace))
+
+
+# ---------------------------------------------------------------------------
+# seeded variants: run everywhere, hypothesis installed or not
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [30, 31])
+def test_paged_trace_is_bit_exact_with_slotted_seeded(seed):
+    check_paged_trace_is_bit_exact_with_slotted(
+        H.random_greedy_trace(np.random.default_rng(seed)))
+
+
+@pytest.mark.parametrize("seed", [33])
+def test_prefix_cache_state_is_invisible_seeded(seed):
+    check_prefix_cache_state_is_invisible(
+        H.random_greedy_trace(np.random.default_rng(seed)))
+
+
+# ---------------------------------------------------------------------------
+# hypothesis variants: extra depth when the optional dep is present
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    GREEDY_TRACES, _ = H.make_strategies()
+
+    @given(GREEDY_TRACES)
+    @settings(max_examples=8, deadline=None)
+    def test_paged_trace_is_bit_exact_with_slotted(trace):
+        check_paged_trace_is_bit_exact_with_slotted(trace)
+
+    @given(GREEDY_TRACES)
+    @settings(max_examples=6, deadline=None)
+    def test_prefix_cache_state_is_invisible_in_outputs(trace):
+        check_prefix_cache_state_is_invisible(trace)

@@ -51,8 +51,42 @@ def test_rules_tables_complete():
 
 def test_serve_rules_have_pages_axis():
     """Every serving rule set must place the paged pool's leading axis."""
-    for mode in ("serve", "long", "serve_dshard"):
+    for mode in ("serve", "long", "serve_dshard", "serve_exact"):
         assert "pages" in rules_for(mode, False).table
+
+
+def test_exact_rules_drop_every_contraction_dim():
+    """serve_exact (the serve engines' default under a mesh) must map every
+    INEXACT_AXES name to None — those are the contraction dims whose
+    sharding turns cross-shard combines into float psums (DESIGN.md §9) —
+    while keeping the output-dim TP shardings that combine by all-gather."""
+    from repro.parallel.sharding import (INEXACT_AXES, exact,
+                                         serve_exact_rules)
+    r = serve_exact_rules()
+    for ax in INEXACT_AXES:
+        assert r.lookup(ax) is None, ax
+    assert r.lookup("heads") == "model"
+    assert r.lookup("kv_heads") == "model"
+    assert r.lookup("mlp") == "model"
+    assert r.lookup("slots") == ("data",)
+    assert r.lookup("pages") is None
+    assert rules_for("serve_exact", False).table == r.table
+    # serve_dshard carries its whole TP split on the d_model contraction,
+    # so its exact variant must degenerate to data-parallel-only
+    d = exact(rules_for("serve_dshard", False))
+    assert d.lookup("embed") is None and d.lookup("kv_seq") is None
+    assert all(v in (None, ("data",)) for v in d.table.values())
+
+
+def test_contraction_dims_carry_their_own_logical_names():
+    """wo / mlp-down contraction dims must be tagged "o_heads"/"mlp_in"
+    (not "heads"/"mlp") so exact tables can replicate them while output
+    dims stay sharded; train tables map both names to "model", preserving
+    the megatron-style psum TP bit-for-bit."""
+    for mode in ("train", "train_fsdp", "serve"):
+        r = rules_for(mode, False)
+        assert r.lookup("o_heads") == r.lookup("heads") == "model"
+        assert r.lookup("mlp_in") == r.lookup("mlp") == "model"
 
 
 def test_paged_cache_pspecs_resolve():
