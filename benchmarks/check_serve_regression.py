@@ -27,6 +27,10 @@ ROWS = ("serve/cb_tok_per_s[off]", "serve/lockstep_tok_per_s[off]",
         "serve/spec_nonspec_tok_per_s[k4]",
         "serve/spec_speedup_analog_x[k4]",
         "serve/spec_accept_rate[k4]",
+        "serve/fidelity_reprograms[drift]",
+        "serve/fidelity_accept_trough[drift]",
+        "serve/fidelity_accept_recovered[drift]",
+        "serve/fidelity_downtime_share[drift]",
         "serve/sharded_single_tok_per_s[4Lx256d]",
         "serve/sharded_tok_per_s[4Lx256d_m2x1]",
         "serve/sharded_tok_per_s[4Lx256d_m1x2]",
@@ -44,11 +48,13 @@ def main() -> int:
     with open(path) as f:
         baseline = {r["name"]: r for r in json.load(f)["rows"]}
 
-    from benchmarks.serve_bench import (bench_continuous, bench_paged,
-                                        bench_sharded, bench_spec)
+    from benchmarks.serve_bench import (bench_continuous, bench_fidelity,
+                                        bench_paged, bench_sharded,
+                                        bench_spec)
     fresh = {r["name"]: r for r in bench_continuous("off")}
     fresh.update({r["name"]: r for r in bench_paged("shared_prefix")})
     fresh.update({r["name"]: r for r in bench_spec("k4")})
+    fresh.update({r["name"]: r for r in bench_fidelity("drift")})
     fresh.update({r["name"]: r for r in bench_sharded("4Lx256d")})
 
     for name in ROWS:
@@ -91,6 +97,17 @@ def main() -> int:
         print(f"::warning::speculative acceptance rate {acc:.2f} collapsed "
               f"— the analog drafter is no longer tracking the digital "
               f"path (numerics drift?)")
+    reps = float(fresh["serve/fidelity_reprograms[drift]"]["derived"])
+    if reps < 2:
+        print(f"::warning::fidelity loop fired only {reps:.0f} reprogram(s) "
+              f"on the drift cell — the acceptance sawtooth is gone "
+              f"(drift plant, monitor ladder, or acceptance numerics moved)")
+    lo = float(fresh["serve/fidelity_accept_trough[drift]"]["derived"])
+    hi = float(fresh["serve/fidelity_accept_recovered[drift]"]["derived"])
+    if not hi - lo > 0.2:
+        print(f"::warning::fidelity reprogramming no longer recovers "
+              f"acceptance (trough {lo:.2f} -> recovered {hi:.2f}) — "
+              f"reprogram_params is not rescuing the drifted drafter")
     rel = float(fresh["serve/sharded_rel_x[4Lx256d_m2x2]"]["derived"])
     if rel < 0.05:
         print(f"::warning::dp x tp sharded serving collapsed to "

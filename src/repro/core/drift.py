@@ -1,0 +1,223 @@
+"""Time-evolving device model: conductance drift + stuck-at-fault arrivals.
+
+``core.noise.NoiseModel`` captures the chip at a single instant — one
+programming event, one read.  This module adds the *time axis* that field
+deployments actually fight (Yan et al., "On the Reliability of
+Computing-in-Memory Accelerators"): programmed conductances relax toward
+their low state as a power law of time-since-programming,
+
+    G(t) = G_prog * ((t - t_prog + t0) / t0) ** (-nu)          (drift)
+
+(the +t0 shift pins the factor to 1 at the programming instant and matches
+the bare ``(t/t0)^-nu`` law for t >> t0), and individual cells fail
+permanently as a per-cell Poisson arrival process: cell i sticks at g_min
+or g_max (50/50) at the first arrival time of a rate-``fault_rate``
+process started at device birth — exponentially distributed, drawn once
+per cell from the device seed, and *surviving reprogramming* (a stuck cell
+cannot be rewritten; Smagulova et al. name periodic reprogramming as the
+standard field mitigation precisely because it fixes drift but not SAFs).
+
+Everything runs on a **virtual clock**: time is an explicit argument, no
+wall-clock reads anywhere, so a simulated days-long serve trace is
+bit-reproducible from its seed (``launch/fidelity.py`` advances the clock
+per engine tick).
+
+The state produced by :func:`program_params` mirrors an arbitrary
+parameter pytree: each weight leaf becomes a small dict of device arrays
+(programmed conductances, signs, the weight<->conductance scale, per-cell
+fault arrival times and stuck polarities) marked by the ``"g_prog"`` key,
+so the whole state is jit-traversable and :func:`read_params` is one
+elementwise ``tree.map`` per tick.  ``reprogram_params`` redraws the
+conductances through a fresh program-and-verify pass (keeping the fault
+record) — the closed loop's recovery action.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .noise import IDEAL, NoiseModel
+
+# fault arrival sentinel for rate == 0: "never" (float32-safe infinity)
+_NEVER = jnp.float32(jnp.inf)
+
+
+@dataclasses.dataclass(frozen=True)
+class DriftModel:
+    """Power-law conductance drift + Poisson SAF arrivals over virtual time.
+
+    ``nu``          drift exponent (0 disables drift; Ta-Ox retention
+                    measurements sit around 0.01-0.1 per decade at room
+                    temperature — larger values model accelerated aging).
+    ``t0``          reference time of the power law, virtual seconds; the
+                    drift factor is 1 at t - t_prog = 0 and
+                    ``2 ** -nu`` at t - t_prog = t0.
+    ``fault_rate``  per-cell Poisson SAF arrival rate, 1 / virtual second
+                    (0 disables faults).
+    ``noise``       the instantaneous :class:`NoiseModel` used for
+                    program-and-verify (and optional read fluctuation);
+                    defaults to IDEAL so drift/SAF effects are isolated.
+    ``verify_passes``  programming attempts per cell; the closest-to-target
+                    attempt wins (the paper's program-and-verify loop,
+                    tolerance-free form).
+    """
+
+    nu: float = 0.1
+    t0: float = 1.0
+    fault_rate: float = 0.0
+    noise: NoiseModel = IDEAL
+    verify_passes: int = 1
+
+    def __post_init__(self):
+        for name in ("nu", "t0", "fault_rate"):
+            v = getattr(self, name)
+            if not (isinstance(v, (int, float)) and math.isfinite(v)):
+                raise ValueError(f"DriftModel.{name}={v!r} must be a finite "
+                                 f"number")
+        if self.nu < 0:
+            raise ValueError(f"DriftModel.nu={self.nu} must be >= 0")
+        if self.t0 <= 0:
+            raise ValueError(f"DriftModel.t0={self.t0} must be > 0")
+        if self.fault_rate < 0:
+            raise ValueError(
+                f"DriftModel.fault_rate={self.fault_rate} must be >= 0 "
+                f"(per-cell arrivals per virtual second)")
+        if self.verify_passes < 1:
+            raise ValueError(
+                f"DriftModel.verify_passes={self.verify_passes} must be >= 1")
+
+    def drift_factor(self, dt) -> jax.Array:
+        """Conductance retention factor after ``dt`` virtual seconds since
+        programming: 1 at dt <= 0, decaying as ((dt + t0)/t0) ** -nu."""
+        dt = jnp.maximum(jnp.asarray(dt, jnp.float32), 0.0)
+        return ((dt + self.t0) / self.t0) ** jnp.float32(-self.nu)
+
+
+def _is_cell_state(x) -> bool:
+    return isinstance(x, dict) and "g_prog" in x
+
+
+def _leaf_keys(key: jax.Array, tree, is_leaf=None):
+    """One independent PRNG key per leaf, stable in flatten order."""
+    leaves, treedef = jax.tree.flatten(tree, is_leaf=is_leaf)
+    return jax.tree.unflatten(treedef, list(jax.random.split(key,
+                                                             len(leaves))))
+
+
+def _program_and_verify(key: jax.Array, g_target: jax.Array,
+                        model: DriftModel) -> jax.Array:
+    """``verify_passes`` programming attempts, closest-to-target wins."""
+    g = model.noise.program(key, g_target)
+    for i in range(1, model.verify_passes):
+        cand = model.noise.program(jax.random.fold_in(key, i), g_target)
+        g = jnp.where(jnp.abs(cand - g_target) < jnp.abs(g - g_target),
+                      cand, g)
+    return g
+
+
+def _cell_targets(w: jax.Array, model: DriftModel):
+    """Map a signed weight leaf onto target conductances + sign channel."""
+    n = model.noise
+    w = w.astype(jnp.float32)
+    w_max = jnp.maximum(jnp.max(jnp.abs(w)), 1e-6)
+    ratio = (n.g_max - n.g_min) / w_max
+    g_target = jnp.clip(jnp.abs(w) * ratio + n.g_min, n.g_min, n.g_max)
+    return g_target, jnp.sign(w), w_max
+
+
+def program_params(key: jax.Array, qparams, model: DriftModel,
+                   t: float = 0.0):
+    """Program every leaf of ``qparams`` (the log-grid-quantized drafter
+    weights) onto crossbar conductances at virtual time ``t``.
+
+    Returns the device-state pytree: ``qparams``' structure with each
+    weight leaf replaced by a cell-state dict.  Fault arrival times are
+    drawn here, once, from the *birth* of the device — they belong to the
+    cells, not to a programming pass, so :func:`reprogram_params` carries
+    them forward unchanged.
+    """
+    fkey, pkey = jax.random.split(key)
+    fkeys = _leaf_keys(fkey, qparams)
+    pkeys = _leaf_keys(pkey, qparams)
+
+    def one(w, fk, pk):
+        g_target, sign, w_max = _cell_targets(w, model)
+        k1, k2 = jax.random.split(fk)
+        if model.fault_rate > 0:
+            t_fault = (jax.random.exponential(k1, w.shape, jnp.float32)
+                       / jnp.float32(model.fault_rate))
+        else:
+            t_fault = jnp.full(w.shape, _NEVER)
+        stuck_hi = jax.random.bernoulli(k2, 0.5, w.shape)
+        return {"g_prog": _program_and_verify(pk, g_target, model),
+                "sign": sign, "w_max": w_max,
+                "t_fault": t_fault, "stuck_hi": stuck_hi}
+
+    cells = jax.tree.map(one, qparams, fkeys, pkeys)
+    return {"cells": cells, "t_prog": jnp.float32(t)}
+
+
+def reprogram_params(key: jax.Array, state, qparams, model: DriftModel,
+                     t) -> dict:
+    """One field reprogramming pass at virtual time ``t``: every cell is
+    rewritten to its target through a fresh program-and-verify draw and the
+    drift clock resets (``t_prog = t``) — but the fault record is carried
+    over untouched: stuck cells stay stuck, which is why acceptance
+    recovers to a slightly lower peak after every pass as SAFs accumulate.
+    """
+    pkeys = _leaf_keys(key, qparams)
+
+    def one(w, st, pk):
+        g_target, sign, w_max = _cell_targets(w, model)
+        return {"g_prog": _program_and_verify(pk, g_target, model),
+                "sign": sign, "w_max": w_max,
+                "t_fault": st["t_fault"], "stuck_hi": st["stuck_hi"]}
+
+    # qparams leads the map, so each cell-state dict arrives whole as ``st``
+    cells = jax.tree.map(one, qparams, state["cells"], pkeys)
+    return {"cells": cells, "t_prog": jnp.asarray(t, jnp.float32)}
+
+
+def read_params(state, model: DriftModel, t, read_key: jax.Array | None = None):
+    """The drafter's effective weights at virtual time ``t``: drift the
+    programmed conductances, overwrite faulted cells with their stuck
+    level, optionally add one read-fluctuation draw (``read_key``), and map
+    back to weight space.  Pure elementwise jax — jit this per tick."""
+    n = model.noise
+    t = jnp.asarray(t, jnp.float32)
+    factor = model.drift_factor(t - state["t_prog"])
+    rkeys = (_leaf_keys(read_key, state["cells"], is_leaf=_is_cell_state)
+             if read_key is not None else None)
+
+    def one(st, rk=None):
+        g = st["g_prog"] * factor
+        if rk is not None:
+            g = n.read(rk, g)
+        faulty = st["t_fault"] <= t
+        g = jnp.where(faulty,
+                      jnp.where(st["stuck_hi"], n.g_max, n.g_min), g)
+        g = jnp.clip(g, n.g_min, n.g_max)
+        ratio = (n.g_max - n.g_min) / st["w_max"]
+        w = (g - n.g_min) / ratio
+        # a stuck-high cell reads at full magnitude even where the target
+        # weight was an exact 0 (sign channel 0): give it positive polarity
+        sign = jnp.where(faulty & st["stuck_hi"] & (st["sign"] == 0),
+                         1.0, st["sign"])
+        return sign * w
+
+    if rkeys is None:
+        return jax.tree.map(one, state["cells"], is_leaf=_is_cell_state)
+    return jax.tree.map(one, state["cells"], rkeys, is_leaf=_is_cell_state)
+
+
+def fault_fraction(state, t) -> jax.Array:
+    """Scalar fraction of cells faulted by virtual time ``t`` (telemetry)."""
+    t = jnp.asarray(t, jnp.float32)
+    counts = [(jnp.sum(st["t_fault"] <= t), st["t_fault"].size)
+              for st in jax.tree.leaves(state["cells"],
+                                        is_leaf=_is_cell_state)]
+    total = sum(c for _, c in counts)
+    return sum(f for f, _ in counts) / jnp.float32(max(total, 1))

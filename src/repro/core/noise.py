@@ -21,6 +21,7 @@ Conductances are expressed in micro-Siemens throughout.
 from __future__ import annotations
 
 import dataclasses
+import math
 
 import jax
 import jax.numpy as jnp
@@ -49,6 +50,23 @@ class NoiseModel:
     scale: float = 1.0
     g_min: float = G_MIN_US
     g_max: float = G_MAX_US
+
+    def __post_init__(self):
+        # a NaN/inf/negative scale silently poisons every sigma (the clip
+        # in program/read hides it until outputs are garbage) — reject at
+        # construction instead
+        if not (isinstance(self.scale, (int, float))
+                and math.isfinite(self.scale)):
+            raise ValueError(
+                f"NoiseModel.scale={self.scale!r} must be a finite number")
+        if self.scale < 0:
+            raise ValueError(
+                f"NoiseModel.scale={self.scale} must be >= 0 "
+                f"(0 disables noise)")
+        if not (0 < self.g_min < self.g_max):
+            raise ValueError(
+                f"NoiseModel needs 0 < g_min < g_max, got "
+                f"g_min={self.g_min}, g_max={self.g_max}")
 
     # -- Eq 5 ---------------------------------------------------------------
     def sigma_prog(self, g_target: jax.Array) -> jax.Array:
@@ -161,6 +179,16 @@ def stuck_at_faults(rng: jax.Array, g: jax.Array, rate: float,
     Returns (faulty_g, fault_mask).  The mask supports the paper's NAF
     mitigations (skip/freeze faulty cells).
     """
+    try:
+        r = float(rate)
+    except (TypeError, jax.errors.TracerArrayConversionError):
+        r = None                    # traced rate: cannot validate host-side
+    if r is not None and not (0.0 <= r <= 1.0):
+        # bernoulli would clip (or NaN-propagate) a bad probability into a
+        # silently-wrong fault pattern — reject it with the actual value
+        raise ValueError(
+            f"stuck_at_faults rate={rate!r} must be a probability in "
+            f"[0, 1]")
     k1, k2 = jax.random.split(rng)
     mask = jax.random.bernoulli(k1, rate, g.shape)
     high = jax.random.bernoulli(k2, 0.5, g.shape)

@@ -70,11 +70,13 @@ import jax
 import jax.numpy as jnp
 import jax.tree_util as jtu
 
+from ..core import drift as drift_lib
 from ..core.engine import NLDPEConfig, OFF
 from ..models import lm
 from ..models.lm import ATTN_TYPES
 from ..parallel import sharding
 from ..parallel.context import sharding_ctx
+from .fidelity import DriftInjection, FidelityMonitor, FidelityPolicy
 from .kvpool import PagePool, nldpe_fingerprint
 from .sampling import TOP_K_CAP, request_key, sample_tokens, step_keys
 from .spec_decode import (batch_dim as _batch_dim, build_draft_scan_fn,
@@ -629,6 +631,8 @@ class PagedServeEngine(ServeEngine):
                  page_size: int = 16, num_pages: int | None = None,
                  spec_k: int = 0, spec_draft: NLDPEConfig | None = None,
                  cache_generations: bool = True,
+                 drift: DriftInjection | None = None,
+                 fidelity: FidelityPolicy | None = None,
                  mesh=None, rules=None):
         if "local" in cfg.layer_pattern:
             raise NotImplementedError(
@@ -662,6 +666,10 @@ class PagedServeEngine(ServeEngine):
                                  donate_argnums=(0,))
         self._copy_fn = jax.jit(self._ctx(self._build_copy_fn()),
                                 donate_argnums=(0,))
+        if (drift is not None or fidelity is not None) and not spec_k:
+            raise ValueError(
+                "drift/fidelity act on the analog draft path; they need "
+                "spec_k > 0")
         if self.spec_k:
             # the drafter's weights: the target parameters round-tripped
             # through the 8-bit log grid (programmed conductances), cached
@@ -672,23 +680,56 @@ class PagedServeEngine(ServeEngine):
             # self.params (not the raw argument) keeps the drafter's
             # weights on the engine's mesh placement.
             self._draft_params = quantize_draft_params(self.params)
-            self._draft_fn = jax.jit(
-                self._ctx(build_draft_scan_fn(cfg, self._draft_params,
-                                              spec_k=self.spec_k,
-                                              nldpe=self.spec_draft,
-                                              batch_groups=batch_groups)),
-                donate_argnums=(0,))
-            self._verify_fn = jax.jit(
-                self._ctx(build_verify_fn(cfg, self.params,
-                                          spec_k=self.spec_k,
-                                          nldpe=nldpe,
-                                          batch_groups=batch_groups,
-                                          eos_id=eos_id)),
-                donate_argnums=(0, 1, 2, 3, 4))
+            # (draft, verify) jit pairs cached per live depth: the draft
+            # scan length and verify chunk width are trace constants, so
+            # the fidelity ladder's spec_k moves swap compiled functions
+            # instead of retracing.  self.spec_k stays the *planning*
+            # depth (_plan budgets its page slack), and spec_k_live only
+            # ever moves below it — shrinking is slack-safe, growing past
+            # it would not be.
+            self._spec_fn_cache: dict[int, tuple] = {}
+            self.spec_k_live = self.spec_k
             self._spec_steps = 0
             self._drafted = np.zeros((max_slots,), np.int64)
             self._accepted = np.zeros((max_slots,), np.int64)
             self.spec_draft_seconds = 0.0
+            # windowed acceptance (satellite of the fidelity loop, useful
+            # standalone): counters since the last reset_window(), plus a
+            # per-tick EWMA — lifetime totals cannot see degradation
+            self._win_drafted = np.zeros((max_slots,), np.int64)
+            self._win_accepted = np.zeros((max_slots,), np.int64)
+            self._win_ticks = 0
+            self.ewma_acceptance: float | None = None
+            self._spec_fns_for(self.spec_k)     # warm the default depth
+        # closed-loop fidelity (DESIGN.md §10): drift = the plant (aging
+        # device model on a virtual clock), monitor = the controller
+        # (acceptance-driven degradation ladder); either works alone
+        self.drift = drift
+        self.monitor = (FidelityMonitor(fidelity or FidelityPolicy(), spec_k)
+                        if drift is not None or fidelity is not None
+                        else None)
+        self._ewma_alpha = (self.monitor.policy.ewma_alpha
+                            if self.monitor is not None else 0.25)
+        self.vclock = 0.0               # virtual seconds; never wall-clock
+        self._downtime_s = 0.0
+        self._reprograms = 0
+        self._disabled_ticks = 0
+        if drift is not None:
+            pkey, self._drift_key, self._read_key = jax.random.split(
+                jax.random.key(drift.seed), 3)
+            m = drift.model
+            self._drift_state = drift_lib.program_params(
+                pkey, self._draft_params, m)
+            if drift.read_noise:
+                self._read_fn = jax.jit(self._ctx(
+                    lambda st, t, k: drift_lib.read_params(st, m, t,
+                                                           read_key=k)))
+            else:
+                self._read_fn = jax.jit(self._ctx(
+                    lambda st, t: drift_lib.read_params(st, m, t)))
+            self._reprogram_fn = jax.jit(
+                lambda k, st, q, t: drift_lib.reprogram_params(k, st, q,
+                                                               m, t))
 
     def _init_cache(self):
         return lm.init_model_cache(self.cfg, self.max_slots, self.max_len,
@@ -714,42 +755,176 @@ class PagedServeEngine(ServeEngine):
         tokens.  The acceptance rate is the engine's live analog-fidelity
         signal — how often the low-precision NL-DPE draft agrees with the
         exact digital path (DESIGN.md §8; the paper's Fig 14 correlation,
-        observed in production instead of offline)."""
+        observed in production instead of offline).  ``window`` holds the
+        same counters since the last :meth:`reset_window`, and
+        ``ewma_acceptance`` is a per-tick exponential average — both exist
+        because the lifetime totals cannot see a device *degrading*."""
         if not self.spec_k:
             return {"spec_k": 0}
         drafted = int(self._drafted.sum())
         accepted = int(self._accepted.sum())
-        return {"spec_k": self.spec_k, "spec_steps": self._spec_steps,
+        wd = int(self._win_drafted.sum())
+        wa = int(self._win_accepted.sum())
+        return {"spec_k": self.spec_k, "spec_k_live": self.spec_k_live,
+                "spec_steps": self._spec_steps,
                 "drafted": drafted, "accepted": accepted,
                 "acceptance_rate": accepted / max(drafted, 1),
+                "ewma_acceptance": self.ewma_acceptance,
                 "draft_seconds": self.spec_draft_seconds,
                 "drafted_by_slot": self._drafted.tolist(),
-                "accepted_by_slot": self._accepted.tolist()}
+                "accepted_by_slot": self._accepted.tolist(),
+                "window": {"ticks": self._win_ticks,
+                           "drafted": wd, "accepted": wa,
+                           "acceptance_rate": wa / max(wd, 1),
+                           "drafted_by_slot": self._win_drafted.tolist(),
+                           "accepted_by_slot": self._win_accepted.tolist()}}
+
+    def reset_window(self) -> None:
+        """Zero the windowed counters in ``spec_stats["window"]`` — a
+        dashboard/epoch boundary; lifetime totals and the EWMA keep
+        running."""
+        if not self.spec_k:
+            return
+        self._win_drafted[:] = 0
+        self._win_accepted[:] = 0
+        self._win_ticks = 0
+
+    @property
+    def fidelity_stats(self) -> dict:
+        """Closed-loop telemetry (DESIGN.md §10): virtual clock, ladder
+        state + event log, reprogramming downtime, and the drift plant's
+        fault census."""
+        out = {"enabled": self.monitor is not None or self.drift is not None,
+               "vclock_s": self.vclock,
+               "spec_k_live": getattr(self, "spec_k_live", 0),
+               "reprograms": self._reprograms,
+               "downtime_s": self._downtime_s,
+               "disabled_ticks": self._disabled_ticks}
+        if self.monitor is not None:
+            out.update(ewma=self.monitor.ewma,
+                       disabled=self.monitor.disabled,
+                       events=list(self.monitor.events))
+        if self.drift is not None:
+            out["fault_fraction"] = float(drift_lib.fault_fraction(
+                self._drift_state, self.vclock))
+        return out
+
+    # ------------------------------------------------------------------
+    # closed-loop fidelity plumbing (DESIGN.md §10)
+    # ------------------------------------------------------------------
+
+    def _spec_fns_for(self, k: int) -> tuple:
+        """The (draft, verify) jit pair at live depth ``k`` (cached)."""
+        fns = self._spec_fn_cache.get(k)
+        if fns is None:
+            draft = jax.jit(
+                self._ctx(build_draft_scan_fn(
+                    self.cfg, spec_k=k, nldpe=self.spec_draft,
+                    batch_groups=self.batch_groups)),
+                donate_argnums=(1,))    # the cache — never the weights
+            verify = jax.jit(
+                self._ctx(build_verify_fn(
+                    self.cfg, self.params, spec_k=k, nldpe=self.nldpe,
+                    batch_groups=self.batch_groups, eos_id=self.eos_id)),
+                donate_argnums=(0, 1, 2, 3, 4))
+            fns = (draft, verify)
+            self._spec_fn_cache[k] = fns
+        return fns
+
+    def _aged_draft_params(self):
+        """The drafter's effective weights *now*: the programmed cells
+        drifted to the current virtual time, faulted cells stuck."""
+        d = self.drift
+        t = jnp.float32(self.vclock)
+        if d.read_noise:
+            return self._read_fn(self._drift_state, t,
+                                 jax.random.fold_in(self._read_key,
+                                                    self.tick))
+        return self._read_fn(self._drift_state, t)
+
+    def _execute_reprogram(self) -> None:
+        """The ladder's recovery action: rewrite every drafter cell through
+        a fresh program-and-verify pass at the current virtual time and
+        meter the downtime.  Stuck cells survive reprogramming, so each
+        recovery peaks slightly lower than the last (the bench sawtooth's
+        decaying envelope)."""
+        self._reprograms += 1
+        if self.drift is None:
+            return                      # monitor-only mode: counted, no-op
+        self.vclock += self.drift.reprogram_s
+        self._downtime_s += self.drift.reprogram_s
+        self._drift_key, k = jax.random.split(self._drift_key)
+        self._drift_state = self._reprogram_fn(
+            k, self._drift_state, self._draft_params,
+            jnp.float32(self.vclock))
+
+    def _after_tick(self, *, drafted: int, accepted: int, k: int) -> None:
+        """Advance the virtual device clock one tick and run the fidelity
+        controller.  Without a drift plant the clock counts exact decode
+        positions (1 per spec tick, decode_block per fallback tick)."""
+        if self.drift is not None:
+            self.vclock += self.drift.tick_seconds(k, self.decode_block)
+        else:
+            self.vclock += float(self.decode_block if k == 0 else 1)
+        if self.monitor is None:
+            return
+        action = self.monitor.observe(drafted=drafted, accepted=accepted,
+                                      t=self.vclock, tick=self.tick)
+        if action == "reprogram":
+            self._execute_reprogram()
+        self.spec_k_live = self.monitor.spec_k
 
     def step(self) -> list[Completion]:
         """One decode tick.  Non-speculative engines scan ``decode_block``
         plain steps (base class); with ``spec_k`` set, a tick is ONE
         speculative step — k analog drafts + one exact batched verify —
-        emitting 1..k+1 tokens per active slot."""
+        emitting 1..k+1 tokens per active slot.  Under the fidelity loop
+        ``k`` is the monitor's live depth, and ``k == 0`` (draft disabled)
+        falls back to the base exact scan: the drafter never owned
+        correctness, so disabling it moves throughput only."""
         if not self.spec_k:
             return super().step()
+        k = self.spec_k_live = (self.monitor.spec_k
+                                if self.monitor is not None else self.spec_k)
+        if k == 0:
+            done = super().step()
+            self._disabled_ticks += 1
+            self._after_tick(drafted=0, accepted=0, k=0)
+            return done
         # explicit copy: np.asarray of a CPU jax array can alias the device
         # buffer, which the verify fn below donates (and so may reuse)
         pre_active = np.array(self._active)
+        dparams = (self._aged_draft_params() if self.drift is not None
+                   else self._draft_params)
+        draft_fn, verify_fn = self._spec_fns_for(k)
         t0 = time.time()
-        self.cache, drafts, q_probs = self._draft_fn(
-            self.cache, self._tok, self._pos, self._active, self._temp,
-            self._topk, self._keys)
+        self.cache, drafts, q_probs = draft_fn(
+            dparams, self.cache, self._tok, self._pos, self._active,
+            self._temp, self._topk, self._keys)
         jax.block_until_ready(drafts)       # meter the analog phase alone
         self.spec_draft_seconds += time.time() - t0
         (self.cache, self._tok, self._pos, self._active, self._gen_left,
-         emits, accepted) = self._verify_fn(
+         emits, accepted) = verify_fn(
             self.cache, self._tok, self._pos, self._active, self._gen_left,
             self._temp, self._topk, self._keys, drafts, q_probs)
         self.tick += 1
         self._spec_steps += 1
-        self._drafted += np.where(pre_active, self.spec_k, 0)
-        self._accepted += np.where(pre_active, np.asarray(accepted), 0)
+        drafted_now = np.where(pre_active, k, 0).astype(np.int64)
+        accepted_now = np.where(pre_active, np.asarray(accepted),
+                                0).astype(np.int64)
+        self._drafted += drafted_now
+        self._accepted += accepted_now
+        self._win_drafted += drafted_now
+        self._win_accepted += accepted_now
+        self._win_ticks += 1
+        d, a = int(drafted_now.sum()), int(accepted_now.sum())
+        if d:
+            acc = a / d
+            self.ewma_acceptance = (
+                acc if self.ewma_acceptance is None
+                else self._ewma_alpha * acc
+                + (1 - self._ewma_alpha) * self.ewma_acceptance)
+        self._after_tick(drafted=d, accepted=a, k=k)
         return self._harvest(np.asarray(emits).T)      # (S, k+1) -> (T, S)
 
     # ------------------------------------------------------------------

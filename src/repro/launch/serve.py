@@ -189,6 +189,21 @@ def run(argv=None):
                         "DMMul + ACAM softmax) instead of the "
                         "conductance-programmed weights only; much slower "
                         "to *simulate* on CPU, identical outputs")
+    p.add_argument("--drift", type=float, default=None, metavar="NU",
+                   help="with --paged --spec: age the analog drafter live "
+                        "— power-law conductance drift exponent nu on a "
+                        "virtual clock, with the acceptance-driven "
+                        "backoff/reprogram/disable ladder closed around it "
+                        "(DESIGN.md §10).  Exact output is unaffected; "
+                        "only throughput moves")
+    p.add_argument("--fault-rate", type=float, default=0.0,
+                   metavar="RATE",
+                   help="per-cell stuck-at-fault Poisson arrival rate "
+                        "(1/virtual-second) for --drift; faults survive "
+                        "reprogramming")
+    p.add_argument("--drift-dt", type=float, default=60.0, metavar="S",
+                   help="virtual seconds per decode position for --drift "
+                        "(accelerated aging clock; default 60)")
     p.add_argument("--slots", type=int, default=4,
                    help="KV-cache slots for --continuous/--paged")
     p.add_argument("--requests", type=int, default=12,
@@ -237,12 +252,29 @@ def run(argv=None):
                 for i in range(args.requests)]
         spec_draft = (NLDPEConfig(enabled=True) if args.spec_full_analog
                       else NLDPEConfig(enabled=False))
+        drift = None
+        if args.drift is not None or args.fault_rate:
+            if not args.spec:
+                p.error("--drift/--fault-rate need --spec K (they age the "
+                        "analog draft path)")
+            from ..core.drift import DriftModel
+            from .fidelity import DriftInjection, FidelityPolicy
+            drift = DriftInjection(
+                model=DriftModel(nu=args.drift or 0.0, t0=args.drift_dt,
+                                 fault_rate=args.fault_rate),
+                seed=args.seed, dt_step=args.drift_dt,
+                reprogram_s=10 * args.drift_dt)
+            # short demo traces: decide every 4 spec ticks so the ladder
+            # is visible within a few dozen requests
+            fidelity = FidelityPolicy(window=4)
         eng = PagedServeEngine(cfg, params, max_slots=args.slots,
                                max_len=max_len, nldpe=nldpe,
                                page_size=args.page_size,
                                num_pages=args.num_pages, spec_k=args.spec,
-                               spec_draft=spec_draft, mesh=mesh,
-                               rules=args.mesh_rules)
+                               spec_draft=spec_draft, drift=drift,
+                               fidelity=(fidelity if drift is not None
+                                         else None),
+                               mesh=mesh, rules=args.mesh_rules)
         t0 = time.time()
         comps = eng.run(reqs)
         dt = time.time() - t0
@@ -265,6 +297,16 @@ def run(argv=None):
                   f"({sp['acceptance_rate']:.1%} — the analog-fidelity "
                   f"signal), {n_tok / max(sp['spec_steps'], 1):.2f} "
                   f"tokens/verify pass")
+        if drift is not None:
+            fs = eng.fidelity_stats
+            ev = "".join(f"\n    {e['event']:>9} @ t={e['t']:.0f}s "
+                         f"(spec_k -> {e['spec_k']}, ewma={e['ewma']})"
+                         for e in fs["events"]) or " (none)"
+            print(f"  fidelity loop: vclock {fs['vclock_s']:.0f}s, "
+                  f"{fs['reprograms']} reprograms "
+                  f"({fs['downtime_s']:.0f}s downtime), "
+                  f"{fs['fault_fraction']:.2%} cells stuck, live spec_k "
+                  f"{fs['spec_k_live']}; events:{ev}")
         for c in comps[:4]:
             print(f"  rid={c.rid} admitted@{c.admitted_tick} "
                   f"finished@{c.finished_tick} [{c.finish_reason}] "

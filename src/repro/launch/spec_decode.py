@@ -178,15 +178,21 @@ def speculative_accept(drafts, q_probs, vlogits, temperature, top_k, keys,
 # the fused spec step
 # ---------------------------------------------------------------------------
 
-def build_draft_scan_fn(cfg, draft_params, *, spec_k: int,
+def build_draft_scan_fn(cfg, *, spec_k: int,
                         nldpe: NLDPEConfig, batch_groups: int = 1):
     """The draft phase alone: spec_k sequential low-precision decode steps
     against the (paged) cache.  The engine dispatches this as its own jit
     (the analog engine's half of a spec step) and meters its wall share —
     the part a real NL-DPE chip would execute in analog; the CPU host pays
-    full simulation cost for it (DESIGN.md §8)."""
+    full simulation cost for it (DESIGN.md §8).
 
-    def draft_scan(cache, tok, pos, active, temp, topk, keys):
+    ``draft_params`` is a *call-time* argument (not closed over): under
+    drift injection (core/drift.py, DESIGN.md §10) the drafter's effective
+    weights change every tick as the programmed conductances age, so the
+    engine re-reads them from the device state and passes the result in —
+    same shapes every call, so the jit never retraces."""
+
+    def draft_scan(draft_params, cache, tok, pos, active, temp, topk, keys):
         def dstep(carry, _):
             cache, t, p = carry
             logits, cache = lm.decode_step(draft_params, cfg, t, p, cache,

@@ -98,6 +98,25 @@ def paged_engine(spec_k: int = 0, mesh_shape=None, **over) -> PagedServeEngine:
     return _STATE[key]
 
 
+def drift_engine(spec_k: int = 2, *, nu=0.5, t0=2.0, fault_rate=0.0,
+                 dt_step=5.0, reprogram_s=0.0, seed=3, fidelity=None,
+                 **over) -> PagedServeEngine:
+    """A FRESH drift-injected spec engine (not a singleton: the aging
+    device state and the monitor's ladder position are the test subject,
+    so suites must not share them).  Defaults give fast, visible
+    degradation on the reduced model; jit compilations still share the
+    in-process jax cache with the singleton engines."""
+    from repro.core.drift import DriftModel
+    from repro.launch.fidelity import DriftInjection
+    inj = DriftInjection(model=DriftModel(nu=nu, t0=t0,
+                                          fault_rate=fault_rate),
+                         seed=seed, dt_step=dt_step, reprogram_s=reprogram_s)
+    kw = engine_kwargs(page_size=PAGE, num_pages=NUM_PAGES,
+                       spec_k=spec_k, spec_draft=WQ_DRAFT,
+                       drift=inj, fidelity=fidelity, **over)
+    return PagedServeEngine(CFG, shared_params(), **kw)
+
+
 def run_alone(prompt: tuple, gen_len: int) -> list:
     """The seed lockstep oracle: whole-prompt prefill + python_loop_decode,
     greedy, one request alone.  Cached per (prompt, gen)."""

@@ -1,0 +1,329 @@
+"""Closed-loop fidelity suite (ISSUE 6 tentpole + acceptance criterion).
+
+Three layers:
+
+1. **Monitor units** — the degradation ladder (backoff -> reprogram ->
+   disable, with probe/escalate on the way back up) as a pure host-side
+   state machine on synthetic acceptance streams.
+2. **Windowed spec_stats** — the per-window counters / EWMA /
+   ``reset_window()`` satellite on a live engine.
+3. **The differential acceptance criterion** — a drift+SAF-injected
+   speculative serve trace emits tokens **bit-identical** to the
+   uninjected non-speculative oracle (and the run-alone lockstep oracle),
+   through backoff, reprogramming, and full draft disable.
+
+On the wording of the criterion: for *greedy* requests bit-equality to
+the non-spec oracle is structural (the exact verify pass owns every
+token; PR 4's proof applies to any drafter, aged or not) and is asserted
+request-for-request.  *Sampled* requests are distribution-equivalent to
+non-spec decode, not draw-equivalent (tests/test_spec_sampling.py, the
+documented PR 4 contract), and a drifted drafter shifts the proposal
+``q`` — so for sampled requests the asserted property is the strongest
+true one: same-seed **replay determinism** (a fresh identical engine
+reproduces every token and every scheduler/fidelity stat exactly — the
+virtual clock means no wall-clock leaks into behavior) plus untouched
+greedy co-tenants in mixed traces.
+"""
+import numpy as np
+import pytest
+
+import engine_harness as H
+from repro.launch.fidelity import (DriftInjection, FidelityMonitor,
+                                   FidelityPolicy)
+
+
+def steady_trace(n, gen=6, seed=0):
+    """n back-to-back greedy requests: keeps both slots busy so spec
+    ticks (and the virtual clock) accumulate without idle gaps."""
+    rng = np.random.default_rng(seed)
+    return [(tuple(int(x) for x in rng.integers(0, 3, 5)), gen, 0)
+            for _ in range(n)]
+
+
+SAWTOOTH_POLICY = FidelityPolicy(window=4, soft_threshold=0.5,
+                                 hard_threshold=0.3, recover_threshold=0.6,
+                                 reprogram_patience=1)
+
+
+def sawtooth_engine(**over):
+    kw = dict(spec_k=2, nu=2.0, t0=150.0, fault_rate=0.0, dt_step=5.0,
+              reprogram_s=20.0, fidelity=SAWTOOTH_POLICY)
+    kw.update(over)
+    return H.drift_engine(**kw)
+
+
+# ---------------------------------------------------------------------------
+# 1. monitor units: the ladder on synthetic acceptance streams
+# ---------------------------------------------------------------------------
+
+def feed(mon, acc, ticks, t0=0.0, dt=1.0, k=10):
+    """Feed ``ticks`` observations at fixed acceptance (k=10 drafts/tick
+    so tenths-valued ``acc`` is represented exactly); return actions."""
+    actions = []
+    for i in range(ticks):
+        a = mon.observe(drafted=k, accepted=round(k * acc),
+                        t=t0 + (i + 1) * dt, tick=i)
+        if a:
+            actions.append(a)
+    return actions
+
+
+def test_monitor_backoff_below_soft():
+    mon = FidelityMonitor(FidelityPolicy(window=2), spec_k=4)
+    assert feed(mon, 0.4, 2) == ["backoff"]     # 0.3 <= 0.4 < 0.5
+    assert mon.spec_k == 2
+    assert feed(mon, 0.4, 2)[-1] == "backoff"
+    assert mon.spec_k == 1                      # floored at min_spec_k
+    assert feed(mon, 0.4, 2) == []              # cannot back off further
+
+
+def test_monitor_reprogram_below_hard_then_escalate_on_recovery():
+    mon = FidelityMonitor(FidelityPolicy(window=2, reprogram_patience=0),
+                          spec_k=4)
+    assert feed(mon, 0.1, 2) == ["reprogram"]
+    assert mon.ewma is None                     # fresh estimate post-rewrite
+    assert feed(mon, 0.9, 2) == []              # healthy, already at max? no:
+    # spec_k never moved (reprogram keeps depth), so no escalate needed
+    assert mon.spec_k == 4 and mon._failed_reprograms == 0
+
+
+def test_monitor_escalates_back_to_max():
+    mon = FidelityMonitor(FidelityPolicy(window=1), spec_k=4)
+    feed(mon, 0.4, 1)                           # backoff -> 2
+    feed(mon, 0.4, 1)                           # backoff -> 1
+    assert mon.spec_k == 1
+    acts = feed(mon, 1.0, 3)
+    assert acts == ["escalate", "escalate"] and mon.spec_k == 4
+
+
+def test_monitor_disables_after_max_failed_reprograms():
+    mon = FidelityMonitor(FidelityPolicy(window=1, reprogram_patience=0,
+                                         max_reprograms=2), spec_k=2)
+    acts = feed(mon, 0.0, 3)
+    assert acts == ["reprogram", "reprogram", "disable"]
+    assert mon.disabled and mon.spec_k == 0
+    # while disabled (no probing configured) it stays silent forever
+    assert feed(mon, 0.0, 10) == []
+
+
+def test_monitor_grace_windows_suppress_rejudging():
+    mon = FidelityMonitor(FidelityPolicy(window=1, reprogram_patience=2,
+                                         max_reprograms=5), spec_k=2)
+    acts = feed(mon, 0.0, 4)
+    # reprogram, then 2 grace windows of silence, then the next reprogram
+    assert acts == ["reprogram", "reprogram"]
+
+
+def test_monitor_probe_reenables_and_redisFalse_on_failure():
+    mon = FidelityMonitor(FidelityPolicy(window=1, reprogram_patience=0,
+                                         max_reprograms=1,
+                                         probe_interval_s=10.0), spec_k=4)
+    assert feed(mon, 0.0, 2, dt=1.0) == ["reprogram", "disable"]
+    # 8 disabled ticks pass; at t >= disable_t + 10 the probe fires
+    acts = feed(mon, 0.0, 12, t0=2.0, dt=1.0)
+    assert acts[0] == "probe"
+    assert "disable" in acts[1:]                # probe failed: back to sleep
+
+
+def test_monitor_probe_recovery_escalates():
+    mon = FidelityMonitor(FidelityPolicy(window=1, reprogram_patience=0,
+                                         max_reprograms=1,
+                                         probe_interval_s=5.0), spec_k=4)
+    feed(mon, 0.0, 2)                           # reprogram -> disable
+    acts = feed(mon, 1.0, 10, t0=2.0)
+    assert acts[0] == "probe"
+    assert mon.disabled is False
+    assert mon.spec_k == 4                      # escalated back to max
+
+
+def test_monitor_idle_windows_are_not_judged():
+    mon = FidelityMonitor(FidelityPolicy(window=2), spec_k=2)
+    assert feed(mon, 0.0, 10, k=0) == []        # drafted=0: no evidence
+    assert mon.ewma is None
+
+
+@pytest.mark.parametrize("bad", [dict(window=0), dict(ewma_alpha=0.0),
+                                 dict(ewma_alpha=1.5),
+                                 dict(soft_threshold=0.2,
+                                      hard_threshold=0.4),
+                                 dict(recover_threshold=0.4),
+                                 dict(min_spec_k=0), dict(max_reprograms=0),
+                                 dict(probe_interval_s=-1.0)])
+def test_policy_rejects_bad_config(bad):
+    with pytest.raises(ValueError):
+        FidelityPolicy(**bad)
+
+
+@pytest.mark.parametrize("bad", [dict(dt_step=0.0), dict(dt_step=-1.0),
+                                 dict(draft_cost=-0.1),
+                                 dict(reprogram_s=float("nan"))])
+def test_injection_rejects_bad_config(bad):
+    with pytest.raises(ValueError):
+        DriftInjection(**bad)
+
+
+def test_injection_tick_seconds():
+    inj = DriftInjection(dt_step=3.0, draft_cost=0.5)
+    assert inj.tick_seconds(4, 8) == pytest.approx(3.0 * (1 + 0.5 * 4))
+    assert inj.tick_seconds(0, 8) == pytest.approx(24.0)   # exact fallback
+
+
+# ---------------------------------------------------------------------------
+# 2. windowed spec_stats satellite
+# ---------------------------------------------------------------------------
+
+def test_windowed_spec_stats_and_reset():
+    eng = H.drift_engine(spec_k=2, nu=0.0, fault_rate=0.0)   # inert plant
+    H.run_trace(eng, steady_trace(4))
+    st = eng.spec_stats
+    w = st["window"]
+    assert w["ticks"] > 0 and w["drafted"] > 0
+    assert w["drafted"] == st["drafted"]        # no reset yet: same totals
+    assert sum(w["drafted_by_slot"]) == w["drafted"]
+    assert 0.0 <= w["acceptance_rate"] <= 1.0
+    assert 0.0 <= st["ewma_acceptance"] <= 1.0
+    assert st["spec_k_live"] == st["spec_k"]
+    eng.reset_window()
+    w2 = eng.spec_stats["window"]
+    assert w2 == {"ticks": 0, "drafted": 0, "accepted": 0,
+                  "acceptance_rate": 0.0,
+                  "drafted_by_slot": [0] * eng.max_slots,
+                  "accepted_by_slot": [0] * eng.max_slots}
+    # lifetime totals and the EWMA survive the window reset
+    st2 = eng.spec_stats
+    assert st2["drafted"] == st["drafted"]
+    assert st2["ewma_acceptance"] == st["ewma_acceptance"]
+    H.run_trace(eng, steady_trace(2, seed=9))
+    assert eng.spec_stats["window"]["drafted"] > 0
+
+
+def test_undrifted_plant_matches_plain_spec_acceptance():
+    """nu=0, no faults, ideal noise: the programmed device read back is
+    the quantized drafter up to fp32 conductance-map roundtrip (~1e-5),
+    so the inert drift engine behaves like the plain spec engine — same
+    tokens, and acceptance within the noise of near-tie draft argmaxes."""
+    trace = H.shared_prefix_cow_trace()
+    inert = H.drift_engine(spec_k=2, nu=0.0, fault_rate=0.0)
+    plain = H.drift_engine(spec_k=2, nu=0.0, fault_rate=0.0)
+    plain.drift = None                          # read static quantized params
+    a = H.run_trace(inert, trace)
+    b = H.run_trace(plain, trace)
+    assert a == b
+    sa, sb = inert.spec_stats, plain.spec_stats
+    assert sa["drafted"] > 0
+    assert abs(sa["acceptance_rate"] - sb["acceptance_rate"]) < 0.2
+
+
+# ---------------------------------------------------------------------------
+# 3. the differential acceptance criterion
+# ---------------------------------------------------------------------------
+
+def test_drift_saf_injection_never_changes_greedy_tokens():
+    """Heavy drift + SAF accumulation + the full ladder active: every
+    greedy completion still matches BOTH the uninjected non-speculative
+    paged engine and the run-alone lockstep oracle, token for token, and
+    the page pool stays leak-free."""
+    trace = steady_trace(24) + H.shared_prefix_cow_trace()
+    eng = H.drift_engine(spec_k=2, nu=1.0, t0=20.0, fault_rate=2e-3,
+                        dt_step=10.0, reprogram_s=50.0,
+                        fidelity=FidelityPolicy(window=3,
+                                                reprogram_patience=1,
+                                                max_reprograms=2))
+    out = H.run_trace(eng, trace)
+    base = H.paged_engine()                     # uninjected, spec_k=0
+    out_base = H.run_trace(base, trace)
+    assert out == out_base
+    for rid, spec in enumerate(trace):
+        assert out[rid] == H.run_alone(tuple(spec[0]), spec[1]), \
+            f"rid {rid} diverged from the run-alone oracle under injection"
+    H.audit(eng)
+    fs = eng.fidelity_stats
+    assert fs["vclock_s"] > 0 and fs["fault_fraction"] > 0
+    assert eng.spec_stats["drafted"] > 0
+
+
+def test_reprogram_recovers_acceptance_sawtooth():
+    """The tentpole dynamic: drift collapses acceptance, the hard
+    threshold triggers a reprogram, the rewritten device recovers above
+    the recover threshold (escalate), and the cycle repeats — with the
+    downtime metered and exactness untouched."""
+    eng = sawtooth_engine()
+    trace = steady_trace(60)
+    out = H.run_trace(eng, trace)
+    for rid, (p, g, _) in enumerate(trace):
+        assert out[rid] == H.run_alone(tuple(p), g)
+    fs = eng.fidelity_stats
+    kinds = [e["event"] for e in fs["events"]]
+    assert fs["reprograms"] >= 2
+    assert kinds.count("reprogram") >= 2
+    # every reprogram recovered: an escalate (EWMA >= recover) follows it
+    r_at = [i for i, k in enumerate(kinds) if k == "reprogram"]
+    for i in r_at:
+        rest = kinds[i + 1:]
+        assert "escalate" in rest or not rest, \
+            "reprogram did not recover (and the run did not end there)"
+    assert fs["downtime_s"] == pytest.approx(20.0 * fs["reprograms"])
+    assert fs["vclock_s"] > fs["downtime_s"]
+
+
+def test_failed_reprogram_disables_draft_path():
+    """SAFs at catastrophic density: reprogramming cannot fix stuck cells,
+    so after max_reprograms the ladder disables the draft path entirely —
+    and the engine keeps serving exact tokens through the base decode
+    scan."""
+    trace = steady_trace(30)
+    eng = H.drift_engine(spec_k=2, nu=0.5, t0=2.0, fault_rate=0.05,
+                        dt_step=10.0,
+                        fidelity=FidelityPolicy(window=3,
+                                                reprogram_patience=1,
+                                                max_reprograms=2))
+    out = H.run_trace(eng, trace)
+    for rid, (p, g, _) in enumerate(trace):
+        assert out[rid] == H.run_alone(tuple(p), g)
+    fs = eng.fidelity_stats
+    kinds = [e["event"] for e in fs["events"]]
+    assert "disable" in kinds
+    assert fs["disabled"] and fs["spec_k_live"] == 0
+    assert fs["disabled_ticks"] > 0             # exact fallback actually ran
+    assert fs["reprograms"] == 2                # both chances were spent
+    assert fs["fault_fraction"] > 0.5
+    H.audit(eng)
+
+
+def test_same_seed_replay_is_bit_exact_including_sampled():
+    """The determinism contract behind the 'scheduler stats' criterion:
+    two fresh engines with identical seeds serve a mixed greedy/sampled
+    trace to IDENTICAL tokens, fidelity event logs, and counters — the
+    virtual clock keeps wall time out of every decision."""
+    trace = H.random_mixed_trace(np.random.default_rng(11))
+    outs, fstats, sstats = [], [], []
+    for _ in range(2):
+        eng = sawtooth_engine()
+        outs.append(H.run_trace(eng, trace))
+        fstats.append(eng.fidelity_stats)
+        s = eng.spec_stats
+        s.pop("draft_seconds")                  # wall-clock metering only
+        sstats.append(s)
+    assert outs[0] == outs[1]
+    assert fstats[0] == fstats[1]
+    assert sstats[0] == sstats[1]
+
+
+def test_mixed_trace_greedy_cotenants_unaffected_by_injection():
+    """Sampled requests shift with the drafter's proposal distribution
+    (documented: distribution-equivalent, not draw-equivalent), but their
+    greedy co-tenants must still match the slotted oracle exactly."""
+    trace = H.random_mixed_trace(np.random.default_rng(10))
+    eng = sawtooth_engine()
+    out = H.run_trace(eng, trace)
+    slotted = H.run_trace(H.slotted_engine(), trace)
+    for rid, t in enumerate(trace):
+        if t[3] <= 0:
+            assert out[rid] == slotted[rid], \
+                f"injection changed greedy rid {rid}"
+        assert all(0 <= tok < H.CFG.vocab_size for tok in out[rid])
+
+
+def test_drift_requires_spec():
+    with pytest.raises(ValueError):
+        H.drift_engine(spec_k=0)
