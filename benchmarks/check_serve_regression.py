@@ -27,6 +27,12 @@ ROWS = ("serve/cb_tok_per_s[off]", "serve/lockstep_tok_per_s[off]",
         "serve/spec_nonspec_tok_per_s[k4]",
         "serve/spec_speedup_analog_x[k4]",
         "serve/spec_accept_rate[k4]",
+        "serve/kvq_capacity_x[log8]",
+        "serve/kvq_tok_per_s[log8]",
+        "serve/kvq_fp_tok_per_s[log8]",
+        "serve/kvq_rel_x[log8]",
+        "serve/kvq_roundtrip_max_rel[log8]",
+        "serve/kvq_logits_rel_err[log8]",
         "serve/fidelity_reprograms[drift]",
         "serve/fidelity_accept_trough[drift]",
         "serve/fidelity_accept_recovered[drift]",
@@ -49,11 +55,12 @@ def main() -> int:
         baseline = {r["name"]: r for r in json.load(f)["rows"]}
 
     from benchmarks.serve_bench import (bench_continuous, bench_fidelity,
-                                        bench_paged, bench_sharded,
-                                        bench_spec)
+                                        bench_kv_quant, bench_paged,
+                                        bench_sharded, bench_spec)
     fresh = {r["name"]: r for r in bench_continuous("off")}
     fresh.update({r["name"]: r for r in bench_paged("shared_prefix")})
     fresh.update({r["name"]: r for r in bench_spec("k4")})
+    fresh.update({r["name"]: r for r in bench_kv_quant("log8")})
     fresh.update({r["name"]: r for r in bench_fidelity("drift")})
     fresh.update({r["name"]: r for r in bench_sharded("4Lx256d")})
 
@@ -97,6 +104,21 @@ def main() -> int:
         print(f"::warning::speculative acceptance rate {acc:.2f} collapsed "
               f"— the analog drafter is no longer tracking the digital "
               f"path (numerics drift?)")
+    cap = float(fresh["serve/kvq_capacity_x[log8]"]["derived"])
+    if cap < 3.0:
+        print(f"::warning::log8 KV pool capacity advantage {cap:.2f}x fell "
+              f"below the 3x slots-at-fixed-HBM acceptance bar (pool layout "
+              f"or scale granularity changed)")
+    rt = float(fresh["serve/kvq_roundtrip_max_rel[log8]"]["derived"])
+    if rt > 0.04:
+        print(f"::warning::log8 KV round-trip max relative error {rt:.4f} "
+              f"exceeds the committed ~3.7% grid bound (KV_LOG_SPEC moved "
+              f"without updating the contract?)")
+    kvrel = float(fresh["serve/kvq_rel_x[log8]"]["derived"])
+    if kvrel < 0.5:
+        print(f"::warning::log8-pool serve throughput collapsed to "
+              f"{kvrel:.2f}x of the fp pool — the dequantize path got "
+              f"expensive (noise or regression)")
     reps = float(fresh["serve/fidelity_reprograms[drift]"]["derived"])
     if reps < 2:
         print(f"::warning::fidelity loop fired only {reps:.0f} reprogram(s) "

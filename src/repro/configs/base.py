@@ -44,7 +44,8 @@ class ArchConfig:
     embed_scale: bool = False
     scan_remat: bool = True
     supports_long: bool = False       # sub-quadratic -> run long_500k
-    kv_cache_dtype: str = "bf16"      # "int8" = paper-faithful 8-bit cache
+    kv_cache_dtype: str = "bf16"      # "int8"/"log8" = 8-bit cache (uniform
+                                      # or NL-DPE sign-magnitude log grid)
     activation_dtype: object = jnp.bfloat16
     notes: str = ""
     source: str = ""

@@ -156,6 +156,53 @@ def log_spec_for(values, bits: int = 8, eps: float = 1e-6) -> LogQuantSpec:
 
 
 # ---------------------------------------------------------------------------
+# The KV-cache log grid (DESIGN.md §11): the drafter's sign-magnitude log
+# quantizer renormalized per storage granule.  Scales carry the absmax, so
+# magnitudes land on (0, 1] and 7 bits of log grid cover four decades of
+# dynamic range at a uniform ~3.6% max relative error; the int8 sign bit
+# carries the sign and code 0 is the flushed zero (|x| below ~1e-4 of the
+# granule's absmax rounds to nothing a softmax can see).
+# ---------------------------------------------------------------------------
+
+KV_LOG_SPEC = LogQuantSpec(log_lo=float(np.log(1e-4)), log_hi=0.0, bits=7)
+
+# The committed error-bound contract of the log8 KV grid (DESIGN.md §11),
+# asserted by tests/test_engine_differential.py and benchmarks/serve_bench:
+# for every element x of a granule with absmax scale,
+#   |decode(encode(x)) - x| <= max(KV_LOG8_REL_ERR * |x|,
+#                                  KV_LOG8_FLUSH * scale)
+# i.e. half a log-grid step of relative error, except magnitudes under the
+# flush threshold (~1e-4 of the granule's absmax), which reconstruct as 0.
+KV_LOG8_REL_ERR = float(np.expm1(KV_LOG_SPEC.step / 2))         # ~3.7%
+KV_LOG8_FLUSH = float(np.exp(KV_LOG_SPEC.log_lo + KV_LOG_SPEC.step / 2))
+
+
+def kv_decode(codes: jax.Array, scale: jax.Array | None = None,
+              mode: str = "int8") -> jax.Array:
+    """Dequantize signed int8 KV codes (``nn.attention._quantize_kv``'s
+    inverse up to the grid).  Pure jnp on any shape — safe inside a Pallas
+    kernel body, where ``codes`` is one page tile (ps, D) and ``scale`` its
+    (ps,) scale row; ``scale`` broadcasts over the trailing (feature) axis.
+
+    ``"int8"``: value = code * scale (scale carries absmax / 127).
+    ``"log8"``: sign-magnitude — |code| indexes ``KV_LOG_SPEC``'s 7-bit log
+    grid, the int8 sign carries the sign (0 = flushed zero, which
+    ``jnp.sign`` kills for free), and scale carries the granule's absmax.
+    """
+    c = codes.astype(jnp.float32)
+    if mode == "log8":
+        v = jnp.sign(c) * jnp.exp(
+            jnp.abs(c) * KV_LOG_SPEC.step + KV_LOG_SPEC.log_lo)
+    elif mode == "int8":
+        v = c
+    else:
+        raise ValueError(f"unknown kv quant mode {mode!r}")
+    if scale is not None:
+        v = v * scale[..., None]
+    return v
+
+
+# ---------------------------------------------------------------------------
 # Stochastic-free fake-quant for NAF training (straight-through estimator)
 # ---------------------------------------------------------------------------
 

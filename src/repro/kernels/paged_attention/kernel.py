@@ -13,19 +13,29 @@ standard Pallas double-buffering pipeline makes the indirection free).
 
 Grid: (B, Hkv, NB), pages innermost.  Queries ride grouped per KV head
 (GQA) *and* per query position: the q block is that head's (group * q_len,
-D) rows — single-token decode is ``q_len == 1``, and the speculative
-verify pass of ``launch/spec_decode.py`` batches its ``k+1`` positions as
-``q_len == k+1`` so one fetched page feeds every query of the step.
-Ragged masking is per query row: row ``g*q_len + j`` may attend to logical
-positions ``< lengths[b] + j`` (query ``j`` sits ``j`` positions past the
-base length), which makes the causal staircase across the in-flight
-speculative tokens fall out of the same mask that handles partially-filled
+D) rows — single-token decode is ``q_len == 1``, and the ragged prefill /
+speculative-verify grid of ``launch/spec_decode.py`` batches a chunk's C
+positions as ``q_len == C`` so one fetched page feeds every query of the
+step.  Ragged masking is per query row: row ``g*q_len + j`` may attend to
+logical positions ``< lengths[b] + j`` (query ``j`` sits ``j`` positions
+past the base length), which makes the causal staircase across the
+in-flight chunk fall out of the same mask that handles partially-filled
 tail pages.  Online softmax carries running max/denominator across the
 page axis in revisited output buffers, exactly like
 ``kernels/flash_attention``.
 
+Quantized pools (DESIGN.md §11): with ``kv_quant`` set the page tiles hold
+int8 codes and two extra scale operands ride the same block-table index
+map, so each grid step dequantizes ONE (ps, D) page in VMEM with the
+shared ``core.quantization.kv_decode`` formula — the full fp pool never
+exists anywhere.  Block-table entries outside ``[0, num_pages)`` are the
+unmapped-block sentinel: the index map clamps them (the DMA must stay in
+bounds) and the body masks the whole page out of the softmax, mirroring
+the write path's OOB-drop scatter.
+
 VMEM per step (ps=64, D=128, G=8, q_len=5, f32): k/v page tiles 32 KB
-each, q/out 20 KB, m/l tiny -> well under budget at any production shape.
+each (8 KB as int8 codes + 256 B scales), q/out 20 KB, m/l tiny -> well
+under budget at any production shape.
 """
 from __future__ import annotations
 
@@ -37,12 +47,18 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from .. import resolve_interpret
+from ...core.quantization import kv_decode
 
 _NEG_INF = float("-inf")
 
 
-def _paged_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
-                  *, scale: float, ps: int, q_len: int):
+def _paged_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, *rest,
+                  scale: float, ps: int, q_len: int, num_pages: int,
+                  kv_quant: str | None):
+    if kv_quant is not None:
+        ks_ref, vs_ref, o_ref, m_ref, l_ref = rest
+    else:
+        o_ref, m_ref, l_ref = rest
     bb, i = pl.program_id(0), pl.program_id(2)
     nb = pl.num_programs(2)
 
@@ -53,8 +69,12 @@ def _paged_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
         l_ref[...] = jnp.zeros_like(l_ref)
 
     q = q_ref[0, 0] * scale                        # (G*q_len, d)
-    k = k_ref[0, 0]                                # (ps, d)
-    v = v_ref[0, 0]
+    if kv_quant is not None:                       # dequant ONE page in VMEM
+        k = kv_decode(k_ref[0, 0], ks_ref[0, 0], kv_quant)
+        v = kv_decode(v_ref[0, 0], vs_ref[0, 0], kv_quant)
+    else:
+        k = k_ref[0, 0]                            # (ps, d)
+        v = v_ref[0, 0]
     gq = q.shape[0]
     s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)   # (G*q_len, ps)
 
@@ -62,7 +82,11 @@ def _paged_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
     # positions < lengths[b] + j (TPU needs >= 2-d iota: broadcasted)
     pos = i * ps + jax.lax.broadcasted_iota(jnp.int32, (gq, ps), 1)
     qoff = jax.lax.broadcasted_iota(jnp.int32, (gq, ps), 0) % q_len
-    s = jnp.where(pos < len_ref[bb] + qoff, s, _NEG_INF)
+    # sentinel (unmapped) block: the index map clamped the DMA to a real
+    # page, so kill the whole page here instead of aliasing its contents
+    blk = bt_ref[bb, i]
+    ok = (pos < len_ref[bb] + qoff) & (blk >= 0) & (blk < num_pages)
+    s = jnp.where(ok, s, _NEG_INF)
 
     m_old = m_ref[0, 0]                            # (G*q_len,)
     l_old = l_ref[0, 0]
@@ -86,16 +110,21 @@ def _paged_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
         o_ref[0, 0] = acc
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("kv_quant", "interpret"))
 def paged_attention_kernel(q: jax.Array, k_pages: jax.Array,
                            v_pages: jax.Array, block_tables: jax.Array,
                            lengths: jax.Array,
+                           k_scale: jax.Array | None = None,
+                           v_scale: jax.Array | None = None,
+                           kv_quant: str | None = None,
                            interpret: bool | None = None) -> jax.Array:
-    """q: (B, Hq, Q, D); k_pages/v_pages: (P, Hkv, ps, D); block_tables:
-    (B, NB) int32 (entries must be valid page ids — clamp dead slots);
-    lengths: (B,) int32, 1 <= lengths[b] <= NB*ps — query row ``j`` of
-    sequence ``b`` attends to logical positions ``[0, lengths[b] + j)``.
-    Returns (B, Hq, Q, D) f32.
+    """q: (B, Hq, Q, D); k_pages/v_pages: (P, Hkv, ps, D) — fp values, or
+    int8 codes when ``kv_quant`` names a grid and k_scale/v_scale carry the
+    (P, Hkv, ps) per-(page, head, position) scales; block_tables: (B, NB)
+    int32 (entries outside [0, P) are the unmapped sentinel and contribute
+    nothing); lengths: (B,) int32, 1 <= lengths[b] <= NB*ps — query row
+    ``j`` of sequence ``b`` attends to logical positions
+    ``[0, lengths[b] + j)``.  Returns (B, Hq, Q, D) f32.
     """
     b, hq, q_len, d = q.shape
     num_pages, hkv, ps, _ = k_pages.shape
@@ -106,14 +135,25 @@ def paged_attention_kernel(q: jax.Array, k_pages: jax.Array,
     # (B, Hkv, G*q_len, D): row r = g*q_len + j keeps query j of group g
     qg = q.reshape(b, hkv, g, q_len, d).reshape(b, hkv, g * q_len, d)
 
-    kv_spec = pl.BlockSpec((1, 1, ps, d),
-                           lambda bb, hh, i, bt, ln: (bt[bb, i], hh, 0, 0))
+    def page_idx(bb, hh, i, bt, ln):
+        # sentinel entries clamp for the DMA; the body masks them fully
+        return (jnp.clip(bt[bb, i], 0, num_pages - 1), hh, 0, 0)
+
+    kv_spec = pl.BlockSpec((1, 1, ps, d), page_idx)
+    in_specs = [pl.BlockSpec((1, 1, g * q_len, d),
+                             lambda bb, hh, i, bt, ln: (bb, hh, 0, 0)),
+                kv_spec, kv_spec]
+    operands = [qg, k_pages, v_pages]
+    if kv_quant is not None:
+        sc_spec = pl.BlockSpec(
+            (1, 1, ps), lambda bb, hh, i, bt, ln:
+            (jnp.clip(bt[bb, i], 0, num_pages - 1), hh, 0))
+        in_specs += [sc_spec, sc_spec]
+        operands += [k_scale, v_scale]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(b, hkv, nb),
-        in_specs=[pl.BlockSpec((1, 1, g * q_len, d),
-                               lambda bb, hh, i, bt, ln: (bb, hh, 0, 0)),
-                  kv_spec, kv_spec],
+        in_specs=in_specs,
         out_specs=[pl.BlockSpec((1, 1, g * q_len, d),
                                 lambda bb, hh, i, bt, ln: (bb, hh, 0, 0)),
                    pl.BlockSpec((1, 1, g * q_len),
@@ -122,11 +162,12 @@ def paged_attention_kernel(q: jax.Array, k_pages: jax.Array,
                                 lambda bb, hh, i, bt, ln: (bb, hh, 0))],
     )
     out = pl.pallas_call(
-        functools.partial(_paged_kernel, scale=scale, ps=ps, q_len=q_len),
+        functools.partial(_paged_kernel, scale=scale, ps=ps, q_len=q_len,
+                          num_pages=num_pages, kv_quant=kv_quant),
         grid_spec=grid_spec,
         out_shape=[jax.ShapeDtypeStruct((b, hkv, g * q_len, d), jnp.float32),
                    jax.ShapeDtypeStruct((b, hkv, g * q_len), jnp.float32),
                    jax.ShapeDtypeStruct((b, hkv, g * q_len), jnp.float32)],
         interpret=resolve_interpret(interpret),
-    )(block_tables, lengths, qg, k_pages, v_pages)
+    )(block_tables, lengths, *operands)
     return out[0].reshape(b, hkv, g, q_len, d).reshape(b, hq, q_len, d)

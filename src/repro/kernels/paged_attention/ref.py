@@ -8,6 +8,16 @@ plain decode; ``j > 0`` is the speculative verify staircase).  This is the
 same dense math ``nn.attention.cached_attention`` performs against a
 contiguous slotted cache — the bitwise anchor the paged serve engine is
 tested against.
+
+Quantized pools (``kv_quant`` of "int8"/"log8") hand the oracle the raw
+int8 codes plus per-(page, head, position) scales; dequantization happens
+after the gather with the shared ``core.quantization.kv_decode`` formula,
+so this path is the accuracy oracle the in-kernel dequant must conform to.
+
+Block-table entries outside ``[0, num_pages)`` are the unmapped-block
+sentinel: their positions are masked out of the softmax entirely — the
+read-side mirror of the write path's OOB-drop scatter — so a ``lengths``
+overrun can never pull another slot's pages into a score row.
 """
 from __future__ import annotations
 
@@ -16,35 +26,52 @@ import math
 import jax
 import jax.numpy as jnp
 
+from ...core.quantization import kv_decode
+
 NEG_INF = float(jnp.finfo(jnp.float32).min)
 
 
 def paged_attention_ref(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
-                        block_tables: jax.Array,
-                        lengths: jax.Array) -> jax.Array:
+                        block_tables: jax.Array, lengths: jax.Array,
+                        k_scale: jax.Array | None = None,
+                        v_scale: jax.Array | None = None,
+                        kv_quant: str | None = None) -> jax.Array:
     """q: (B, Hq, Q, D); k_pages/v_pages: (P, Hkv, ps, D);
-    block_tables: (B, NB) int32; lengths: (B,) int32 with 1 <= len <= NB*ps.
+    block_tables: (B, NB) int32; lengths: (B,) int32 with 1 <= len <= NB*ps;
+    k_scale/v_scale: (P, Hkv, ps) f32 when ``kv_quant`` is set (pages then
+    hold int8 codes on that grid).
 
     Query row ``j`` of sequence ``b`` attends to logical positions
     ``[0, lengths[b] + j)``, position ``p`` stored in page
-    ``block_tables[b, p // ps]`` at offset ``p % ps``.  Returns
-    (B, Hq, Q, D) in f32.
+    ``block_tables[b, p // ps]`` at offset ``p % ps``; positions mapped
+    through sentinel (out-of-range) block-table entries are dropped.
+    Returns (B, Hq, Q, D) in f32.
     """
     b, hq, q_len, d = q.shape
-    _, hkv, ps, _ = k_pages.shape
+    num_pages, hkv, ps, _ = k_pages.shape
     nb = block_tables.shape[1]
     g = hq // hkv
+    bt = block_tables.astype(jnp.int32)
+    btc = jnp.clip(bt, 0, num_pages - 1)            # safe gather index only
 
-    def gather(pages):
-        x = pages[block_tables]                     # (B, NB, Hkv, ps, D)
-        return jnp.moveaxis(x, 2, 1).reshape(b, hkv, nb * ps, d)
+    def gather(pages, scales):
+        x = pages[btc]                              # (B, NB, Hkv, ps, D)
+        x = jnp.moveaxis(x, 2, 1).reshape(b, hkv, nb * ps, d)
+        if kv_quant is None:
+            return x.astype(jnp.float32)
+        s = jnp.moveaxis(scales[btc], 2, 1).reshape(b, hkv, nb * ps)
+        return kv_decode(x, s, kv_quant)
 
-    k = gather(k_pages).astype(jnp.float32)
-    v = gather(v_pages).astype(jnp.float32)
+    k = gather(k_pages, k_scale)
+    v = gather(v_pages, v_scale)
     qg = q.reshape(b, hkv, g, q_len, d).astype(jnp.float32)
     s = jnp.einsum("bkgqd,bkld->bkgql", qg, k) / math.sqrt(d)
     allowed = lengths[:, None] + jnp.arange(q_len)              # (B, Q)
     valid = jnp.arange(nb * ps)[None, None] < allowed[..., None]  # (B, Q, L)
+    # sentinel blocks are unmapped: drop every position they would cover
+    # (matches the dense path, whose writes through them scatter OOB)
+    blk_ok = (bt >= 0) & (bt < num_pages)                       # (B, NB)
+    valid = valid & jnp.repeat(blk_ok, ps, axis=1)[:, None]
     s = jnp.where(valid[:, None, None], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bkgql,bkld->bkgqd", p, v)

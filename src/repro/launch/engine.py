@@ -121,6 +121,7 @@ class ServeEngine:
                  nldpe: NLDPEConfig = OFF, prefill_chunk: int = 16,
                  decode_block: int = 4, eos_id: int = -1,
                  batch_groups: int = 1, dtype=jnp.float32,
+                 kv_quant: str | None = None,
                  mesh=None, rules=None):
         bad = [t for t in cfg.layer_pattern if t not in ATTN_TYPES]
         if bad:
@@ -130,6 +131,18 @@ class ServeEngine:
         if prefill_chunk < 1 or decode_block < 1 or max_slots < 1:
             raise ValueError("max_slots, prefill_chunk, decode_block >= 1")
         prefill_chunk = min(prefill_chunk, max_len)
+        # kv_quant selects the KV-cache storage grid (DESIGN.md §11):
+        # "int8" = uniform absmax grid, "log8" = the drafter's sign-magnitude
+        # log grid, None = keep cfg.kv_cache_dtype.  It is carried on the
+        # config (the single source the cache init, spec trees, and
+        # AttnSpec.kv_quant all read), so setting it here is exactly
+        # dataclasses.replace(cfg, kv_cache_dtype=...).
+        if kv_quant not in (None, "int8", "log8"):
+            raise ValueError('kv_quant must be None, "int8", or "log8"')
+        if kv_quant is not None:
+            cfg = dataclasses.replace(cfg, kv_cache_dtype=kv_quant)
+        self.kv_quant = (cfg.kv_cache_dtype
+                         if cfg.kv_cache_dtype in ("int8", "log8") else None)
         self.cfg = cfg
         # Mesh-sharded serving (DESIGN.md §9): with ``mesh`` set, params and
         # every cache/state leaf are placed per the logical-axis ``rules``
@@ -633,6 +646,7 @@ class PagedServeEngine(ServeEngine):
                  cache_generations: bool = True,
                  drift: DriftInjection | None = None,
                  fidelity: FidelityPolicy | None = None,
+                 kv_quant: str | None = None,
                  mesh=None, rules=None):
         if "local" in cfg.layer_pattern:
             raise NotImplementedError(
@@ -648,7 +662,16 @@ class PagedServeEngine(ServeEngine):
             num_pages = max_slots * self.n_blocks    # slotted-parity default
         self.num_pages = num_pages
         self.pool = PagePool(num_pages, page_size)
-        self._fp = nldpe_fingerprint(nldpe)
+        # the radix root is keyed by byte semantics: NL-DPE numerics AND
+        # the KV storage grid — a quantized pool's pages must never be
+        # prefix-hit by an fp pool (or "int8" by "log8") for the same
+        # prompt, their bytes mean different things
+        if kv_quant not in (None, "int8", "log8"):
+            raise ValueError('kv_quant must be None, "int8", or "log8"')
+        eff_quant = kv_quant or (cfg.kv_cache_dtype
+                                 if cfg.kv_cache_dtype in ("int8", "log8")
+                                 else None)
+        self._fp = nldpe_fingerprint(nldpe, eff_quant)
         self._slot_pages: list[list[int] | None] = [None] * max_slots
         self.spec_k = int(spec_k)
         # drafter numerics: full analog path by default (log-domain DMMul +
@@ -661,7 +684,7 @@ class PagedServeEngine(ServeEngine):
                          nldpe=nldpe, prefill_chunk=prefill_chunk,
                          decode_block=decode_block, eos_id=eos_id,
                          batch_groups=batch_groups, dtype=dtype,
-                         mesh=mesh, rules=rules)
+                         kv_quant=kv_quant, mesh=mesh, rules=rules)
         self._setup_fn = jax.jit(self._ctx(self._build_setup_fn()),
                                  donate_argnums=(0,))
         self._copy_fn = jax.jit(self._ctx(self._build_copy_fn()),

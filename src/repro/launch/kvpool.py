@@ -57,10 +57,15 @@ from collections import deque
 import numpy as np
 
 
-def nldpe_fingerprint(nldpe) -> tuple:
-    """Stable, hashable fingerprint of an NLDPEConfig (nested dataclasses
-    flattened to sorted (name, value) tuples).  Two configs with the same
-    fingerprint produce bit-identical cached K/V for the same tokens."""
+def nldpe_fingerprint(nldpe, kv_quant: str | None = None) -> tuple:
+    """Stable, hashable fingerprint of the pool's byte semantics: the
+    NLDPEConfig (nested dataclasses flattened to sorted (name, value)
+    tuples) plus the KV-cache storage mode.  Two configs with the same
+    fingerprint produce bit-identical cached K/V bytes for the same
+    tokens — which is exactly what radix prefix sharing requires, so
+    ``kv_quant`` MUST be part of the root: an fp pool and a quantized pool
+    (or "int8" vs "log8") store different bytes for the same prompt and
+    must never cross-hit each other's prefix pages."""
     def flat(x):
         if dataclasses.is_dataclass(x) and not isinstance(x, type):
             return tuple(sorted(
@@ -69,7 +74,7 @@ def nldpe_fingerprint(nldpe) -> tuple:
         if isinstance(x, (list, tuple)):
             return tuple(flat(v) for v in x)
         return x
-    return flat(nldpe)
+    return (("kv_quant", kv_quant), ("nldpe", flat(nldpe)))
 
 
 class RadixNode:

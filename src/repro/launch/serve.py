@@ -204,6 +204,14 @@ def run(argv=None):
     p.add_argument("--drift-dt", type=float, default=60.0, metavar="S",
                    help="virtual seconds per decode position for --drift "
                         "(accelerated aging clock; default 60)")
+    p.add_argument("--kv-quant", choices=("log8", "int8"), default=None,
+                   help="store KV pages as 8-bit codes + per-(page, head, "
+                        "position) scales for --paged: 'log8' = the "
+                        "drafter's sign-magnitude log grid (DESIGN.md "
+                        "§11), 'int8' = uniform absmax grid.  ~3.5x pool "
+                        "capacity at the same HBM; with "
+                        "NLDPE_PAGED_KERNEL=1 the Pallas kernel "
+                        "dequantizes per page tile in VMEM")
     p.add_argument("--slots", type=int, default=4,
                    help="KV-cache slots for --continuous/--paged")
     p.add_argument("--requests", type=int, default=12,
@@ -274,6 +282,7 @@ def run(argv=None):
                                spec_draft=spec_draft, drift=drift,
                                fidelity=(fidelity if drift is not None
                                          else None),
+                               kv_quant=args.kv_quant,
                                mesh=mesh, rules=args.mesh_rules)
         t0 = time.time()
         comps = eng.run(reqs)
@@ -281,6 +290,8 @@ def run(argv=None):
         n_tok = sum(len(c.tokens) for c in comps)
         st = eng.stats
         mode = f", spec_k={args.spec}" if args.spec else ""
+        if args.kv_quant:
+            mode += f", kv_quant={args.kv_quant}"
         if mesh is not None:
             mode += f", mesh {args.mesh} [{eng.rules.name}]"
         print(f"[serve] paged: {len(comps)} requests, {n_tok} tokens in "

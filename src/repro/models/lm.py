@@ -59,7 +59,9 @@ def _attn_spec(cfg, btype: str) -> AttnSpec:
         d_model=cfg.d_model, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
         head_dim=cfg.head_dim or cfg.d_model // cfg.n_heads,
         qkv_bias=cfg.qkv_bias, rope_theta=theta, window=window,
-        qk_norm=cfg.qk_norm, softcap=cfg.attn_softcap)
+        qk_norm=cfg.qk_norm, softcap=cfg.attn_softcap,
+        kv_quant=(cfg.kv_cache_dtype
+                  if cfg.kv_cache_dtype in ("int8", "log8") else None))
 
 
 def init_block(key, cfg, btype: str):
@@ -88,7 +90,7 @@ def init_block_cache(cfg, btype: str, batch: int, max_len: int,
                      ring_slack: int = 0,
                      paged: tuple[int, int] | None = None):
     if btype in ATTN_TYPES:
-        quantized = cfg.kv_cache_dtype == "int8"
+        quantized = cfg.kv_cache_dtype in ("int8", "log8")
         if paged is not None:
             num_pages, page_size = paged
             return {"attn": init_paged_cache(
@@ -229,7 +231,8 @@ def cache_pspecs(cfg, batch: int, max_len: int, mesh, rules,
         if paged is not None:
             from ..nn.attention import cache_specs
             return cache_specs(s, batch, max_len, mesh, rules, paged=paged,
-                               quantized=cfg.kv_cache_dtype == "int8")
+                               quantized=cfg.kv_cache_dtype in ("int8",
+                                                                "log8"))
         length = min(max_len, s.window + ring_slack) if s.window else max_len
         kv_shape = (batch, s.n_kv_heads, length, s.head_dim)
         model_size = mesh.shape.get("model", 1) if mesh is not None else 1
@@ -241,7 +244,7 @@ def cache_pspecs(cfg, batch: int, max_len: int, mesh, rules,
         pos = (resolve(rules, ("slots", None), (batch, length), mesh)
                if slotted else P())
         tree = {"k": kv, "v": kv, "pos": pos}
-        if cfg.kv_cache_dtype == "int8":
+        if cfg.kv_cache_dtype in ("int8", "log8"):
             sc = resolve(rules, kv_axes[:3], kv_shape[:3], mesh)
             tree.update({"k_scale": sc, "v_scale": sc})
         return tree

@@ -25,6 +25,7 @@ import jax
 import jax.numpy as jnp
 
 from ..core.engine import NLDPEConfig, OFF
+from ..core.quantization import KV_LOG_SPEC, kv_decode
 from ..parallel.context import shard
 from .basic import apply_rope, linear_apply, param, rmsnorm_apply, rmsnorm_init
 from .module import param as _param
@@ -43,6 +44,7 @@ class AttnSpec:
     window: int | None = None          # sliding-window size (None = global)
     qk_norm: bool = False              # gemma3-style per-head RMS on q/k
     softcap: float | None = None
+    kv_quant: str | None = None        # KV cache storage grid: "int8"/"log8"
 
     @property
     def group(self) -> int:
@@ -333,19 +335,36 @@ def paged_dense_view(cache) -> dict:
     return view
 
 
-def _quantize_kv(x: jax.Array):
-    """(B, H, S, D) -> int8 codes + per-(B, H, S) scale."""
-    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0
-    scale = jnp.maximum(scale, 1e-8)
-    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
-                 -127, 127).astype(jnp.int8)
+def _quantize_kv(x: jax.Array, mode: str = "int8"):
+    """(B, H, S, D) -> int8 codes + per-(B, H, S) scale.
+
+    ``"int8"``: uniform grid — scale carries absmax / 127, code =
+    round(x / scale).  ``"log8"``: the drafter's sign-magnitude log grid
+    (``KV_LOG_SPEC``) renormalized per granule — scale carries the absmax,
+    |code| indexes the 7-bit log grid of |x| / absmax, and the int8 sign
+    carries the sign (0 = flushed zero).  Either way the inverse is
+    ``core.quantization.kv_decode`` — the one formula shared by the dense
+    view, the ref oracle, and the Pallas kernel's in-tile dequant.
+    """
+    xf = x.astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(xf), axis=-1)
+    if mode == "log8":
+        scale = jnp.maximum(absmax, 1e-8)
+        code, sign = KV_LOG_SPEC.encode(xf / scale[..., None])
+        q = (sign * code.astype(jnp.float32)).astype(jnp.int8)
+    elif mode == "int8":
+        scale = jnp.maximum(absmax / 127.0, 1e-8)
+        q = jnp.clip(jnp.round(xf / scale[..., None]),
+                     -127, 127).astype(jnp.int8)
+    else:
+        raise ValueError(f"unknown kv quant mode {mode!r}")
     return q, scale
 
 
-def _dequantize_kv(cache, name: str) -> jax.Array:
+def _dequantize_kv(cache, name: str, kv_quant: str | None = None) -> jax.Array:
     if f"{name}_scale" in cache:
-        return (cache[name].astype(jnp.float32)
-                * cache[f"{name}_scale"][..., None])
+        return kv_decode(cache[name], cache[f"{name}_scale"],
+                         kv_quant or "int8")
     return cache[name].astype(jnp.float32)
 
 
@@ -386,7 +405,8 @@ def cache_specs(s: AttnSpec, batch: int, max_len: int, mesh, rules,
     return {"k": spec, "v": spec, "pos": pos}
 
 
-def update_cache(cache, k_new, v_new, pos: jax.Array, write_mask=None):
+def update_cache(cache, k_new, v_new, pos: jax.Array, write_mask=None,
+                 kv_quant: str | None = None):
     """Insert new K/V steps at their ring slots (pos % len).
 
     Lockstep cache (``pos`` leaf (L,)): ``pos`` must be a scalar — one step
@@ -407,8 +427,8 @@ def update_cache(cache, k_new, v_new, pos: jax.Array, write_mask=None):
                              "cache with slotted=True for per-slot positions")
         slot = pos % length
         if "k_scale" in cache:
-            kq, ks = _quantize_kv(k_new)
-            vq, vs = _quantize_kv(v_new)
+            kq, ks = _quantize_kv(k_new, kv_quant or "int8")
+            vq, vs = _quantize_kv(v_new, kv_quant or "int8")
             out["k"] = jax.lax.dynamic_update_slice_in_dim(cache["k"], kq, slot, axis=2)
             out["v"] = jax.lax.dynamic_update_slice_in_dim(cache["v"], vq, slot, axis=2)
             out["k_scale"] = jax.lax.dynamic_update_slice_in_dim(cache["k_scale"], ks, slot, axis=2)
@@ -423,7 +443,8 @@ def update_cache(cache, k_new, v_new, pos: jax.Array, write_mask=None):
         return out
 
     if "bt" in cache:                               # paged layout
-        return _update_cache_paged(cache, k_new, v_new, pos, write_mask)
+        return _update_cache_paged(cache, k_new, v_new, pos, write_mask,
+                                   kv_quant=kv_quant)
 
     # slotted layout: per-slot scatter, each batch row writes only its own
     # cache line (cross-slot leakage is structurally impossible)
@@ -437,8 +458,8 @@ def update_cache(cache, k_new, v_new, pos: jax.Array, write_mask=None):
         slots = jnp.where(write_mask[:, None], slots, length)
     bidx = jnp.arange(b)[:, None]
     if "k_scale" in cache:
-        kq, ks = _quantize_kv(k_new)
-        vq, vs = _quantize_kv(v_new)
+        kq, ks = _quantize_kv(k_new, kv_quant or "int8")
+        vq, vs = _quantize_kv(v_new, kv_quant or "int8")
         out["k"] = cache["k"].at[bidx, :, slots].set(
             jnp.swapaxes(kq, 1, 2), mode="drop")
         out["v"] = cache["v"].at[bidx, :, slots].set(
@@ -456,7 +477,8 @@ def update_cache(cache, k_new, v_new, pos: jax.Array, write_mask=None):
     return out
 
 
-def _update_cache_paged(cache, k_new, v_new, pos: jax.Array, write_mask=None):
+def _update_cache_paged(cache, k_new, v_new, pos: jax.Array, write_mask=None,
+                        kv_quant: str | None = None):
     """Scatter new K/V steps through the block table into the page pool.
 
     ``pos`` is (B,) — one step per slot — or (B, C) — C steps (chunked
@@ -484,8 +506,8 @@ def _update_cache_paged(cache, k_new, v_new, pos: jax.Array, write_mask=None):
         ok = ok & write_mask[:, None]
     page = jnp.where(ok, page, num_pages)          # OOB scatter -> dropped
     if "k_scale" in cache:
-        kq, ks = _quantize_kv(k_new)
-        vq, vs = _quantize_kv(v_new)
+        kq, ks = _quantize_kv(k_new, kv_quant or "int8")
+        vq, vs = _quantize_kv(v_new, kv_quant or "int8")
         out["k"] = cache["k"].at[page, :, offset].set(
             jnp.swapaxes(kq, 1, 2), mode="drop")
         out["v"] = cache["v"].at[page, :, offset].set(
@@ -505,20 +527,29 @@ def _update_cache_paged(cache, k_new, v_new, pos: jax.Array, write_mask=None):
     return out
 
 
-def _paged_kernel_dispatch(cache, q: jax.Array, lengths: jax.Array):
+def _paged_kernel_dispatch(cache, q: jax.Array, lengths: jax.Array,
+                           kv_quant: str | None = None):
     """Route the NLDPE_PAGED_KERNEL opt-in through the Pallas kernel —
     per-shard under ``shard_map`` when an ambient sharding context is
     installed (GSPMD cannot partition a ``pallas_call``), plain otherwise.
-    ``q`` is (B, Hq, D) decode or (B, Hq, Q, D) chunk/verify queries."""
+    ``q`` is (B, Hq, D) decode or (B, Hq, Q, D) chunk/verify queries.
+    Quantized pools hand the kernel the raw int8 code pools plus their
+    scales — dequantization happens per page tile inside the grid, so the
+    fp pool is never materialized."""
     from ..kernels.paged_attention.ops import (paged_attention,
                                                paged_attention_sharded)
     from ..parallel.context import current as _sharding_context
+    ks, vs = cache.get("k_scale"), cache.get("v_scale")
+    kv_quant = (kv_quant or "int8") if ks is not None else None
     ctx = _sharding_context()
     if ctx is not None:
         mesh, rules = ctx
         return paged_attention_sharded(q, cache["k"], cache["v"],
-                                       cache["bt"], lengths, mesh, rules)
-    return paged_attention(q, cache["k"], cache["v"], cache["bt"], lengths)
+                                       cache["bt"], lengths, mesh, rules,
+                                       k_scale=ks, v_scale=vs,
+                                       kv_quant=kv_quant)
+    return paged_attention(q, cache["k"], cache["v"], cache["bt"], lengths,
+                           k_scale=ks, v_scale=vs, kv_quant=kv_quant)
 
 
 def cache_valid_mask(kp: jax.Array, q_pos: jax.Array, window: int | None):
@@ -544,6 +575,29 @@ def cache_valid_mask(kp: jax.Array, q_pos: jax.Array, window: int | None):
     return valid
 
 
+def _nldpe_cached(nldpe: NLDPEConfig, q, att, valid, s: AttnSpec):
+    """NL-DPE attention over a dense cache view without repeating K/V.
+
+    GQA folds the group axis into query rows instead of repeating the
+    cached K/V to Hq heads (which would materialize a full (B, Hq, L, D)
+    fp copy of the pool per layer per tick): query head
+    ``kv_head * g + g_idx`` becomes row ``g_idx * Q + j`` of its KV head's
+    query block.  The log-domain grids are elementwise and the softmax is
+    row-independent, so the folded form is bit-identical to the repeated
+    one — and ``nldpe.attention`` sees matching head counts, so its own
+    repeat branch never fires.  ``valid``: (B|1, Q, L) per-query validity.
+    """
+    b, hq, nq, d = q.shape
+    g = s.group
+    k = _dequantize_kv(att, "k", s.kv_quant).astype(q.dtype)
+    v = _dequantize_kv(att, "v", s.kv_quant).astype(q.dtype)
+    qf = q.reshape(b, s.n_kv_heads, g, nq, d).reshape(
+        b, s.n_kv_heads, g * nq, d)
+    msk = jnp.tile(valid, (1, g, 1))       # row g_idx*Q + j uses valid[:, j]
+    o = nldpe.attention(qf, k, v, causal=False, mask=msk[:, None])
+    return o.reshape(b, s.n_kv_heads, g, nq, d).reshape(b, hq, nq, d)
+
+
 def cached_attention(q, cache, q_pos: jax.Array, s: AttnSpec, softcap=None):
     """q: (B, Hq, Q, D) against the full cache with validity masking.
 
@@ -555,7 +609,8 @@ def cached_attention(q, cache, q_pos: jax.Array, s: AttnSpec, softcap=None):
     b, hq, nq, d = q.shape
     g = s.group
     qg = q.reshape(b, s.n_kv_heads, g, nq, d).astype(jnp.float32)
-    k, v = _dequantize_kv(cache, "k"), _dequantize_kv(cache, "v")
+    k = _dequantize_kv(cache, "k", s.kv_quant)
+    v = _dequantize_kv(cache, "v", s.kv_quant)
     scores = jnp.einsum("bkgqd,bkld->bkgql", qg, k) / math.sqrt(d)
     if softcap:
         scores = jnp.tanh(scores / softcap) * softcap
@@ -602,22 +657,24 @@ def attn_apply(p, s: AttnSpec, x: jax.Array, *, positions: jax.Array,
             pos = positions[:, 0]                  # (B,) per-slot offsets
         else:
             pos = positions[0]
-        cache = update_cache(cache, k, v, pos, write_mask=write_mask)
+        cache = update_cache(cache, k, v, pos, write_mask=write_mask,
+                             kv_quant=s.kv_quant)
         if ("bt" in cache and pos.ndim == 1
                 and not nldpe.enabled and s.softcap is None
-                and "k_scale" not in cache
                 and os.environ.get("NLDPE_PAGED_KERNEL", "0")
                 not in ("", "0")):
             # opt-in TPU hot path: stream pages through the Pallas kernel
             # (block-table gather inside the grid) instead of materializing
-            # the dense view.  Matches the dense path within float
-            # tolerance, not bitwise — hence the explicit switch; engine
-            # caches are contiguous, so valid lanes are [0, pos] per slot.
-            # Under an ambient mesh the kernel dispatches per-shard via
-            # shard_map (GSPMD cannot partition a pallas_call), block
-            # table replicated across the model axis (DESIGN.md §9).
+            # the dense view — quantized pools dequantize per page tile in
+            # VMEM.  Matches the dense path within float tolerance, not
+            # bitwise — hence the explicit switch; engine caches are
+            # contiguous, so valid lanes are [0, pos] per slot.  Under an
+            # ambient mesh the kernel dispatches per-shard via shard_map
+            # (GSPMD cannot partition a pallas_call), block table
+            # replicated across the model axis (DESIGN.md §9).
             o = _paged_kernel_dispatch(cache, q[:, :, 0],
-                                       pos.astype(jnp.int32) + 1)[:, :, None]
+                                       pos.astype(jnp.int32) + 1,
+                                       kv_quant=s.kv_quant)[:, :, None]
             o = shard(o, "batch", "heads", None, None)
             o = shard(o, "batch", "o_heads", None, None)
             y = jnp.einsum("bhsk,hkd->bsd", o, p["wo"].astype(o.dtype))
@@ -627,14 +684,12 @@ def attn_apply(p, s: AttnSpec, x: jax.Array, *, positions: jax.Array,
         # NLDPE_PAGED_KERNEL=1 above opts decode into the kernel itself)
         att = paged_dense_view(cache) if "bt" in cache else cache
         if nldpe.enabled:
-            # NL-DPE decode: log-domain DMMul over the cached keys/values
+            # NL-DPE decode: log-domain DMMul over the cached keys/values,
+            # grouped (GQA folded into query rows — K/V never repeat)
             valid = cache_valid_mask(att["pos"],
                                      pos[:, None] if pos.ndim else pos,
                                      s.window)                     # (B|1,1,L)
-            kr = jnp.repeat(_dequantize_kv(att, "k"), s.group, axis=1)
-            vr = jnp.repeat(_dequantize_kv(att, "v"), s.group, axis=1)
-            o = nldpe.attention(q, kr.astype(q.dtype), vr.astype(q.dtype),
-                                causal=False, mask=valid[:, None])
+            o = _nldpe_cached(nldpe, q, att, valid, s)
         else:
             o = cached_attention(q, att, pos, s, s.softcap)
     elif mode == "chunk":
@@ -644,9 +699,9 @@ def attn_apply(p, s: AttnSpec, x: jax.Array, *, positions: jax.Array,
                              "(init_cache(..., slotted=True))")
         qpos = (positions if positions.ndim == 2
                 else jnp.broadcast_to(positions[None, :], (b, seq)))
-        cache = update_cache(cache, k, v, qpos, write_mask=write_mask)
+        cache = update_cache(cache, k, v, qpos, write_mask=write_mask,
+                             kv_quant=s.kv_quant)
         if ("bt" in cache and not nldpe.enabled and s.softcap is None
-                and "k_scale" not in cache
                 and os.environ.get("NLDPE_PAGED_KERNEL", "0")
                 not in ("", "0")):
             # opt-in TPU hot path, q_len > 1: chunk queries sit at
@@ -658,7 +713,8 @@ def attn_apply(p, s: AttnSpec, x: jax.Array, *, positions: jax.Array,
             # opt-in below.
             lengths = jnp.clip(qpos[:, 0].astype(jnp.int32) + 1, 1,
                                cache["pos"].shape[1])
-            o = _paged_kernel_dispatch(cache, q, lengths)
+            o = _paged_kernel_dispatch(cache, q, lengths,
+                                       kv_quant=s.kv_quant)
             o = shard(o, "batch", "heads", None, None)
             o = shard(o, "batch", "o_heads", None, None)
             y = jnp.einsum("bhsk,hkd->bsd", o, p["wo"].astype(o.dtype))
@@ -666,10 +722,7 @@ def attn_apply(p, s: AttnSpec, x: jax.Array, *, positions: jax.Array,
         att = paged_dense_view(cache) if "bt" in cache else cache
         if nldpe.enabled:
             valid = cache_valid_mask(att["pos"], qpos, s.window)    # (B,S,L)
-            kr = jnp.repeat(_dequantize_kv(att, "k"), s.group, axis=1)
-            vr = jnp.repeat(_dequantize_kv(att, "v"), s.group, axis=1)
-            o = nldpe.attention(q, kr.astype(q.dtype), vr.astype(q.dtype),
-                                causal=False, mask=valid[:, None])
+            o = _nldpe_cached(nldpe, q, att, valid, s)
         else:
             o = cached_attention(q, att, qpos, s, s.softcap)
     else:
@@ -705,8 +758,8 @@ def attn_apply(p, s: AttnSpec, x: jax.Array, *, positions: jax.Array,
             else:
                 new = {"pos": cache["pos"].at[slots].set(pos_new)}
             if "k_scale" in cache:
-                kq, ks = _quantize_kv(k[:, :, -take:])
-                vq, vs = _quantize_kv(v[:, :, -take:])
+                kq, ks = _quantize_kv(k[:, :, -take:], s.kv_quant or "int8")
+                vq, vs = _quantize_kv(v[:, :, -take:], s.kv_quant or "int8")
                 new["k"] = cache["k"].at[:, :, slots].set(kq)
                 new["v"] = cache["v"].at[:, :, slots].set(vq)
                 new["k_scale"] = cache["k_scale"].at[:, :, slots].set(ks)

@@ -75,10 +75,12 @@ def mesh_for(mesh_shape):
     return _STATE[key]
 
 
-def slotted_engine(mesh_shape=None) -> ServeEngine:
-    key = ("slotted", None if mesh_shape is None else tuple(mesh_shape))
+def slotted_engine(mesh_shape=None, **over) -> ServeEngine:
+    key = ("slotted", None if mesh_shape is None else tuple(mesh_shape),
+           tuple(sorted(over.items())))
     if key not in _STATE:
-        _STATE[key] = ServeEngine(CFG, shared_params(), **engine_kwargs(),
+        _STATE[key] = ServeEngine(CFG, shared_params(),
+                                  **engine_kwargs(**over),
                                   mesh=mesh_for(mesh_shape))
     return _STATE[key]
 

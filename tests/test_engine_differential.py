@@ -183,6 +183,104 @@ def test_spec_stats_expose_acceptance():
 
 
 # ---------------------------------------------------------------------------
+# the kv_quant column (ISSUE 7): engines over 8-bit quantized page pools
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["log8", "int8"])
+def test_kv_quant_column_all_engines_agree(mode):
+    """Paged+quant is bit-identical to slotted+quant token-for-token (both
+    engines run the same quantize-on-write / kv_decode-on-read formulas, so
+    the layout — pool vs slots — must not leak into tokens), and a
+    speculative engine over the quantized pool matches them exactly (the
+    verify chunk reads the same quantized cache sequential decode wrote)."""
+    for seed in (0, 3):
+        trace = random_greedy_trace(np.random.default_rng(seed))
+        slotted = H.run_trace(H.slotted_engine(kv_quant=mode), trace)
+        paged = H.paged_engine(kv_quant=mode)
+        assert H.run_trace(paged, trace) == slotted, \
+            f"paged+{mode} diverged from slotted+{mode}"
+        H.audit(paged)
+        spec = H.paged_engine(spec_k=SPEC_KS[0], kv_quant=mode)
+        assert H.run_trace(spec, trace) == slotted, \
+            f"spec+{mode} diverged from slotted+{mode}"
+        H.audit(spec)
+
+
+def test_kv_quant_pools_key_distinct_radix_roots():
+    """An fp pool and a quantized pool (and the two quantized grids) carry
+    different bytes for the same prompt — their engines must fingerprint
+    different radix roots, so prefix pages never cross-hit."""
+    fps = {mode: H.paged_engine(kv_quant=mode)._fp
+           for mode in (None, "log8", "int8")}
+    assert len(set(fps.values())) == 3, fps
+
+
+def test_kv_quant_grid_error_bound_contract():
+    """The committed per-element contract of the log8 grid (DESIGN.md §11):
+    |decode(encode(x)) - x| <= max(KV_LOG8_REL_ERR * |x|,
+    KV_LOG8_FLUSH * absmax) — half a log step of relative error above the
+    flush threshold, absolute flush-to-zero below it."""
+    from repro.core.quantization import (KV_LOG8_FLUSH, KV_LOG8_REL_ERR,
+                                         kv_decode)
+    from repro.nn.attention import _quantize_kv
+    rng = np.random.default_rng(11)
+    x = rng.normal(size=(3, 2, 8, 16)).astype(np.float32)
+    x[0, 0, 0, :4] = [0.0, 1e-7, -1e-6, 1e-5]       # sub-flush magnitudes
+    q, s = _quantize_kv(x, "log8")
+    xr = np.asarray(kv_decode(q, s, "log8"))
+    err = np.abs(xr - x)
+    bound = np.maximum(KV_LOG8_REL_ERR * np.abs(x),
+                       KV_LOG8_FLUSH * np.asarray(s)[..., None])
+    assert (err <= bound * (1 + 1e-5)).all(), float((err / bound).max())
+    assert (xr[0, 0, 0, :4] == 0).all()             # flushed exactly to 0
+
+
+def test_kv_quant_engine_through_paged_kernel(monkeypatch):
+    """NLDPE_PAGED_KERNEL=1 + kv_quant: decode, chunk prefill, and the
+    spec-verify staircase all stream int8 pages through the Pallas kernel
+    (dequant per page tile in VMEM) — tokens must still match the slotted
+    quantized oracle on well-separated greedy logits."""
+    monkeypatch.setenv("NLDPE_PAGED_KERNEL", "1")
+    rng = np.random.default_rng(31)
+    trace = [(tuple(int(x) for x in rng.integers(0, H.CFG.vocab_size,
+                                                 int(rng.integers(1, 9)))),
+              int(rng.integers(2, 6)), int(rng.integers(0, 3)))
+             for _ in range(4)]
+    slotted = H.run_trace(H.slotted_engine(kv_quant="log8"), trace)
+    # distinct singleton keys: these engines' jits must trace (and read
+    # the env var) inside this test, not reuse a dense-path compilation
+    for eng in (H.paged_engine(kv_quant="log8", eos_id=-3),
+                H.paged_engine(spec_k=2, kv_quant="log8", eos_id=-3)):
+        assert H.run_trace(eng, trace) == slotted
+        H.audit(eng)
+
+
+def test_kv_quant_kernel_serving_never_gathers_dense_view(monkeypatch):
+    """The acceptance criterion's 'no paged_dense_view on the hot paths':
+    with NLDPE_PAGED_KERNEL=1 a quantized spec engine must serve a whole
+    trace — chunk prefill, decode, draft decode, spec verify — without
+    ever materializing the gathered dense view.  A fresh engine traces
+    all its jits inside the poisoned scope, so ANY dense-view fallback on
+    any hot path raises at trace time."""
+    import repro.nn.attention as A
+    from repro.launch.engine import PagedServeEngine
+
+    def boom(cache):
+        raise AssertionError("paged_dense_view materialized on a hot path")
+
+    monkeypatch.setenv("NLDPE_PAGED_KERNEL", "1")
+    monkeypatch.setattr(A, "paged_dense_view", boom)
+    eng = PagedServeEngine(H.CFG, H.shared_params(), kv_quant="log8",
+                           spec_k=2, spec_draft=H.WQ_DRAFT,
+                           **H.engine_kwargs(page_size=H.PAGE,
+                                             num_pages=H.NUM_PAGES))
+    trace = [((3, 1, 4, 1, 5, 9, 2, 6), 5, 0), ((3, 1, 4, 2), 4, 1)]
+    out = H.run_trace(eng, trace)
+    assert all(len(t) > 0 for t in out.values())
+    H.audit(eng)
+
+
+# ---------------------------------------------------------------------------
 # hypothesis fuzz: extra depth when the optional dep is present
 # ---------------------------------------------------------------------------
 

@@ -31,6 +31,7 @@ from repro.kernels.dual_compute.ops import (fused_crossbar_acam,
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.nldpe_qmatmul.ops import nldpe_matmul_int8
 from repro.kernels.paged_attention.ops import paged_attention
+from repro.nn.attention import _quantize_kv
 
 RNG = np.random.default_rng(2024)
 
@@ -55,6 +56,11 @@ PAGED_SHAPES = [(1, 2, 2, 8, 2, 8, 8), (2, 4, 2, 12, 3, 16, 16),
 # to lengths[b] + j positions); q_len spanning a page boundary included
 PAGED_MQ_SHAPES = [(1, 2, 2, 8, 2, 8, 8, 2), (2, 4, 2, 12, 3, 16, 16, 3),
                    (1, 4, 1, 9, 3, 6, 32, 5), (2, 2, 1, 10, 4, 5, 8, 7)]
+# (B, Hq, Hkv, P, NB, ps, D, q_len): quantized pools (int8 codes + scales,
+# dequant inside the kernel grid) — decode (q_len 1) and the ragged
+# chunk-prefill staircase, odd page sizes x GQA groups (DESIGN.md §11)
+PAGED_QUANT_SHAPES = [(1, 2, 2, 8, 2, 8, 8, 1), (2, 4, 2, 12, 3, 16, 16, 3),
+                      (1, 4, 1, 9, 3, 6, 32, 5), (2, 2, 1, 10, 4, 5, 8, 2)]
 
 
 def _rand(shape, dtype, scale=1.0):
@@ -181,6 +187,24 @@ def _paged_mq_case(shape):
     return Case("paged_attention_mq", shape, run)
 
 
+def _paged_quant_case(shape, mode):
+    def run(dtype):
+        b, hq, hkv, p, nb, ps, d, ql = shape
+        q = _rand((b, hq, ql, d), dtype)
+        kq, ks = _quantize_kv(_rand((p, hkv, ps, d), jnp.float32), mode)
+        vq, vs = _quantize_kv(_rand((p, hkv, ps, d), jnp.float32), mode)
+        bt = jnp.asarray(RNG.integers(0, p, size=(b, nb)), jnp.int32)
+        lengths = jnp.asarray(
+            RNG.integers(1, nb * ps - ql + 2, size=(b,)), jnp.int32)
+        kw = dict(k_scale=ks, v_scale=vs, kv_quant=mode)
+        # both paths dequantize the SAME codes through kv_decode, so this
+        # row checks the in-kernel dequant, not the quantization error
+        return (paged_attention(q, kq, vq, bt, lengths, **kw),
+                paged_attention(q, kq, vq, bt, lengths, use_ref=True, **kw),
+                0.0)
+    return Case(f"paged_{mode}", shape, run)
+
+
 CASES = (
     [_crossbar_case(s) for s in MATMUL_SHAPES]
     + [_qmatmul_case(s) for s in MATMUL_SHAPES]
@@ -190,6 +214,8 @@ CASES = (
     + [_logdomain_flash_case(s) for s in ATTN_SHAPES]
     + [_paged_case(s) for s in PAGED_SHAPES]
     + [_paged_mq_case(s) for s in PAGED_MQ_SHAPES]
+    + [_paged_quant_case(s, m) for s in PAGED_QUANT_SHAPES
+       for m in ("log8", "int8")]
 )
 
 
@@ -214,6 +240,49 @@ def test_kernel_output_dtype_is_stable(case):
     out_k, out_r, _ = case.run(jnp.float32)
     assert jnp.issubdtype(out_k.dtype, jnp.floating)
     assert jnp.issubdtype(out_r.dtype, jnp.floating)
+
+
+def test_paged_attention_sentinel_blocks_do_not_alias():
+    """A ``lengths`` overrun past the allocated blocks (e.g. a spec-verify
+    slack budgeting bug) must read NOTHING through unmapped block-table
+    entries.  The old wrapper clamped the sentinel (``num_pages``) onto the
+    last real page, silently attending to another slot's data; now the
+    gather clamps only the DMA index and the softmax masks the whole page
+    (the read-side mirror of the write path's OOB-drop scatter)."""
+    rng = np.random.default_rng(7)
+    b, hq, hkv, p, nb, ps, d = 2, 4, 2, 6, 3, 5, 16
+    q = jnp.asarray(rng.normal(size=(b, hq, d)), jnp.float32)
+    kp = jnp.asarray(rng.normal(size=(p, hkv, ps, d)), jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(p, hkv, ps, d)), jnp.float32)
+    # slot 0 fully mapped; slot 1 has only 2 of 3 blocks — its last entry
+    # holds the unmapped sentinel (and pages 4/5 belong to slot 0 alone)
+    bt = jnp.asarray([[3, 4, 5], [0, 1, p]], jnp.int32)
+    over = jnp.asarray([nb * ps, nb * ps], jnp.int32)   # overruns slot 1
+    clip = jnp.asarray([nb * ps, 2 * ps], jnp.int32)    # exact mapped extent
+
+    for use_ref in (False, True):
+        o_over = paged_attention(q, kp, vp, bt, over, use_ref=use_ref)
+        o_clip = paged_attention(q, kp, vp, bt, clip, use_ref=use_ref)
+        # the overrun only ever covers sentinel positions -> identical to
+        # the exactly-clipped lengths
+        np.testing.assert_allclose(np.asarray(o_over), np.asarray(o_clip),
+                                   rtol=1e-6, atol=1e-6)
+        # poison the last real page (what the old clamp aliased the
+        # sentinel onto): slot 1 must not see it at all
+        o_poison = paged_attention(q, kp.at[p - 1].add(100.0),
+                                   vp.at[p - 1].add(100.0), bt, over,
+                                   use_ref=use_ref)
+        np.testing.assert_array_equal(np.asarray(o_poison[1]),
+                                      np.asarray(o_over[1]))
+        # ...while slot 0 (which owns page 5) must
+        assert not np.allclose(np.asarray(o_poison[0]), np.asarray(o_over[0]))
+    # negative entries are sentinels too (never-allocated table rows)
+    btn = bt.at[1, 2].set(-1)
+    for use_ref in (False, True):
+        o_neg = paged_attention(q, kp, vp, btn, over, use_ref=use_ref)
+        o_clip = paged_attention(q, kp, vp, btn, clip, use_ref=use_ref)
+        np.testing.assert_allclose(np.asarray(o_neg), np.asarray(o_clip),
+                                   rtol=1e-6, atol=1e-6)
 
 
 def test_paged_attention_sharded_conformance():

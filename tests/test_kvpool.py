@@ -63,6 +63,25 @@ def test_radix_roots_are_fingerprint_separated():
     assert nldpe_fingerprint(NLDPEConfig(enabled=True, bits=4)) != other
 
 
+def test_kv_quant_storage_modes_never_cross_hit():
+    """Pages published by an fp pool must never serve a quantized engine
+    (or "int8" serve "log8"): same NL-DPE config, same prompt, but the
+    page *bytes* mean different things, so the storage mode is part of
+    the fingerprint root (ISSUE 7 regression)."""
+    pool = PagePool(num_pages=4, page_size=2)
+    pages = pool.alloc(1)
+    tokens = (1, 2)
+    pool.publish(FP, tokens, pages)
+    for mode in ("log8", "int8"):
+        assert pool.match(nldpe_fingerprint(OFF, kv_quant=mode),
+                          tokens) == [], mode
+    assert pool.match(FP, tokens) == pages           # fp still hits fp
+    assert nldpe_fingerprint(OFF, kv_quant="log8") \
+        != nldpe_fingerprint(OFF, kv_quant="int8")
+    assert nldpe_fingerprint(OFF, kv_quant=None) == FP   # default is stable
+    pool.check()
+
+
 def test_published_pages_survive_release_until_evicted():
     pool = PagePool(num_pages=2, page_size=2)
     pages = pool.alloc(2)

@@ -196,6 +196,29 @@ def test_quantized_kv_cache_paged_matches_slotted(params):
     assert a == b
 
 
+def test_kv_quant_ctor_param_selects_log_grid(params):
+    """PagedServeEngine(kv_quant="log8") is exactly serving with
+    kv_cache_dtype="log8": the engines rewrite their config, carry the
+    effective mode on .kv_quant, and paged still matches slotted
+    bit-for-bit over radix hits and COW forks."""
+    slotted = ServeEngine(CFG, params, max_slots=2, max_len=16,
+                          prefill_chunk=4, decode_block=2, kv_quant="log8")
+    paged = PagedServeEngine(CFG, params, max_slots=2, max_len=16,
+                             prefill_chunk=4, decode_block=2, page_size=4,
+                             kv_quant="log8")
+    for eng in (slotted, paged):
+        assert eng.kv_quant == "log8"
+        assert eng.cfg.kv_cache_dtype == "log8"
+    assert "k_scale" in paged.cache["groups"]["b0"]["attn"]
+    rng = np.random.default_rng(17)
+    reqs = shared_prefix_trace(rng, 5, shared_len=4, max_suffix=4, max_gen=4)
+    a = {c.rid: c.tokens for c in slotted.run(reqs)}
+    b = {c.rid: c.tokens for c in paged.run(reqs)}
+    assert a == b
+    with pytest.raises(ValueError, match="kv_quant"):
+        ServeEngine(CFG, params, max_slots=1, max_len=8, kv_quant="fp4")
+
+
 # ---------------------------------------------------------------------------
 # pool/scheduler mechanics
 # ---------------------------------------------------------------------------
