@@ -33,6 +33,8 @@ ROWS = ("serve/cb_tok_per_s[off]", "serve/lockstep_tok_per_s[off]",
         "serve/kvq_rel_x[log8]",
         "serve/kvq_roundtrip_max_rel[log8]",
         "serve/kvq_logits_rel_err[log8]",
+        "serve/telemetry_tok_per_s[paged]",
+        "serve/telemetry_off_tok_per_s[paged]",
         "serve/fidelity_reprograms[drift]",
         "serve/fidelity_accept_trough[drift]",
         "serve/fidelity_accept_recovered[drift]",
@@ -55,13 +57,15 @@ def main() -> int:
         baseline = {r["name"]: r for r in json.load(f)["rows"]}
 
     from benchmarks.serve_bench import (bench_continuous, bench_fidelity,
-                                        bench_kv_quant, bench_paged,
-                                        bench_sharded, bench_spec)
+                                        bench_kv_quant, bench_latency,
+                                        bench_paged, bench_sharded,
+                                        bench_spec)
     fresh = {r["name"]: r for r in bench_continuous("off")}
     fresh.update({r["name"]: r for r in bench_paged("shared_prefix")})
     fresh.update({r["name"]: r for r in bench_spec("k4")})
     fresh.update({r["name"]: r for r in bench_kv_quant("log8")})
     fresh.update({r["name"]: r for r in bench_fidelity("drift")})
+    fresh.update({r["name"]: r for r in bench_latency("paged")})
     fresh.update({r["name"]: r for r in bench_sharded("4Lx256d")})
 
     for name in ROWS:
@@ -130,6 +134,25 @@ def main() -> int:
         print(f"::warning::fidelity reprogramming no longer recovers "
               f"acceptance (trough {lo:.2f} -> recovered {hi:.2f}) — "
               f"reprogram_params is not rescuing the drifted drafter")
+    ov = float(fresh["serve/telemetry_overhead_frac[paged]"]["derived"])
+    if ov > 0.05:
+        print(f"::warning::telemetry wall overhead {ov:.1%} exceeds the 5% "
+              f"zero-footprint budget (committed ~0.2%) — an observation "
+              f"hook grew a device sync or left the boundary discipline")
+    # latency-percentile rows carry {p50, p90, p99} ms dicts in "derived":
+    # warn on a p99 blow-up vs baseline (the disaggregated-serving
+    # groundwork: tail latency at this offered load is the tracked number)
+    for nm, what in (("serve/telemetry_ttft_ms[paged]", "TTFT"),
+                     ("serve/telemetry_tpot_ms[paged]", "TPOT")):
+        if nm not in baseline:
+            print(f"::warning::row {nm} missing from committed baseline")
+            continue
+        old99 = float(baseline[nm]["derived"]["p99"])
+        new99 = float(fresh[nm]["derived"]["p99"])
+        if old99 and (new99 - old99) / old99 > TOLERANCE:
+            print(f"::warning::{what} p99 regression at fixed offered "
+                  f"load: {old99:.2f}ms -> {new99:.2f}ms "
+                  f"({(new99 - old99) / old99:+.0%})")
     rel = float(fresh["serve/sharded_rel_x[4Lx256d_m2x2]"]["derived"])
     if rel < 0.05:
         print(f"::warning::dp x tp sharded serving collapsed to "

@@ -128,6 +128,19 @@ FID_POLICY = FidelityPolicy(window=4, ewma_alpha=0.5, soft_threshold=0.65,
                             reprogram_patience=1, max_reprograms=6)
 
 
+# Telemetry/latency cell (ISSUE 8): the same paged Poisson serve with the
+# full observability stack (event trace, lifecycle records, phase timers,
+# percentile accumulators) attached and detached.  Two commitments ride on
+# it: the TTFT/TPOT/queue-wait percentile groundwork for the disaggregated
+# serving work (measured at this fixed offered load), and the
+# zero-behavioral-footprint contract — the instrumented serve must emit
+# bit-identical tokens (asserted in-bench every round) and cost <= ~5%
+# wall overhead (warn-only bar in check_serve_regression: CPU-host noise
+# at these serve lengths is a real fraction of 5%).
+LAT_N, LAT_SLOTS = 24, 4
+LAT_MAX_LEN, LAT_PAGE, LAT_CHUNK, LAT_BLOCK = 64, 16, 16, 8
+
+
 def _trace_cfg():
     import dataclasses
     return dataclasses.replace(
@@ -701,6 +714,76 @@ def bench_fidelity(label: str):
     ]
 
 
+def bench_latency(label: str):
+    """Per-request latency percentiles + telemetry overhead (ISSUE 8 cell).
+
+    One paged engine with the full ``repro.obs`` stack attached, one
+    without, serving the same decode-dominated Poisson trace interleaved
+    best-of-3.  The instrumented serve's tokens are asserted equal to the
+    plain serve's every round (the zero-behavioral-footprint contract,
+    live on the committed numbers); telemetry is reset after jit warm-up
+    so compile-time TTFTs never contaminate the steady-state percentiles.
+    Committed rows: TTFT / TPOT / queue-wait p50/p90/p99 in ms at this
+    offered load, tokens/sec on and off, and the wall-overhead fraction
+    the <= 5% warn bar watches."""
+    from repro.obs import Telemetry
+
+    cfg = _trace_cfg()
+    with param_dtype(jnp.float32):
+        params = lm.init_params(jax.random.key(0), cfg)
+    rng = np.random.default_rng(41)
+    reqs = fidelity_trace(rng, LAT_N)
+    useful = sum(r.max_new_tokens for r in reqs)
+    kw = dict(max_slots=LAT_SLOTS, max_len=LAT_MAX_LEN,
+              prefill_chunk=LAT_CHUNK, decode_block=LAT_BLOCK,
+              page_size=LAT_PAGE)
+
+    tel = Telemetry()
+    on = PagedServeEngine(cfg, params, telemetry=tel, **kw)
+    off = PagedServeEngine(cfg, params, **kw)
+    warm = fidelity_trace(rng, 3)
+    on.run(_shift(warm, on.tick))                    # warm the jits
+    off.run(_shift(warm, off.tick))
+    tel.reset()                     # compile-time TTFTs out of the window
+
+    def run_one(eng):
+        shifted = _shift(reqs, eng.tick)
+        t0 = time.perf_counter()
+        comps = eng.run(shifted)
+        dt = time.perf_counter() - t0
+        return dt, [c.tokens for c in sorted(comps, key=lambda c: c.rid)]
+
+    on_s, off_s = float("inf"), float("inf")
+    for _ in range(3):               # interleaved best-of-3 (host drift)
+        d_on, toks_on = run_one(on)
+        d_off, toks_off = run_one(off)
+        assert toks_on == toks_off, \
+            "telemetry changed emitted tokens — observation leaked into " \
+            "engine behavior"
+        on_s, off_s = min(on_s, d_on), min(off_s, d_off)
+    overhead = (on_s - off_s) / off_s
+
+    s = tel.summary()                # all 3 measured serves: 3 * LAT_N reqs
+    assert s["requests_finished"] == 3 * LAT_N
+
+    def ms(summary):
+        return {q: round(summary[q] * 1e3, 2) for q in ("p50", "p90", "p99")}
+
+    on_tps, off_tps = useful / on_s, useful / off_s
+    return [
+        row(f"serve/telemetry_tok_per_s[{label}]", on_s / useful * 1e6,
+            round(on_tps, 1)),
+        row(f"serve/telemetry_off_tok_per_s[{label}]", off_s / useful * 1e6,
+            round(off_tps, 1)),
+        row(f"serve/telemetry_overhead_frac[{label}]", 0.0,
+            round(overhead, 4)),
+        row(f"serve/telemetry_ttft_ms[{label}]", 0.0, ms(s["ttft_s"])),
+        row(f"serve/telemetry_tpot_ms[{label}]", 0.0, ms(s["tpot_s"])),
+        row(f"serve/telemetry_queue_wait_ms[{label}]", 0.0,
+            ms(s["queue_wait_s"])),
+    ]
+
+
 def _sharded_child():
     """Child half of ``bench_sharded`` — run me in a subprocess with
     ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` already in the
@@ -801,6 +884,7 @@ def main(verbose: bool = True):
     rows += bench_spec(f"k{SPEC_K}")
     rows += bench_kv_quant("log8")
     rows += bench_fidelity("drift")
+    rows += bench_latency("paged")
     rows += bench_sharded("4Lx256d")
     if verbose:
         for r in rows:

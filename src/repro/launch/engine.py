@@ -74,6 +74,7 @@ from ..core import drift as drift_lib
 from ..core.engine import NLDPEConfig, OFF
 from ..models import lm
 from ..models.lm import ATTN_TYPES
+from ..obs import MetricsRegistry, Telemetry
 from ..parallel import sharding
 from ..parallel.context import sharding_ctx
 from .fidelity import DriftInjection, FidelityMonitor, FidelityPolicy
@@ -122,7 +123,8 @@ class ServeEngine:
                  decode_block: int = 4, eos_id: int = -1,
                  batch_groups: int = 1, dtype=jnp.float32,
                  kv_quant: str | None = None,
-                 mesh=None, rules=None):
+                 mesh=None, rules=None,
+                 telemetry: "Telemetry | bool | None" = None):
         bad = [t for t in cfg.layer_pattern if t not in ATTN_TYPES]
         if bad:
             raise NotImplementedError(
@@ -183,6 +185,27 @@ class ServeEngine:
         self._out: dict[int, list[int]] = {}
         self._admitted_tick: dict[int, int] = {}
         self.tick = 0
+
+        # observability (DESIGN.md §12).  The metrics registry is always
+        # on: its group collectors are lazy closures over state the engine
+        # maintains anyway, so registration costs nothing per tick.  Event
+        # and latency telemetry is opt-in (``telemetry=True`` or an
+        # instance); every call site below is guarded on it, and all of it
+        # is host-side observation — enabling telemetry cannot change
+        # emitted tokens (asserted across the differential matrix in
+        # tests/test_engine_differential.py).
+        if telemetry is True:
+            telemetry = Telemetry()
+        elif telemetry is False:
+            telemetry = None
+        self.telemetry = telemetry
+        # rid -> (slot, drafted-at-admit, accepted-at-admit): lets finish
+        # attribute per-request spec acceptance from the slot counters
+        self._tel_admit: dict[int, tuple[int, int, int]] = {}
+        self.metrics = MetricsRegistry()
+        self.metrics.register_group("engine", self._engine_stats)
+        if self.telemetry is not None:
+            self.metrics.register_group("latency", self.telemetry.summary)
 
         self._chunk_fn = jax.jit(self._ctx(self._build_chunk_fn()),
                                  donate_argnums=(0,))
@@ -413,6 +436,8 @@ class ServeEngine:
             raise ValueError(f"duplicate rids in one admission wave: {rids}")
         for r in reqs:
             self._validate(r)
+        tel = self.telemetry
+        t_wave = tel.phases.now() if tel is not None else 0.0
         s, c = self.max_slots, self.prefill_chunk
         slots = [self._free.popleft() for _ in reqs]
         admit = np.zeros((s,), bool)
@@ -456,6 +481,12 @@ class ServeEngine:
             last, jnp.asarray(keys_np), jnp.asarray(pos_np),
             jnp.asarray(temp_np), jnp.asarray(topk_np)))
         firsts = [all_firsts[sl] for sl in slots]
+        if tel is not None:
+            # all_firsts materialized above — the whole wave's device work
+            # is already synchronized, so the bracket closes here for free
+            wall = tel.phases.add("admission", t_wave)
+            tel.event("admission_wave", self.tick, n_reqs=len(reqs),
+                      n_chunks=n_chunks, wall_s=wall)
 
         done: list[Completion] = []
         sel = np.zeros((s,), bool)
@@ -469,6 +500,8 @@ class ServeEngine:
             first = int(first)
             self._out[r.rid] = [first]
             self._admitted_tick[r.rid] = self.tick
+            if tel is not None:
+                self._tel_note_admit(r, sl)
             if r.max_new_tokens == 1 or (self.eos_id >= 0
                                          and first == self.eos_id):
                 self._release_slot(sl)
@@ -507,15 +540,29 @@ class ServeEngine:
         if not self._free:
             raise RuntimeError("no free slot; check free_slots before submit")
         self._validate(req)
+        if self.telemetry is not None:
+            self.telemetry.enqueue(req.rid, self.tick)
         done = self._admit_wave([req])
         return done[0] if done else None
 
     def _complete(self, req: Request, reason: str) -> Completion:
-        return Completion(rid=req.rid, prompt=tuple(req.tokens),
+        comp = Completion(rid=req.rid, prompt=tuple(req.tokens),
                           tokens=self._out.pop(req.rid),
                           finish_reason=reason,
                           admitted_tick=self._admitted_tick.pop(req.rid),
                           finished_tick=self.tick)
+        tel = self.telemetry
+        if tel is not None:
+            sl, d0, a0 = self._tel_admit.pop(req.rid, (None, 0, 0))
+            drafted = accepted = 0
+            dr = getattr(self, "_drafted", None)
+            if sl is not None and dr is not None:
+                drafted = int(dr[sl]) - d0
+                accepted = int(self._accepted[sl]) - a0
+            tel.finish(req.rid, self.tick, reason=reason,
+                       n_tokens=len(comp.tokens), drafted=drafted,
+                       accepted=accepted)
+        return comp
 
     # ------------------------------------------------------------------
     # decode tick + trace scheduler
@@ -529,15 +576,52 @@ class ServeEngine:
     def any_active(self) -> bool:
         return any(o is not None for o in self._slot_owner)
 
+    def _engine_stats(self) -> dict:
+        """Scheduler-level gauges for ``metrics.snapshot()["engine"]``.
+        Everything here is host state — reading it never syncs a device
+        array (``_slot_owner``, not ``_active``, carries occupancy)."""
+        return {"tick": self.tick, "free_slots": self.free_slots,
+                "active_slots": sum(o is not None
+                                    for o in self._slot_owner),
+                "inflight": len(self._out)}
+
+    def _tel_note_admit(self, r: Request, sl: int, *, reuse: int = 0,
+                        pages_held: int = 0) -> None:
+        """Record one admission (called only with telemetry enabled):
+        lifecycle edges plus a snapshot of the slot's cumulative spec
+        counters, so finish can attribute per-request drafted/accepted as
+        a delta even though the engine only keeps per-slot totals."""
+        tel = self.telemetry
+        dr = getattr(self, "_drafted", None)
+        self._tel_admit[r.rid] = (
+            sl, 0 if dr is None else int(dr[sl]),
+            0 if dr is None else int(self._accepted[sl]))
+        tel.admit(r.rid, self.tick, slot=sl, prompt_len=len(r.tokens),
+                  reuse=reuse, pages_held=pages_held)
+        # the request's first token is sampled at the end of its
+        # admission wave — this call sits right after that sample
+        tel.first_token(r.rid, self.tick)
+
     def step(self) -> list[Completion]:
         """One decode tick: ``decode_block`` scanned steps over all slots.
         Returns the requests that finished during the tick."""
+        tel = self.telemetry
+        if tel is not None:
+            tel.tick_boundary(self.tick)
+            t0 = tel.phases.now()
         (self.cache, self._tok, self._pos, self._active, self._gen_left,
          emits) = self._decode_fn(self.cache, self._tok, self._pos,
                                   self._active, self._gen_left, self._temp,
                                   self._topk, self._keys)
         self.tick += self.decode_block
-        return self._harvest(np.asarray(emits))
+        emits = np.asarray(emits)       # the tick's one existing host sync
+        if tel is not None:
+            wall = tel.phases.add("decode", t0)
+            tel.event("decode_block", self.tick,
+                      n_active=sum(o is not None
+                                   for o in self._slot_owner),
+                      block=self.decode_block, wall_s=wall)
+        return self._harvest(emits)
 
     def _harvest(self, emits: np.ndarray) -> list[Completion]:
         """Fold one tick's emitted tokens (T, S), -1 = no token, into the
@@ -570,9 +654,13 @@ class ServeEngine:
         queue = deque(sorted(requests, key=lambda r: r.arrival))
         waiting: deque[Request] = deque()
         completions: list[Completion] = []
+        tel = self.telemetry
         while queue or waiting or self.any_active:
             while queue and queue[0].arrival <= self.tick:
-                waiting.append(queue.popleft())
+                r = queue.popleft()
+                if tel is not None:
+                    tel.enqueue(r.rid, r.arrival)
+                waiting.append(r)
             if waiting and self._free:
                 wave = self._select_wave(waiting)
                 if wave:
@@ -647,7 +735,8 @@ class PagedServeEngine(ServeEngine):
                  drift: DriftInjection | None = None,
                  fidelity: FidelityPolicy | None = None,
                  kv_quant: str | None = None,
-                 mesh=None, rules=None):
+                 mesh=None, rules=None,
+                 telemetry: "Telemetry | bool | None" = None):
         if "local" in cfg.layer_pattern:
             raise NotImplementedError(
                 "paged KV cache needs non-windowed attention layers: ring "
@@ -684,7 +773,8 @@ class PagedServeEngine(ServeEngine):
                          nldpe=nldpe, prefill_chunk=prefill_chunk,
                          decode_block=decode_block, eos_id=eos_id,
                          batch_groups=batch_groups, dtype=dtype,
-                         kv_quant=kv_quant, mesh=mesh, rules=rules)
+                         kv_quant=kv_quant, mesh=mesh, rules=rules,
+                         telemetry=telemetry)
         self._setup_fn = jax.jit(self._ctx(self._build_setup_fn()),
                                  donate_argnums=(0,))
         self._copy_fn = jax.jit(self._ctx(self._build_copy_fn()),
@@ -753,6 +843,18 @@ class PagedServeEngine(ServeEngine):
             self._reprogram_fn = jax.jit(
                 lambda k, st, q, t: drift_lib.reprogram_params(k, st, q,
                                                                m, t))
+
+        # registry groups superseding the three legacy stats dicts
+        # (deprecation-shim contract, tests/test_telemetry.py: each group
+        # snapshot compares == to its dict); collectors are lazy, so they
+        # may reference monitor/drift state initialized just above
+        self.metrics.register_group("pool", lambda: dict(self.pool.stats))
+        self.metrics.register_group("spec", lambda: self.spec_stats)
+        self.metrics.register_group("fidelity", lambda: self.fidelity_stats)
+        tel = self.telemetry
+        if tel is not None:
+            self.pool.on_evict = (
+                lambda page: tel.event("eviction", self.tick, page=page))
 
     def _init_cache(self):
         return lm.init_model_cache(self.cfg, self.max_slots, self.max_len,
@@ -826,7 +928,8 @@ class PagedServeEngine(ServeEngine):
         if self.monitor is not None:
             out.update(ewma=self.monitor.ewma,
                        disabled=self.monitor.disabled,
-                       events=list(self.monitor.events))
+                       events=list(self.monitor.events),
+                       events_dropped=self.monitor.events.dropped)
         if self.drift is not None:
             out["fault_fraction"] = float(drift_lib.fault_fraction(
                 self._drift_state, self.vclock))
@@ -896,6 +999,11 @@ class PagedServeEngine(ServeEngine):
         if action == "reprogram":
             self._execute_reprogram()
         self.spec_k_live = self.monitor.spec_k
+        tel = self.telemetry
+        if tel is not None and action is not None:
+            tel.event("fidelity", self.tick, kind=action,
+                      spec_k=self.monitor.spec_k, ewma=self.monitor.ewma,
+                      vclock_s=self.vclock)
 
     def step(self) -> list[Completion]:
         """One decode tick.  Non-speculative engines scan ``decode_block``
@@ -914,18 +1022,29 @@ class PagedServeEngine(ServeEngine):
             self._disabled_ticks += 1
             self._after_tick(drafted=0, accepted=0, k=0)
             return done
+        tel = self.telemetry
+        if tel is not None:
+            tel.tick_boundary(self.tick)
         # explicit copy: np.asarray of a CPU jax array can alias the device
         # buffer, which the verify fn below donates (and so may reuse)
         pre_active = np.array(self._active)
         dparams = (self._aged_draft_params() if self.drift is not None
                    else self._draft_params)
         draft_fn, verify_fn = self._spec_fns_for(k)
-        t0 = time.time()
+        # perf_counter, not time.time(): the wall clock can step backwards
+        # under NTP, which produced negative draft phases in long serves
+        t0 = time.perf_counter()
         self.cache, drafts, q_probs = draft_fn(
             dparams, self.cache, self._tok, self._pos, self._active,
             self._temp, self._topk, self._keys)
         jax.block_until_ready(drafts)       # meter the analog phase alone
-        self.spec_draft_seconds += time.time() - t0
+        dt_draft = time.perf_counter() - t0
+        self.spec_draft_seconds += dt_draft
+        if tel is not None:
+            tel.phases.record("draft", dt_draft)
+            tel.event("spec_draft", self.tick, k=k,
+                      n_active=int(pre_active.sum()), wall_s=dt_draft)
+        t1 = time.perf_counter()
         (self.cache, self._tok, self._pos, self._active, self._gen_left,
          emits, accepted) = verify_fn(
             self.cache, self._tok, self._pos, self._active, self._gen_left,
@@ -941,6 +1060,13 @@ class PagedServeEngine(ServeEngine):
         self._win_accepted += accepted_now
         self._win_ticks += 1
         d, a = int(drafted_now.sum()), int(accepted_now.sum())
+        if tel is not None:
+            # np.asarray(accepted) above already synchronized the verify
+            # outputs — the bracket closes on that existing sync
+            dt_verify = tel.phases.record("verify",
+                                          time.perf_counter() - t1)
+            tel.event("spec_verify", self.tick, k=k, drafted=d, accepted=a,
+                      wall_s=dt_verify)
         if d:
             acc = a / d
             self.ewma_acceptance = (
@@ -1110,6 +1236,8 @@ class PagedServeEngine(ServeEngine):
             raise ValueError(f"duplicate rids in one admission wave: {rids}")
         for r in reqs:
             self._validate(r)
+        tel = self.telemetry
+        t_wave = tel.phases.now() if tel is not None else 0.0
         s, c, ps = self.max_slots, self.prefill_chunk, self.page_size
 
         # Phase 1 — plan + commit pool state for every request BEFORE any
@@ -1148,6 +1276,9 @@ class PagedServeEngine(ServeEngine):
                                            jnp.int32(plan["fork_src"]),
                                            jnp.int32(fork_dst))
                 self.pool.note_cow()
+                if tel is not None:
+                    tel.event("cow_fork", self.tick,
+                              src=plan["fork_src"], dst=fork_dst)
                 bt_row = plan["hit"] + [fork_dst] + fresh[1:]
             else:
                 bt_row = plan["hit"] + fresh
@@ -1214,6 +1345,10 @@ class PagedServeEngine(ServeEngine):
             last, jnp.asarray(keys_np), jnp.asarray(plen_np),
             jnp.asarray(temp_np), jnp.asarray(topk_np)))
         firsts = [all_firsts[sl] for sl in slots]
+        if tel is not None:
+            wall = tel.phases.add("admission", t_wave)
+            tel.event("admission_wave", self.tick, n_reqs=len(reqs),
+                      n_chunks=n_chunks, wall_s=wall)
 
         # Phase 5 — identical post-prefill bookkeeping to the slotted
         # engine: record first tokens, retire instant finishes (releasing
@@ -1226,10 +1361,13 @@ class PagedServeEngine(ServeEngine):
         n_temp = np.zeros((s,), np.float32)
         n_topk = np.zeros((s,), np.int32)
         n_keys = np.zeros((s, 2), np.uint32)
-        for r, sl, first in zip(reqs, slots, firsts):
+        for r, sl, first, plan in zip(reqs, slots, firsts, plans):
             first = int(first)
             self._out[r.rid] = [first]
             self._admitted_tick[r.rid] = self.tick
+            if tel is not None:
+                self._tel_note_admit(r, sl, reuse=plan["reuse"],
+                                     pages_held=plan["nb_need"])
             if r.max_new_tokens == 1 or (self.eos_id >= 0
                                          and first == self.eos_id):
                 self._release_slot(sl)

@@ -41,6 +41,7 @@ import dataclasses
 import math
 
 from ..core.drift import DriftModel
+from ..obs.telemetry import BoundedLog
 
 
 def _finite(name: str, v, lo: float | None = None, hi: float | None = None):
@@ -113,6 +114,7 @@ class FidelityPolicy:
     reprogram_patience: int = 1   # windows a reprogram gets before judging
     max_reprograms: int = 2       # consecutive failures before disable
     probe_interval_s: float = 0.0  # re-probe cadence once disabled (0: off)
+    event_log_cap: int = 512      # ladder events retained (ring buffer)
 
     def __post_init__(self):
         if self.window < 1:
@@ -136,6 +138,10 @@ class FidelityPolicy:
             raise ValueError("reprogram_patience >= 0, max_reprograms >= 1")
         _finite("FidelityPolicy.probe_interval_s", self.probe_interval_s,
                 lo=0.0)
+        if self.event_log_cap < 1:
+            raise ValueError(
+                f"FidelityPolicy.event_log_cap={self.event_log_cap} must "
+                f"be >= 1")
 
 
 class FidelityMonitor:
@@ -163,7 +169,10 @@ class FidelityMonitor:
         self.spec_k = int(spec_k)
         self.ewma: float | None = None
         self.disabled = False
-        self.events: list[dict] = []
+        # bounded with the serve-wide ring policy (DESIGN.md §12): a ladder
+        # that oscillates for weeks cannot grow host memory — old events
+        # fall off and events.dropped counts them
+        self.events = BoundedLog(policy.event_log_cap)
         self._win_drafted = 0
         self._win_accepted = 0
         self._win_ticks = 0

@@ -113,6 +113,11 @@ class PagePool:
         self.stats = {"lookups": 0, "hits": 0, "hit_pages": 0,
                       "prefill_tokens_saved": 0, "evicted": 0,
                       "cow_forks": 0, "published": 0, "gen_published": 0}
+        # observation hook (DESIGN.md §12): called with the page id after
+        # each LRU eviction.  Pure notification — by the time it fires the
+        # page is already freed, so a callback cannot influence which page
+        # was chosen or whether eviction happened.
+        self.on_evict = None
 
     # ------------------------------------------------------------------
     # allocation / refcounts
@@ -321,6 +326,8 @@ class PagePool:
         self._node[page] = None
         self._free.append(page)
         self.stats["evicted"] += 1
+        if self.on_evict is not None:
+            self.on_evict(page)
         return page
 
     # ------------------------------------------------------------------

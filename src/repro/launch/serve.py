@@ -155,6 +155,37 @@ def python_loop_decode(decode_fn, params, cache, tok0, start_pos: int,
     return jnp.stack(out, axis=1), cache
 
 
+def _report_obs(eng, args) -> None:
+    """Print the telemetry story after an engine demo: latency percentile
+    summaries, phase wall shares, optional JSONL trace / profiler output,
+    optional Prometheus exposition of the unified registry."""
+    tel = eng.telemetry
+    if tel is not None:
+        tel.close()                      # stops a still-open profiler trace
+        s = tel.summary()
+
+        def ms(x):
+            return "-" if x is None else f"{x * 1e3:.1f}ms"
+
+        tt, tp, qw = s["ttft_s"], s["tpot_s"], s["queue_wait_s"]
+        print(f"  telemetry: {s['requests_finished']} finished / "
+              f"{s['ticks']} ticks; TTFT p50/p99 {ms(tt['p50'])}/"
+              f"{ms(tt['p99'])}, TPOT p50/p99 {ms(tp['p50'])}/"
+              f"{ms(tp['p99'])}, queue-wait p99 {ms(qw['p99'])}")
+        for phase, d in s["phases"].items():
+            print(f"    phase {phase:>9}: {d['seconds'] * 1e3:8.1f} ms "
+                  f"over {d['calls']} calls")
+        if args.trace_out:
+            n = tel.flush_jsonl(args.trace_out)
+            print(f"    trace: {n} events ({tel.trace.dropped} dropped) "
+                  f"-> {args.trace_out}")
+        if args.profile_ticks:
+            print(f"    profiler: first {args.profile_ticks} ticks -> "
+                  f"{tel.profiler.logdir} (load in perfetto)")
+    if args.metrics:
+        print(eng.metrics.prometheus_text(), end="")
+
+
 def run(argv=None):
     p = argparse.ArgumentParser()
     p.add_argument("--arch", default="qwen2_5_3b")
@@ -224,6 +255,26 @@ def run(argv=None):
                    help="sharding rule table for --mesh (default "
                         "serve_exact: bit-identical to unsharded; "
                         "also: serve, serve_dshard, long)")
+    p.add_argument("--telemetry", action="store_true",
+                   help="per-request latency tracing + phase timers for "
+                        "--continuous/--paged (DESIGN.md §12): TTFT/TPOT/"
+                        "queue-wait percentiles and a structured event "
+                        "trace.  Host-side observation only — emitted "
+                        "tokens are bit-identical with it off")
+    p.add_argument("--trace-out", default=None, metavar="PATH",
+                   help="flush the telemetry event trace as JSONL to PATH "
+                        "(implies --telemetry; first line is a meta record "
+                        "with the schema version and ring-drop count)")
+    p.add_argument("--profile-ticks", type=int, default=0, metavar="N",
+                   help="capture the first N engine ticks with "
+                        "jax.profiler (implies --telemetry; perfetto-"
+                        "loadable trace)")
+    p.add_argument("--profile-dir", default=None,
+                   help="output directory for --profile-ticks "
+                        "(default /tmp/nldpe_profile)")
+    p.add_argument("--metrics", action="store_true",
+                   help="print the engine's unified metrics registry as "
+                        "Prometheus text exposition after the run")
     p.add_argument("--seed", type=int, default=0)
     args = p.parse_args(argv)
 
@@ -232,6 +283,12 @@ def run(argv=None):
         from .mesh import serve_mesh
         dp, tp = (int(x) for x in args.mesh.split(","))
         mesh = serve_mesh(dp, tp)
+
+    tel = None
+    if args.telemetry or args.trace_out or args.profile_ticks:
+        from ..obs import Telemetry
+        tel = Telemetry(profile_ticks=args.profile_ticks,
+                        profile_dir=args.profile_dir)
 
     cfg = get_config(args.arch, reduced=True)
     nldpe = NLDPEConfig(enabled=args.nldpe or args.fused,
@@ -283,7 +340,8 @@ def run(argv=None):
                                fidelity=(fidelity if drift is not None
                                          else None),
                                kv_quant=args.kv_quant,
-                               mesh=mesh, rules=args.mesh_rules)
+                               mesh=mesh, rules=args.mesh_rules,
+                               telemetry=tel)
         t0 = time.time()
         comps = eng.run(reqs)
         dt = time.time() - t0
@@ -318,6 +376,7 @@ def run(argv=None):
                   f"({fs['downtime_s']:.0f}s downtime), "
                   f"{fs['fault_fraction']:.2%} cells stuck, live spec_k "
                   f"{fs['spec_k_live']}; events:{ev}")
+        _report_obs(eng, args)
         for c in comps[:4]:
             print(f"  rid={c.rid} admitted@{c.admitted_tick} "
                   f"finished@{c.finished_tick} [{c.finish_reason}] "
@@ -337,7 +396,8 @@ def run(argv=None):
                         arrival=int(rng.poisson(2) * i))
                 for i in range(args.requests)]
         eng = ServeEngine(cfg, params, max_slots=args.slots, max_len=max_len,
-                          nldpe=nldpe, mesh=mesh, rules=args.mesh_rules)
+                          nldpe=nldpe, mesh=mesh, rules=args.mesh_rules,
+                          telemetry=tel)
         t0 = time.time()
         comps = eng.run(reqs)
         dt = time.time() - t0
@@ -345,6 +405,7 @@ def run(argv=None):
         print(f"[serve] continuous: {len(comps)} requests, {n_tok} tokens "
               f"in {dt * 1e3:.0f} ms ({n_tok / max(dt, 1e-9):.1f} tok/s, "
               f"{args.slots} slots, {eng.tick} ticks)")
+        _report_obs(eng, args)
         for c in comps[:4]:
             print(f"  rid={c.rid} admitted@{c.admitted_tick} "
                   f"finished@{c.finished_tick} [{c.finish_reason}] "

@@ -17,6 +17,12 @@ process must expose enough devices
 (``XLA_FLAGS=--xla_force_host_platform_device_count=8``, set by the
 subprocess drivers in tests/test_engine_sharded.py).
 
+Any extra engine kwarg flows through ``engine_kwargs`` into the singleton
+key, so ``slotted_engine(telemetry=True)`` / ``paged_engine(spec_k=k,
+telemetry=True)`` give the observability on/off column (ISSUE 8): the
+instrumented twins must reproduce the plain engines' tokens bit-for-bit
+(tests/test_engine_differential.py ``-k telemetry``).
+
 tests/test_engine_differential.py drives the full engine matrix through
 it; tests/test_engine_properties.py, tests/test_paged_engine_properties.py
 and tests/sharded_driver.py keep only their distinctive assertions on top.

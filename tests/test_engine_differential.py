@@ -281,6 +281,63 @@ def test_kv_quant_kernel_serving_never_gathers_dense_view(monkeypatch):
 
 
 # ---------------------------------------------------------------------------
+# the telemetry on/off column (ISSUE 8): observation is never control flow.
+# Dedicated tests (not extra ENGINES() rows) so the matrix's compile count
+# stays put; CI's telemetry-interpret leg selects them with -k telemetry.
+# ---------------------------------------------------------------------------
+
+TELEMETRY_SPEC_K = 2 if 2 in SPEC_KS else SPEC_KS[0]
+
+
+def test_telemetry_bit_identity_greedy():
+    """The tentpole contract: engines with telemetry enabled emit exactly
+    the tokens of the same engines with it disabled — slotted, paged
+    (spec_k=0), and speculative — on seeded greedy Poisson traces."""
+    for seed in (0, 2):
+        trace = random_greedy_trace(np.random.default_rng(seed))
+        for name, plain, instrumented in [
+                ("slotted", H.slotted_engine(),
+                 H.slotted_engine(telemetry=True)),
+                ("paged", H.paged_engine(),
+                 H.paged_engine(telemetry=True)),
+                (f"spec{TELEMETRY_SPEC_K}",
+                 H.paged_engine(spec_k=TELEMETRY_SPEC_K),
+                 H.paged_engine(spec_k=TELEMETRY_SPEC_K, telemetry=True))]:
+            assert H.run_trace(instrumented, trace) \
+                == H.run_trace(plain, trace), \
+                f"telemetry changed {name} tokens (seed {seed})"
+            if hasattr(instrumented, "pool"):
+                H.audit(instrumented)
+
+
+def test_telemetry_bit_identity_sampled():
+    """Same contract under mixed greedy/temperature/top-k sampling: the
+    observed engines reproduce every sampled draw bit-for-bit."""
+    for seed in (10, 12):
+        trace = random_mixed_trace(np.random.default_rng(seed))
+        assert H.run_trace(H.slotted_engine(telemetry=True), trace) \
+            == H.run_trace(H.slotted_engine(), trace)
+        spec_on = H.paged_engine(spec_k=TELEMETRY_SPEC_K, telemetry=True)
+        assert H.run_trace(spec_on, trace) \
+            == H.run_trace(H.paged_engine(spec_k=TELEMETRY_SPEC_K), trace)
+        H.audit(spec_on)
+
+
+def test_telemetry_bit_identity_cow_eviction():
+    """On/off identity through the stressful pool paths — COW forks and
+    zero-headroom LRU eviction — with the instrumented engine's eviction/
+    cow_fork events actually firing."""
+    trace = H.shared_prefix_cow_trace()
+    on = H.paged_engine(spec_k=TELEMETRY_SPEC_K, telemetry=True)
+    assert H.run_trace(on, trace) \
+        == H.run_trace(H.paged_engine(spec_k=TELEMETRY_SPEC_K), trace)
+    H.audit(on)
+    kinds = {e["ev"] for e in on.telemetry.trace}
+    assert "cow_fork" in kinds
+    assert "eviction" in kinds
+
+
+# ---------------------------------------------------------------------------
 # hypothesis fuzz: extra depth when the optional dep is present
 # ---------------------------------------------------------------------------
 
