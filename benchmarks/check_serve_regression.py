@@ -35,6 +35,11 @@ ROWS = ("serve/cb_tok_per_s[off]", "serve/lockstep_tok_per_s[off]",
         "serve/kvq_logits_rel_err[log8]",
         "serve/telemetry_tok_per_s[paged]",
         "serve/telemetry_off_tok_per_s[paged]",
+        "serve/spill_tok_per_s[two_tier]",
+        "serve/spill_baseline_tok_per_s[two_tier]",
+        "serve/spill_rel_x[two_tier]",
+        "serve/spill_restore_hit_rate[two_tier]",
+        "serve/spill_prefill_saved_tok[two_tier]",
         "serve/fidelity_reprograms[drift]",
         "serve/fidelity_accept_trough[drift]",
         "serve/fidelity_accept_recovered[drift]",
@@ -59,13 +64,14 @@ def main() -> int:
     from benchmarks.serve_bench import (bench_continuous, bench_fidelity,
                                         bench_kv_quant, bench_latency,
                                         bench_paged, bench_sharded,
-                                        bench_spec)
+                                        bench_spec, bench_spill)
     fresh = {r["name"]: r for r in bench_continuous("off")}
     fresh.update({r["name"]: r for r in bench_paged("shared_prefix")})
     fresh.update({r["name"]: r for r in bench_spec("k4")})
     fresh.update({r["name"]: r for r in bench_kv_quant("log8")})
     fresh.update({r["name"]: r for r in bench_fidelity("drift")})
     fresh.update({r["name"]: r for r in bench_latency("paged")})
+    fresh.update({r["name"]: r for r in bench_spill("two_tier")})
     fresh.update({r["name"]: r for r in bench_sharded("4Lx256d")})
 
     for name in ROWS:
@@ -134,6 +140,16 @@ def main() -> int:
         print(f"::warning::fidelity reprogramming no longer recovers "
               f"acceptance (trough {lo:.2f} -> recovered {hi:.2f}) — "
               f"reprogram_params is not rescuing the drifted drafter")
+    rr = float(fresh["serve/spill_restore_hit_rate[two_tier]"]["derived"])
+    if rr <= 0:
+        print("::warning::two-tier cell restored zero host pages — the "
+              "spill tier is demoting pages nothing ever hits again "
+              "(trace shape or host-LRU ordering moved)")
+    sv = float(fresh["serve/spill_prefill_saved_tok[two_tier]"]["derived"])
+    if sv <= 0:
+        print("::warning::host spill tier saved no re-prefill tokens over "
+              "destroy-on-evict — restores are not short-circuiting "
+              "prefill (radix hit path or restore protocol moved)")
     ov = float(fresh["serve/telemetry_overhead_frac[paged]"]["derived"])
     if ov > 0.05:
         print(f"::warning::telemetry wall overhead {ov:.1%} exceeds the 5% "

@@ -140,6 +140,20 @@ FID_POLICY = FidelityPolicy(window=4, ewma_alpha=0.5, soft_threshold=0.65,
 LAT_N, LAT_SLOTS = 24, 4
 LAT_MAX_LEN, LAT_PAGE, LAT_CHUNK, LAT_BLOCK = 64, 16, 16, 8
 
+# Hierarchical-cache cell (ISSUE 9): the shared-system-prompt trace pushed
+# through a device pool with ZERO retention headroom — four live slots
+# reference every one of the 24 pages, so the prefix's radix pages are
+# evicted between waves.  destroy-on-evict re-prefills the system prompt
+# each wave; the two-tier engine demotes the pages to host RAM and
+# restores them on the next radix hit (a host->device copy instead of a
+# 64-token prefill).  The preemption sub-cell asserts (in-bench) that a
+# priority-preempted serve emits bit-identical tokens.
+SPILL_N, SPILL_SLOTS = 24, 4
+SPILL_SYS, SPILL_MAX_LEN = 64, 96
+SPILL_PAGE, SPILL_CHUNK, SPILL_BLOCK = 16, 16, 8
+SPILL_POOL = 24                     # 4 slots x 6 blocks, no cache headroom
+SPILL_HOST = 8                      # holds the 4 prefix pages comfortably
+
 
 def _trace_cfg():
     import dataclasses
@@ -784,6 +798,135 @@ def bench_latency(label: str):
     ]
 
 
+def spill_prefix_trace(rng, n: int):
+    """Alternating waves: shared-system-prompt requests, then a flood of
+    four distinct near-max-length requests whose combined footprint is the
+    entire pool.  Each flood forcibly evicts the (refcount-0) prefix pages
+    — destroyed on the baseline engine, demoted to host on the two-tier
+    one — and the next prefix wave hits them again."""
+    sys_toks = tuple(int(x) for x in rng.integers(0, 256, SPILL_SYS))
+    reqs, t = [], 0
+    while len(reqs) < n:
+        for _ in range(min(4, n - len(reqs))):       # prefix wave
+            suffix = tuple(int(x) for x in rng.integers(
+                0, 256, int(rng.integers(2, 9))))
+            reqs.append(Request(rid=len(reqs), tokens=sys_toks + suffix,
+                                max_new_tokens=int(rng.integers(2, 7)),
+                                arrival=t))
+        t += 6
+        for _ in range(min(SPILL_SLOTS, n - len(reqs))):     # flood wave
+            plen = int(rng.integers(72, 81))
+            reqs.append(Request(
+                rid=len(reqs),
+                tokens=tuple(int(x) for x in rng.integers(0, 256, plen)),
+                max_new_tokens=int(rng.integers(10, 16)), arrival=t))
+        t += 8
+    return reqs
+
+
+def _priority_subtrace(rng, n_low: int):
+    """``n_low`` low-priority requests saturate every slot; one
+    high-priority arrival a tick later can only land by preemption."""
+    reqs = [Request(rid=i,
+                    tokens=tuple(int(x) for x in rng.integers(0, 256, 8)),
+                    max_new_tokens=16, arrival=0)
+            for i in range(n_low)]
+    reqs.append(Request(rid=n_low,
+                        tokens=tuple(int(x) for x in rng.integers(0, 256, 8)),
+                        max_new_tokens=8, arrival=1, priority=1))
+    return reqs
+
+
+def bench_spill(label: str):
+    """Hierarchical KV cache: host-RAM spill tier vs destroy-on-evict
+    (ISSUE 9 cell).
+
+    Both engines serve the same shared-prefix trace from the same
+    zero-headroom device pool; the only difference is ``host_cache_pages``.
+    Committed rows: tokens/sec for both, the restore-hit rate
+    (restores per spill — how often a demoted page was worth keeping), and
+    the prefill tokens the host tier saves over destroy-on-evict per serve.
+    Two in-bench bit-identity asserts ride on the committed numbers: the
+    two-tier serve's tokens equal the destroy engine's every round, and a
+    priority-preempted serve (slots saturated by low-priority traffic, one
+    high-priority arrival) equals the same requests served without
+    priorities."""
+    cfg = _trace_cfg()
+    with param_dtype(jnp.float32):
+        params = lm.init_params(jax.random.key(0), cfg)
+    rng = np.random.default_rng(47)
+    reqs = spill_prefix_trace(rng, SPILL_N)
+    useful = sum(r.max_new_tokens for r in reqs)
+    kw = dict(max_slots=SPILL_SLOTS, max_len=SPILL_MAX_LEN,
+              prefill_chunk=SPILL_CHUNK, decode_block=SPILL_BLOCK,
+              page_size=SPILL_PAGE, num_pages=SPILL_POOL)
+    tier = PagedServeEngine(cfg, params, host_cache_pages=SPILL_HOST, **kw)
+    destroy = PagedServeEngine(cfg, params, **kw)
+    warm = spill_prefix_trace(rng, 4)
+    tier.run(_shift(warm, tier.tick))                # warm the jits (the
+    destroy.run(_shift(warm, destroy.tick))          # spill/restore copies
+    wp = _priority_subtrace(rng, SPILL_SLOTS)        # compile on this trace)
+    tier.run([Request(rid=r.rid, tokens=r.tokens,
+                      max_new_tokens=r.max_new_tokens, priority=r.priority,
+                      arrival=tier.tick + r.arrival) for r in wp])
+
+    def run_one(eng):
+        shifted = _shift(reqs, eng.tick)
+        t0 = time.perf_counter()
+        comps = eng.run(shifted)
+        dt = time.perf_counter() - t0
+        return dt, [c.tokens for c in sorted(comps, key=lambda c: c.rid)]
+
+    st0, sd0 = dict(tier.pool.stats), dict(destroy.pool.stats)
+    tier_s, dest_s = float("inf"), float("inf")
+    for _ in range(3):               # interleaved best-of-3 (host drift)
+        d_t, toks_t = run_one(tier)
+        d_d, toks_d = run_one(destroy)
+        assert toks_t == toks_d, \
+            "host spill/restore changed emitted tokens — tier round-trip " \
+            "is not byte-transparent"
+        tier_s, dest_s = min(tier_s, d_t), min(dest_s, d_d)
+    st1, sd1 = dict(tier.pool.stats), dict(destroy.pool.stats)
+    spilled = st1["spilled"] - st0["spilled"]
+    restored = st1["restored"] - st0["restored"]
+    hit_rate = restored / max(spilled, 1)
+    saved = ((st1["prefill_tokens_saved"] - st0["prefill_tokens_saved"])
+             - (sd1["prefill_tokens_saved"] - sd0["prefill_tokens_saved"])
+             ) // 3
+    assert restored > 0, "spill cell never restored a host page"
+
+    # preemption sub-cell: same requests with vs without priorities
+    prio = _priority_subtrace(rng, SPILL_SLOTS)
+    pre0, res0 = tier.preempts, tier.resumes
+    got = {c.rid: c.tokens for c in tier.run(
+        [Request(rid=r.rid, tokens=r.tokens,
+                 max_new_tokens=r.max_new_tokens, priority=r.priority,
+                 arrival=tier.tick + r.arrival) for r in prio])}
+    assert tier.preempts > pre0 and tier.resumes > res0, \
+        "high-priority arrival never preempted a saturated engine"
+    exp = {c.rid: c.tokens for c in destroy.run(
+        [Request(rid=r.rid, tokens=r.tokens,
+                 max_new_tokens=r.max_new_tokens,
+                 arrival=destroy.tick + r.arrival) for r in prio])}
+    assert got == exp, \
+        "preempt/resume changed tokens — the swap-out state round-trip " \
+        "is not bit-exact"
+
+    t_tps, d_tps = useful / tier_s, useful / dest_s
+    return [
+        row(f"serve/spill_tok_per_s[{label}]", tier_s / useful * 1e6,
+            round(t_tps, 1)),
+        row(f"serve/spill_baseline_tok_per_s[{label}]",
+            dest_s / useful * 1e6, round(d_tps, 1)),
+        row(f"serve/spill_rel_x[{label}]", 0.0,
+            round(t_tps / max(d_tps, 1e-9), 2)),
+        row(f"serve/spill_restore_hit_rate[{label}]", 0.0,
+            round(hit_rate, 3)),
+        row(f"serve/spill_prefill_saved_tok[{label}]", 0.0, saved),
+        row(f"serve/spill_preempt_exact_match[{label}]", 0.0, 1.0),
+    ]
+
+
 def _sharded_child():
     """Child half of ``bench_sharded`` — run me in a subprocess with
     ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` already in the
@@ -885,6 +1028,7 @@ def main(verbose: bool = True):
     rows += bench_kv_quant("log8")
     rows += bench_fidelity("drift")
     rows += bench_latency("paged")
+    rows += bench_spill("two_tier")
     rows += bench_sharded("4Lx256d")
     if verbose:
         for r in rows:

@@ -39,7 +39,11 @@ class CheckpointManager:
     # -- save ----------------------------------------------------------------
     def save(self, tree, step: int, blocking: bool = True):
         leaves, treedef = _flatten(tree)
-        host = [np.asarray(x) for x in leaves]
+        # np.array(copy=True), never np.asarray: asarray of a CPU jax
+        # array can alias the device buffer, and a donating jit (in-place
+        # optimizer update) may reuse that memory before the async _write
+        # thread serializes it — the snapshot must own its bytes
+        host = [np.array(x, copy=True) for x in leaves]
 
         def _write():
             tmp = tempfile.mkdtemp(dir=self.dir, prefix=".tmp_")

@@ -96,6 +96,8 @@ class Request:
     top_k: int = 0                     # 0 -> disabled
     seed: int | None = None            # defaults to rid
     arrival: int = 0                   # arrival time in decode ticks
+    priority: int = 0                  # higher admits first; strictly
+    #                                    higher may preempt (paged engine)
 
 
 @dataclasses.dataclass
@@ -108,6 +110,29 @@ class Completion:
     finish_reason: str                 # "length" | "eos"
     admitted_tick: int
     finished_tick: int
+
+
+@dataclasses.dataclass
+class _Preempted:
+    """A preempted request's complete host-side resume image: its decode
+    state row, sampling key, one canonical position-track row, and every
+    block-table page's bytes (explicit copies — the decode/verify jits
+    donate the device buffers these came from).  Holding the image makes
+    resume bit-identical to never having been preempted: sampling folds
+    (seed, position), drafts are deterministic per prefix, and attention
+    only reaches page bytes through the block table, so physical
+    re-placement on resume is invisible to the math."""
+
+    req: Request
+    tok: int
+    pos: int
+    gen_left: int
+    temp: float
+    topk: int
+    keys: np.ndarray                   # (2,) uint32 sampling key
+    pos_row: np.ndarray                # (max_len,) int32 position track
+    payloads: list                     # per-page pool-leaf rows, bt order
+    tel_carry: tuple                   # (drafted, accepted) already done
 
 
 class ServeEngine:
@@ -184,6 +209,10 @@ class ServeEngine:
         self._free = deque(range(s))
         self._out: dict[int, list[int]] = {}
         self._admitted_tick: dict[int, int] = {}
+        # requests swapped out to host by priority preemption (the paged
+        # engine populates this; the base run loop only has to know they
+        # exist so a trace with everything preempted keeps running)
+        self._preempted: list[_Preempted] = []
         self.tick = 0
 
         # observability (DESIGN.md §12).  The metrics registry is always
@@ -528,9 +557,34 @@ class ServeEngine:
                 jnp.asarray(n_keys))
         return done
 
+    @staticmethod
+    def _priority_order(waiting: deque) -> None:
+        """Stable-reorder the waiting queue by descending priority (FIFO
+        within each class) — shared by both engines' wave selection.  A
+        no-op on all-default-priority traffic, so priority-free traces
+        schedule exactly as before."""
+        if any(r.priority for r in waiting):
+            ordered = sorted(waiting, key=lambda r: -r.priority)
+            waiting.clear()
+            waiting.extend(ordered)
+
+    def _resume_preempted(self, waiting=()) -> None:
+        """Hook: swap preempted requests back in (paged engine).  Runs
+        each scheduler iteration before admission; ``waiting`` lets the
+        override defer resumes that higher-priority arrivals would only
+        preempt again."""
+
+    def _can_admit(self, waiting: deque) -> bool:
+        """Whether ``_select_wave`` could admit anything right now.  The
+        paged engine also answers True with zero free slots when a
+        waiting request outranks an active one (admission by
+        preemption)."""
+        return bool(self._free)
+
     def _select_wave(self, waiting: deque) -> list[Request]:
         """Pop the next admission wave off the waiting queue (subclasses
         add resource admission control, e.g. page availability)."""
+        self._priority_order(waiting)
         return [waiting.popleft()
                 for _ in range(min(len(waiting), len(self._free)))]
 
@@ -655,13 +709,14 @@ class ServeEngine:
         waiting: deque[Request] = deque()
         completions: list[Completion] = []
         tel = self.telemetry
-        while queue or waiting or self.any_active:
+        while queue or waiting or self.any_active or self._preempted:
             while queue and queue[0].arrival <= self.tick:
                 r = queue.popleft()
                 if tel is not None:
                     tel.enqueue(r.rid, r.arrival)
                 waiting.append(r)
-            if waiting and self._free:
+            self._resume_preempted(waiting)
+            if waiting and self._can_admit(waiting):
                 wave = self._select_wave(waiting)
                 if wave:
                     completions.extend(self._admit_wave(wave))
@@ -671,6 +726,14 @@ class ServeEngine:
                 if queue:           # idle until the next arrival
                     self.tick = max(self.tick, queue[0].arrival)
                     continue
+                if self._preempted:
+                    # resume into a fully idle engine just failed: the
+                    # pool cannot hold the preempted footprints — a
+                    # stall, not a schedule; never spin silently
+                    raise RuntimeError(
+                        f"{len(self._preempted)} preempted request(s) "
+                        f"cannot resume into an idle engine; the page "
+                        f"pool is too small for their footprints")
                 break
             completions.extend(self.step())
         return sorted(completions, key=lambda c: c.rid)
@@ -730,6 +793,7 @@ class PagedServeEngine(ServeEngine):
                  decode_block: int = 4, eos_id: int = -1,
                  batch_groups: int = 1, dtype=jnp.float32,
                  page_size: int = 16, num_pages: int | None = None,
+                 host_cache_pages: int = 0,
                  spec_k: int = 0, spec_draft: NLDPEConfig | None = None,
                  cache_generations: bool = True,
                  drift: DriftInjection | None = None,
@@ -750,7 +814,13 @@ class PagedServeEngine(ServeEngine):
         if num_pages is None:
             num_pages = max_slots * self.n_blocks    # slotted-parity default
         self.num_pages = num_pages
-        self.pool = PagePool(num_pages, page_size)
+        # host spill tier (DESIGN.md §13): with host_cache_pages > 0, LRU
+        # eviction demotes refcount-0 radix pages to host RAM instead of
+        # destroying them; radix hits on spilled nodes restore host→device
+        # before publish.  0 keeps the destroy-on-evict behavior exactly.
+        self.host_cache_pages = int(host_cache_pages)
+        self.pool = PagePool(num_pages, page_size,
+                             host_pages=self.host_cache_pages)
         # the radix root is keyed by byte semantics: NL-DPE numerics AND
         # the KV storage grid — a quantized pool's pages must never be
         # prefix-hit by an fp pool (or "int8" by "log8") for the same
@@ -779,6 +849,24 @@ class PagedServeEngine(ServeEngine):
                                  donate_argnums=(0,))
         self._copy_fn = jax.jit(self._ctx(self._build_copy_fn()),
                                 donate_argnums=(0,))
+        # tier plumbing: one page's pool-leaf rows out of / into the cache
+        # (nn.attention helpers; every kv_quant mode), the canonical pos
+        # row of one slot, the resume-time bt+pos rewrite, and the
+        # preempt-time active-bit clear.  Gather never donates (reads the
+        # live cache); scatter/resume/deact donate like every cache write.
+        from ..nn.attention import gather_page_rows, scatter_page_rows
+        self._gather_fn = jax.jit(self._ctx(gather_page_rows))
+        self._scatter_fn = jax.jit(self._ctx(scatter_page_rows),
+                                   donate_argnums=(0,))
+        self._pos_row_fn = jax.jit(self._ctx(self._build_pos_row_fn()))
+        self._resume_fn = jax.jit(self._ctx(self._build_resume_fn()),
+                                  donate_argnums=(0,))
+        self._deact_fn = jax.jit(self._ctx(lambda active, m: active & ~m),
+                                 donate_argnums=(0,))
+        if self.host_cache_pages > 0:
+            self.pool.on_spill = self._spill_page
+        self.preempts = 0
+        self.resumes = 0
         if (drift is not None or fidelity is not None) and not spec_k:
             raise ValueError(
                 "drift/fidelity act on the analog draft path; they need "
@@ -851,6 +939,13 @@ class PagedServeEngine(ServeEngine):
         self.metrics.register_group("pool", lambda: dict(self.pool.stats))
         self.metrics.register_group("spec", lambda: self.spec_stats)
         self.metrics.register_group("fidelity", lambda: self.fidelity_stats)
+        # tier gauges live in their own group: the "pool" group must stay
+        # == dict(pool.stats) (deprecation-shim contract)
+        self.metrics.register_group("tiers", lambda: {
+            "host_pages": self.pool.host_pages,
+            "host_used": self.pool.host_used,
+            "preempted_waiting": len(self._preempted),
+            "preempts": self.preempts, "resumes": self.resumes})
         tel = self.telemetry
         if tel is not None:
             self.pool.on_evict = (
@@ -1143,6 +1238,71 @@ class PagedServeEngine(ServeEngine):
 
         return copy_page
 
+    def _build_pos_row_fn(self):
+        def pos_row(cache, sl):
+            """One slot's position-track row.  Every layer's pos leaf is
+            written in lockstep (same positions, same masks, same clips),
+            so the first leaf is canonical for all of them — that is what
+            lets preemption save ONE (max_len,) row and resume rebroadcast
+            it to every layer."""
+            for path, leaf in jtu.tree_flatten_with_path(cache)[0]:
+                keys = [k.key for k in path if isinstance(k, jtu.DictKey)]
+                if keys and keys[-1] == "pos":
+                    row = jax.lax.dynamic_index_in_dim(
+                        leaf, sl, axis=_batch_dim(path), keepdims=False)
+                    return row[0] if row.ndim == 2 else row
+            raise ValueError("paged cache has no pos leaf")
+
+        return pos_row
+
+    def _build_resume_fn(self):
+        def resume(cache, mask, new_bt, pos_row):
+            """Resume-time twin of the setup fn: on the masked slot,
+            replace the block-table row with the freshly allocated pages
+            and set every pos leaf to the preempted request's exact saved
+            row (not an iota — the row IS the resume contract: validity
+            boundaries land where the last verify clip left them)."""
+            def one(path, leaf):
+                keys = [k.key for k in path if isinstance(k, jtu.DictKey)]
+                if not keys or keys[-1] not in ("pos", "bt"):
+                    return leaf
+                bdim = _batch_dim(path)
+                m = _per_slot(mask, leaf, bdim)
+                if keys[-1] == "pos":
+                    row = pos_row.astype(leaf.dtype)
+                    row = row.reshape((1,) * (leaf.ndim - 1) + row.shape)
+                    return jnp.where(m, row, leaf)
+                nbt = new_bt if leaf.ndim == new_bt.ndim else new_bt[None]
+                return jnp.where(m, nbt, leaf)
+
+            return jtu.tree_map_with_path(one, cache)
+
+        return resume
+
+    # ------------------------------------------------------------------
+    # host tier: device→host spill, host→device restore (DESIGN.md §13)
+    # ------------------------------------------------------------------
+
+    def _spill_page(self, page: int) -> list:
+        """The pool's ``on_spill`` hook: device→host copy of one page's
+        bytes across every pool leaf.  ``np.array(..., copy=True)`` is the
+        load-bearing part — ``np.asarray`` of a CPU jax array can alias
+        device memory that the next donating jit (chunk/decode/verify/
+        scatter) reuses, silently corrupting the host copy (the exact trap
+        flagged in ROADMAP and fixed in checkpoint/manager.py)."""
+        rows = self._gather_fn(self.cache, jnp.int32(page))
+        payload = [np.array(r, copy=True) for r in rows]
+        tel = self.telemetry
+        if tel is not None:
+            tel.event("spill", self.tick, page=page)
+        return payload
+
+    def _restore_page(self, payload: list, page: int) -> None:
+        """Host→device copy: write a spilled payload's rows back as
+        physical page ``page`` (one donated jit dispatch)."""
+        self.cache = self._scatter_fn(self.cache, list(payload),
+                                      jnp.int32(page))
+
     # ------------------------------------------------------------------
     # admission planning: prefix match -> page budget
     # ------------------------------------------------------------------
@@ -1158,16 +1318,28 @@ class PagedServeEngine(ServeEngine):
         """
         ps = self.page_size
         plen = len(req.tokens)
-        hit = self.pool.match(self._fp, req.tokens, peek=peek)
+        # two-tier lookup: resident hit pages + the spilled continuation
+        # chain.  Non-peek pins the spilled nodes until Phase 1 restores
+        # them (or the rollback path unpins).
+        hit, spill = self.pool.match_tiers(self._fp, req.tokens, peek=peek)
         fork_src = None
-        if hit and len(hit) * ps > plen - 1:
+        fork_node = None
+        n_hit = len(hit) + len(spill)
+        if n_hit and n_hit * ps > plen - 1:
             # cache covers the whole prompt; the boundary page must become
-            # private (final-token recompute + decode appends land in it)
-            fork_src = hit[-1]
-            hit = hit[:-1]
+            # private (final-token recompute + decode appends land in it).
+            # A spilled boundary is a *payload fork*: its host bytes are
+            # injected straight into the private fork page and the node
+            # stays spilled for future exact-prefix hits.
+            if spill:
+                fork_node = spill[-1]
+                spill = spill[:-1]
+            else:
+                fork_src = hit[-1]
+                hit = hit[:-1]
             reuse = plen - 1
         else:
-            reuse = len(hit) * ps
+            reuse = n_hit * ps
         # page budget includes spec_k positions of slack: every speculative
         # step writes drafted-but-unverified K/V up to spec_k positions past
         # the committed tip, and those writes must land in pages this slot
@@ -1175,8 +1347,11 @@ class PagedServeEngine(ServeEngine):
         footprint = min(plen + req.max_new_tokens - 1 + self.spec_k,
                         self.max_len)
         nb_need = -(-footprint // ps)
-        n_fresh = nb_need - len(hit)               # fork page included
-        plan = {"hit": hit, "fork_src": fork_src, "reuse": reuse,
+        # fresh pages cover the host-tier restores, the fork, and the
+        # suffix — only resident hits come for free
+        n_fresh = nb_need - len(hit)
+        plan = {"hit": hit, "spill": spill, "fork_src": fork_src,
+                "fork_node": fork_node, "reuse": reuse,
                 "nb_need": nb_need, "n_fresh": n_fresh}
         if peek:
             ref0 = [p for p in hit if self.pool.refcount(p) == 0]
@@ -1188,20 +1363,34 @@ class PagedServeEngine(ServeEngine):
         """Admit requests while both a slot and their page budget fit.
         Leaves the rest queued until completions release pages; raises if
         the head request cannot fit even into an idle pool (it never
-        will)."""
+        will).
+
+        Priority preemption: when the (priority-ordered) head does not
+        fit, a strictly-lower-priority running slot may be swapped out to
+        host to make room — but only while the wave is still empty, so
+        every committed peek plan postdates every preemption this call
+        makes (a victim's released pages change the ref-0/hit picture,
+        which would silently stale earlier plans)."""
+        self._priority_order(waiting)
         wave: list[Request] = []
-        avail = self.pool.available()
+        spent = 0
         charged: set[int] = set()       # ref-0 hit pages already budgeted —
-        while waiting and len(wave) < len(self._free):
+        while waiting:
+            if len(wave) >= len(self._free):
+                if wave or not self._preempt_for(waiting[0]):
+                    break
+                continue                # a slot freed; re-check the head
             plan = self._plan(waiting[0], peek=True)
             # — wave-mates sharing a cached prefix retain the same physical
             # pages, so each one leaves the evictable set exactly once
             ref0_new = [p for p in plan["ref0_pages"] if p not in charged]
             cost = plan["n_fresh"] + len(ref0_new)
-            if cost > avail:
-                break
+            if cost > self.pool.available() - spent:
+                if wave or not self._preempt_for(waiting[0]):
+                    break
+                continue                # pages freed; replan the head
             charged.update(ref0_new)
-            avail -= cost
+            spent += cost
             wave.append(waiting.popleft())
         if not wave and waiting and not self.any_active:
             need = self._plan(waiting[0], peek=True)["cost"]
@@ -1210,6 +1399,155 @@ class PagedServeEngine(ServeEngine):
                 f"holds {self.pool.num_pages} (page_size="
                 f"{self.page_size}); grow num_pages or shrink the request")
         return wave
+
+    # ------------------------------------------------------------------
+    # priority preemption: swap a running slot out to host, resume later
+    # ------------------------------------------------------------------
+
+    def _can_admit(self, waiting: deque) -> bool:
+        """A full engine can still admit when some waiting request
+        strictly outranks a running slot — ``_select_wave`` will preempt
+        the victim to make room."""
+        if self._free:
+            return True
+        top = max(r.priority for r in waiting)
+        return any(r is not None and r.priority < top
+                   for r in self._slot_owner)
+
+    def _preempt_for(self, incoming: Request) -> bool:
+        """Swap out one running victim for a strictly-higher-priority
+        incoming request.  Victim order is total and deterministic —
+        lowest priority, then most recently admitted, then highest rid —
+        so scheduling (and every downstream token) is reproducible."""
+        victims = [(r.priority, -self._admitted_tick[r.rid], -r.rid, sl)
+                   for sl, r in enumerate(self._slot_owner)
+                   if r is not None and r.priority < incoming.priority]
+        if not victims:
+            return False
+        self._preempt_slot(min(victims)[3])
+        return True
+
+    def _preempt_slot(self, sl: int) -> None:
+        """Swap slot ``sl`` out to host RAM: copy its decode-state row,
+        sampling key, canonical pos row, and every block-table page's
+        bytes (the spill gather path), then release the pages WITHOUT
+        publish — mid-flight K/V past the committed prefix must never
+        enter the radix index.  The payloads are engine-held and do not
+        consume the pool's ``host_pages`` budget (preemption must work
+        even with the spill tier off)."""
+        req = self._slot_owner[sl]
+        assert req is not None, "preempt of an empty slot"
+        # explicit copies: the decode/verify jits donate all of these
+        tok = np.array(self._tok)
+        pos = np.array(self._pos)
+        gen = np.array(self._gen_left)
+        temp = np.array(self._temp)
+        topk = np.array(self._topk)
+        keys = np.array(self._keys)
+        pos_row = np.array(self._pos_row_fn(self.cache, jnp.int32(sl)),
+                           copy=True)
+        pages = self._slot_pages[sl]
+        payloads = [[np.array(r, copy=True)
+                     for r in self._gather_fn(self.cache, jnp.int32(p))]
+                    for p in pages]
+        tel = self.telemetry
+        carry = (0, 0)
+        if tel is not None and req.rid in self._tel_admit:
+            _, d0, a0 = self._tel_admit[req.rid]
+            if self.spec_k:
+                carry = (int(self._drafted[sl]) - d0,
+                         int(self._accepted[sl]) - a0)
+        self.pool.release(pages)
+        self._slot_pages[sl] = None
+        self._slot_owner[sl] = None
+        self._free.append(sl)
+        # clear the device active bit so the shared decode scan freezes
+        # this row (its block table still maps the released pages)
+        mask = np.zeros((self.max_slots,), bool)
+        mask[sl] = True
+        self._active = self._deact_fn(self._active, jnp.asarray(mask))
+        self._preempted.append(_Preempted(
+            req=req, tok=int(tok[sl]), pos=int(pos[sl]),
+            gen_left=int(gen[sl]), temp=float(temp[sl]),
+            topk=int(topk[sl]), keys=keys[sl].copy(),
+            pos_row=pos_row, payloads=payloads, tel_carry=carry))
+        self.preempts += 1
+        if tel is not None:
+            tel.event("preempt", self.tick, rid=req.rid, slot=sl,
+                      pages=len(payloads), priority=req.priority)
+
+    def _resume_preempted(self, waiting=()) -> None:
+        """Swap preempted requests back in: highest priority first (FIFO
+        within a class).  A strictly-higher-priority *waiting* request
+        holds resumes back — admission would only preempt the resumee
+        again, wasting two page-image round trips."""
+        if not self._preempted:
+            return
+        self._preempted.sort(key=lambda p: -p.req.priority)
+        top_wait = max((r.priority for r in waiting), default=None)
+        kept: list[_Preempted] = []
+        for pre in self._preempted:
+            if (self._free
+                    and (top_wait is None
+                         or pre.req.priority >= top_wait)
+                    and self._resume_one(pre)):
+                continue
+            kept.append(pre)
+        self._preempted = kept
+
+    def _resume_one(self, pre: _Preempted) -> bool:
+        """Restore one preempted request into a free slot: allocate its
+        page count, inject every payload, rewrite the slot's bt row and
+        pos track, and merge its decode-state row back — after which the
+        request is indistinguishable from one that was never preempted."""
+        n = len(pre.payloads)
+        fresh = self.pool.alloc(n)
+        if fresh is None:
+            return False
+        sl = self._free.popleft()
+        for payload, pg in zip(pre.payloads, fresh):
+            self._restore_page(payload, pg)
+        s = self.max_slots
+        mask = np.zeros((s,), bool)
+        mask[sl] = True
+        new_bt = np.full((s, self.n_blocks), self.num_pages, np.int32)
+        new_bt[sl, :n] = fresh
+        self.cache = self._resume_fn(self.cache, jnp.asarray(mask),
+                                     jnp.asarray(new_bt),
+                                     jnp.asarray(pre.pos_row))
+        n_tok = np.zeros((s,), np.int32)
+        n_pos = np.zeros((s,), np.int32)
+        n_gen = np.zeros((s,), np.int32)
+        n_temp = np.zeros((s,), np.float32)
+        n_topk = np.zeros((s,), np.int32)
+        n_keys = np.zeros((s, 2), np.uint32)
+        n_tok[sl] = pre.tok
+        n_pos[sl] = pre.pos
+        n_gen[sl] = pre.gen_left
+        n_temp[sl] = pre.temp
+        n_topk[sl] = pre.topk
+        n_keys[sl] = pre.keys
+        (self._tok, self._pos, self._active, self._gen_left, self._temp,
+         self._topk, self._keys) = self._state_fn(
+            self._tok, self._pos, self._active, self._gen_left,
+            self._temp, self._topk, self._keys, jnp.asarray(mask),
+            jnp.asarray(n_tok), jnp.asarray(n_pos), jnp.asarray(n_gen),
+            jnp.asarray(n_temp), jnp.asarray(n_topk), jnp.asarray(n_keys))
+        self._slot_pages[sl] = list(fresh)
+        self._slot_owner[sl] = pre.req
+        self.resumes += 1
+        tel = self.telemetry
+        if tel is not None:
+            # re-seed the per-request spec attribution baseline so finish
+            # still reports drafted/accepted as if never preempted
+            base_d = base_a = 0
+            if self.spec_k:
+                base_d = int(self._drafted[sl]) - pre.tel_carry[0]
+                base_a = int(self._accepted[sl]) - pre.tel_carry[1]
+            self._tel_admit[pre.req.rid] = (sl, base_d, base_a)
+            tel.event("resume", self.tick, rid=pre.req.rid, slot=sl,
+                      pages=n)
+        return True
 
     def _release_slot(self, sl: int, seq: tuple | None = None) -> None:
         pages = self._slot_pages[sl]
@@ -1252,9 +1590,17 @@ class PagedServeEngine(ServeEngine):
             fresh = self.pool.alloc(plan["n_fresh"])
             if fresh is None:                      # submit() without budget
                 self.pool.release(plan["hit"])
+                self.pool.unpin(plan["spill"])
+                if plan["fork_node"] is not None:
+                    self.pool.unpin([plan["fork_node"]])
                 for pl in plans:                   # roll back committed reqs
                     self.pool.release(pl["hit"])
                     self.pool.release(pl["fresh"])
+                    # pl["spill"] nodes were already restored (now ordinary
+                    # resident cache — correct bytes, no pin); only a
+                    # pending payload fork still holds a pin
+                    if pl["fork_node"] is not None:
+                        self.pool.unpin([pl["fork_node"]])
                 for sl2 in reversed(slots):
                     self._free.appendleft(sl2)
                 raise RuntimeError(
@@ -1263,6 +1609,15 @@ class PagedServeEngine(ServeEngine):
                     f"{plan['n_fresh']} needed); check free pages before "
                     f"submit or let run() schedule admission")
             plan["fresh"] = fresh
+            # restore the spilled chain NOW, top-down, into the leading
+            # fresh pages — before the next request plans, so wave-mates
+            # sharing the chain see ordinary resident hits (and never
+            # double-restore), and before publish (restore-before-publish)
+            for nd, pg in zip(plan["spill"], fresh):
+                self._restore_page(nd.payload, pg)
+                self.pool.restore(nd, pg)
+                if tel is not None:
+                    tel.event("restore", self.tick, page=pg)
             plans.append(plan)
 
         # Every allocation succeeded — only now dispatch COW page copies
@@ -1270,8 +1625,32 @@ class PagedServeEngine(ServeEngine):
         # and the prefix-savings counters untouched.
         for r, sl, plan in zip(reqs, slots, plans):
             fresh = plan["fresh"]
-            if plan["fork_src"] is not None:
-                fork_dst = fresh[0]
+            # leading fresh pages took the Phase-1 restores; the rest
+            # carry the fork (if any) and the suffix
+            restored = fresh[:len(plan["spill"])]
+            rest = fresh[len(plan["spill"]):]
+            if plan["fork_node"] is not None:
+                # payload fork: the boundary chunk lives host-side.  If a
+                # wave-mate restored the node in Phase 1 it is resident
+                # again — fall back to an ordinary device-side COW copy
+                # (the bytes are identical either way).
+                nd = plan["fork_node"]
+                fork_dst = rest[0]
+                if nd.page >= 0:
+                    self.cache = self._copy_fn(self.cache,
+                                               jnp.int32(nd.page),
+                                               jnp.int32(fork_dst))
+                else:
+                    self._restore_page(nd.payload, fork_dst)
+                self.pool.unpin([nd])
+                self.pool.note_cow()
+                if tel is not None:
+                    tel.event("cow_fork", self.tick,
+                              src=nd.page if nd.page >= 0 else -1,
+                              dst=fork_dst)
+                bt_row = plan["hit"] + restored + [fork_dst] + rest[1:]
+            elif plan["fork_src"] is not None:
+                fork_dst = rest[0]
                 self.cache = self._copy_fn(self.cache,
                                            jnp.int32(plan["fork_src"]),
                                            jnp.int32(fork_dst))
@@ -1279,9 +1658,9 @@ class PagedServeEngine(ServeEngine):
                 if tel is not None:
                     tel.event("cow_fork", self.tick,
                               src=plan["fork_src"], dst=fork_dst)
-                bt_row = plan["hit"] + [fork_dst] + fresh[1:]
+                bt_row = plan["hit"] + restored + [fork_dst] + rest[1:]
             else:
-                bt_row = plan["hit"] + fresh
+                bt_row = plan["hit"] + restored + rest
             assert len(bt_row) == plan["nb_need"]
             plan["bt_row"] = bt_row
             self._slot_pages[sl] = list(bt_row)

@@ -206,6 +206,17 @@ def run(argv=None):
                         "over a shared-system-prompt trace")
     p.add_argument("--page-size", type=int, default=16,
                    help="tokens per KV page for --paged")
+    p.add_argument("--host-cache-pages", type=int, default=0,
+                   help="host-RAM spill tier capacity for --paged "
+                        "(DESIGN.md §13): LRU-evicted radix pages demote "
+                        "to host instead of being destroyed, and radix "
+                        "hits restore them; 0 disables")
+    p.add_argument("--priority", type=int, default=0, metavar="K",
+                   help="for --paged: give every Kth demo request "
+                        "priority 1 (0 disables) — higher-priority "
+                        "arrivals admit first and may preempt a running "
+                        "lower-priority slot to host RAM, which resumes "
+                        "bit-identically later")
     p.add_argument("--num-pages", type=int, default=None,
                    help="physical pages in the pool for --paged "
                         "(default: slots * ceil(max_len / page_size))")
@@ -313,7 +324,10 @@ def run(argv=None):
                             int(rng.integers(1, max(
                                 2, args.prompt_len - sys_len + 1))))),
                         max_new_tokens=int(rng.integers(2, args.gen_len + 1)),
-                        arrival=int(rng.poisson(2) * i))
+                        arrival=int(rng.poisson(2) * i),
+                        priority=(1 if args.priority
+                                  and i % args.priority == args.priority - 1
+                                  else 0))
                 for i in range(args.requests)]
         spec_draft = (NLDPEConfig(enabled=True) if args.spec_full_analog
                       else NLDPEConfig(enabled=False))
@@ -335,7 +349,9 @@ def run(argv=None):
         eng = PagedServeEngine(cfg, params, max_slots=args.slots,
                                max_len=max_len, nldpe=nldpe,
                                page_size=args.page_size,
-                               num_pages=args.num_pages, spec_k=args.spec,
+                               num_pages=args.num_pages,
+                               host_cache_pages=args.host_cache_pages,
+                               spec_k=args.spec,
                                spec_draft=spec_draft, drift=drift,
                                fidelity=(fidelity if drift is not None
                                          else None),
@@ -359,6 +375,11 @@ def run(argv=None):
         print(f"  prefix hits {st['hits']}/{st['lookups']}, "
               f"prefill tokens saved {st['prefill_tokens_saved']}, "
               f"cow forks {st['cow_forks']}, evicted {st['evicted']}")
+        if args.host_cache_pages or args.priority:
+            print(f"  tiers: spilled {st['spilled']}, restored "
+                  f"{st['restored']}, host {eng.pool.host_used}/"
+                  f"{eng.pool.host_pages} pages; preempts {eng.preempts}, "
+                  f"resumes {eng.resumes}")
         if args.spec:
             sp = eng.spec_stats
             print(f"  speculative: {sp['spec_steps']} steps, accepted "

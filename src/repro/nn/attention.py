@@ -335,6 +335,59 @@ def paged_dense_view(cache) -> dict:
     return view
 
 
+_POOL_LEAVES = ("k", "v", "k_scale", "v_scale")
+
+
+def _pool_leaf_axis(path):
+    """Pages axis of one pool leaf in a full *model* paged-cache pytree, or
+    None for non-pool leaves (``pos``/``bt`` and any non-paged state).
+    Stacked layer groups carry pages on axis 1 (their leaves are
+    ``(n_groups, num_pages, ...)``); tail layers on axis 0 — the same
+    first-key-is-"groups" rule as ``launch.spec_decode.batch_dim`` (not
+    imported: nn must stay importable without the launch package)."""
+    keys = [k.key for k in path if isinstance(k, jax.tree_util.DictKey)]
+    if not keys or keys[-1] not in _POOL_LEAVES:
+        return None
+    return 1 if keys[0] == "groups" else 0
+
+
+def gather_page_rows(cache, page) -> list:
+    """One physical page's bytes across every pool leaf of a model paged
+    cache: the (Hkv, page_size, D) K/V rows — int8 codes plus per-position
+    scale rows when the pool is quantized; any ``kv_quant`` mode works
+    because whatever pool keys exist are mapped.  Returns a flat list in
+    ``jax.tree_util`` path order; ``scatter_page_rows`` consumes the same
+    order.  The host spill tier round-trips pages through these two
+    (DESIGN.md §13): gather → explicit host copy → scatter restores the
+    page bit-identically.
+    """
+    rows = []
+    for path, leaf in jax.tree_util.tree_flatten_with_path(cache)[0]:
+        ax = _pool_leaf_axis(path)
+        if ax is not None:
+            rows.append(jax.lax.dynamic_index_in_dim(
+                leaf, page, axis=ax, keepdims=False))
+    return rows
+
+
+def scatter_page_rows(cache, rows, page):
+    """Inverse of ``gather_page_rows``: write ``rows`` back as physical
+    page ``page`` in every pool leaf (same flat order)."""
+    it = iter(rows)
+
+    def one(path, leaf):
+        ax = _pool_leaf_axis(path)
+        if ax is None:
+            return leaf
+        row = jnp.asarray(next(it)).astype(leaf.dtype)
+        return jax.lax.dynamic_update_index_in_dim(leaf, row, page, axis=ax)
+
+    out = jax.tree_util.tree_map_with_path(one, cache)
+    if next(it, None) is not None:
+        raise ValueError("scatter_page_rows: rows do not match this cache")
+    return out
+
+
 def _quantize_kv(x: jax.Array, mode: str = "int8"):
     """(B, H, S, D) -> int8 codes + per-(B, H, S) scale.
 

@@ -45,7 +45,9 @@ import numpy as np
 # ---------------------------------------------------------------------------
 
 #: Version stamp written into every JSONL flush; bump on any field change.
-SCHEMA_VERSION = 1
+#: v2: hierarchical-cache events — "spill" reshaped from its reserved
+#: placeholder to per-page, plus "restore"/"preempt"/"resume".
+SCHEMA_VERSION = 2
 
 #: Committed schema: event kind -> exactly these payload fields (every
 #: event additionally carries the BASE_FIELDS).  ``emit`` validates the
@@ -64,9 +66,15 @@ EVENT_SCHEMA: dict[str, tuple[str, ...]] = {
     "spec_draft": ("k", "n_active", "wall_s"),
     "spec_verify": ("k", "drafted", "accepted", "wall_s"),
     # paged-pool lifecycle
-    "cow_fork": ("src", "dst"),
+    "cow_fork": ("src", "dst"),          # src == -1: forked off a host
+    #                                      payload (spilled boundary page)
     "eviction": ("page",),
-    "spill": ("pages", "tier"),          # reserved: host-RAM spill tier
+    # hierarchical cache (DESIGN.md §13): device→host page demotion,
+    # host→device promotion, and priority preempt/resume swaps
+    "spill": ("page",),
+    "restore": ("page",),
+    "preempt": ("rid", "slot", "pages", "priority"),
+    "resume": ("rid", "slot", "pages"),
     # closed-loop fidelity ladder transitions (DESIGN.md §10)
     "fidelity": ("kind", "spec_k", "ewma", "vclock_s"),
 }

@@ -50,9 +50,11 @@ def resilient_loop(step_fn: Callable, state, *, steps: int,
         try:
             if fail_injector is not None:
                 fail_injector(i, restarts)
-            t0 = time.time()
+            # perf_counter, not time.time(): an NTP step makes wall-clock
+            # durations negative/garbage, poisoning the straggler median
+            t0 = time.perf_counter()
             state = step_fn(state, i)
-            dt = time.time() - t0
+            dt = time.perf_counter() - t0
             times.append(dt)
             if len(times) >= 8:
                 med = statistics.median(times[-32:])
@@ -69,9 +71,13 @@ def resilient_loop(step_fn: Callable, state, *, steps: int,
                 raise
             restored = manager.restore_latest(state)
             if restored is None:
-                i = 0
-            else:
-                state, i = restored
+                # no checkpoint to roll back to: rewinding i to 0 while
+                # keeping the last-good state would silently repeat
+                # already-consumed batches, violating the module contract
+                # ("restarts never repeat or skip data") — surface the
+                # failure to the job controller instead
+                raise
+            state, i = restored
     if manager is not None:
         manager.save(state, steps)
     return state, LoopReport(completed_steps=steps - start, restarts=restarts,

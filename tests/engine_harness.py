@@ -98,7 +98,8 @@ def paged_engine(spec_k: int = 0, mesh_shape=None, **over) -> PagedServeEngine:
     key = ("paged", spec_k, None if mesh_shape is None else tuple(mesh_shape),
            tuple(sorted(over.items())))
     if key not in _STATE:
-        kw = engine_kwargs(page_size=PAGE, num_pages=NUM_PAGES, **over)
+        kw = engine_kwargs(**{"page_size": PAGE, "num_pages": NUM_PAGES,
+                              **over})
         if spec_k:
             kw.update(spec_k=spec_k, spec_draft=WQ_DRAFT)
         _STATE[key] = PagedServeEngine(CFG, shared_params(), **kw,
@@ -165,8 +166,11 @@ def run_trace(engine, trace) -> dict:
 
 def audit(paged: PagedServeEngine) -> None:
     """Post-trace pool invariants: every slot free, allocator consistent,
-    every page reclaimable (no leaks — speculative rejections included)."""
+    every page reclaimable (no leaks — speculative rejections included).
+    pool.check() audits BOTH tiers: device refcounts and the host spill
+    set (payloads present, pins cleared, host_used within budget)."""
     assert paged.free_slots == paged.max_slots
+    assert not paged._preempted, "preempted requests left unresumed"
     paged.pool.check()
     assert paged.pool.available() == paged.pool.num_pages, \
         "page leak: rejected speculative pages must return to the pool"

@@ -115,3 +115,78 @@ def test_error_feedback_unbiased_over_time():
     mean_applied = acc / 64
     np.testing.assert_allclose(np.asarray(mean_applied), np.asarray(g_const),
                                rtol=0.05, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# host-copy / timing bug sweep (ISSUE 9 satellites)
+# ---------------------------------------------------------------------------
+
+def test_async_save_snapshot_immune_to_donated_update(tmp_path):
+    """Regression: ``save`` must deep-copy leaves (np.array(copy=True),
+    never np.asarray) before handing them to the async writer.  An
+    asarray'd CPU jax array can alias the device buffer, and a donating
+    jit — the in-place optimizer update pattern — may overwrite that
+    memory between ``save(blocking=False)`` and ``wait()``, silently
+    corrupting the checkpoint."""
+    m = CheckpointManager(str(tmp_path), async_write=True)
+    x = jnp.arange(1 << 16, dtype=jnp.float32)       # big enough to alias
+    original = np.array(x, copy=True)
+    update = jax.jit(lambda a: a * -1.0, donate_argnums=(0,))
+    m.save({"x": x}, 1, blocking=False)
+    x = update(x)                                    # donation may reuse x
+    jax.block_until_ready(x)
+    m.wait()
+    out, step = m.restore_latest({"x": jnp.zeros_like(original)})
+    assert step == 1
+    np.testing.assert_array_equal(np.asarray(out["x"]), original)
+
+
+def test_resilient_loop_times_steps_with_perf_counter():
+    """Regression: straggler timing must use the monotonic
+    ``time.perf_counter`` — an NTP step during ``time.time()`` deltas
+    yields negative/garbage durations that poison the trailing median."""
+    import inspect
+    import re
+    src = inspect.getsource(resilient_loop)
+    assert not re.search(r"=\s*time\.time\(\)", src), \
+        "resilient_loop times steps with wall-clock time.time()"
+    assert "perf_counter" in src
+
+
+def test_resilient_loop_failure_before_first_checkpoint_reraises(tmp_path):
+    """Regression: a failure before any checkpoint exists used to rewind
+    ``i`` to 0 while keeping the last-good state — silently repeating
+    already-consumed batches.  With nothing to restore, the loop must
+    surface the failure instead."""
+    m = CheckpointManager(str(tmp_path))
+    seen = []
+
+    def fail_injector(step, restarts):
+        if step == 3 and restarts == 0:
+            raise RuntimeError("node failure before first checkpoint")
+
+    def step_fn(state, i):
+        seen.append(i)
+        return state
+
+    with pytest.raises(RuntimeError, match="before first checkpoint"):
+        resilient_loop(step_fn, {}, steps=10, manager=m, ckpt_every=5,
+                       fail_injector=fail_injector)
+    assert seen == [0, 1, 2], "steps must not re-run after the re-raise"
+    # the other restart flavor still works: same failure AFTER a
+    # checkpoint restores and completes (no repeated or skipped data)
+    calls = []
+
+    def fail_late(step, restarts):
+        if step == 7 and restarts == 0:
+            raise RuntimeError("late failure")
+
+    def acc_fn(state, i):
+        calls.append(i)
+        return {"acc": state["acc"] + i}
+
+    final, report = resilient_loop(acc_fn, {"acc": jnp.float32(0)}, steps=10,
+                                   manager=m, ckpt_every=5,
+                                   fail_injector=fail_late)
+    assert report.restarts == 1
+    assert float(final["acc"]) == sum(range(10))

@@ -353,3 +353,188 @@ if HAVE_HYPOTHESIS:
     @settings(max_examples=6, deadline=None)
     def test_hypothesis_mixed_traces_contracts(trace):
         check_mixed_trace(trace)
+
+
+# ---------------------------------------------------------------------------
+# the hierarchical-cache column (ISSUE 9): host-RAM spill tier + priority
+# preemption.  Oversubscribed device pools (smaller than the zero-headroom
+# NUM_PAGES) force constant eviction into the host tier; every test name
+# carries "spill" so CI's spill-interpret leg selects them with -k spill.
+# ---------------------------------------------------------------------------
+
+SPILL_POOL = 8          # device pages (vs NUM_PAGES = 12 zero-headroom)
+HOST_PAGES = 6          # host-tier budget
+
+
+def spill_engine(spec_k=0, **over):
+    """The two-tier singleton: same reduced model, oversubscribed device
+    pool backed by a host spill tier."""
+    return H.paged_engine(spec_k=spec_k, num_pages=SPILL_POOL,
+                          host_cache_pages=HOST_PAGES, **over)
+
+
+def spill_restore_trace(seed=5):
+    """Deterministic spill-then-restore trace: a 3-page shared prefix is
+    published, evicted to host by two long fillers decoding concurrently,
+    then hit twice more — the hits must restore host->device instead of
+    re-prefilling."""
+    rng = np.random.default_rng(seed)
+    shared = tuple(int(x) for x in
+                   rng.integers(0, H.CFG.vocab_size, 3 * H.PAGE))
+    filler1 = tuple(int(x) for x in rng.integers(0, 64, 11))
+    filler2 = tuple(int(x) for x in rng.integers(0, 64, 10))
+    return [(shared, 3, 0), (filler1, 6, 9), (filler2, 6, 0),
+            (shared + (1,), 4, 9), (shared, 2, 9)]
+
+
+def priority_requests(base_tick, temps=(0.0, 0.0), lens=(9, 10, 8),
+                      gens=(6, 6, 4)):
+    """Two low-priority requests saturate both slots; a high-priority
+    arrival one tick later can only be admitted by preemption.  ``lens``/
+    ``gens`` let the speculative column shrink the page footprints so
+    both low-priority requests actually co-reside (spec_k slack pages
+    would otherwise leave a slot free — no preemption to test)."""
+    rng = np.random.default_rng(11)
+    prompts = [tuple(int(x) for x in rng.integers(0, 64, n)) for n in lens]
+    return [Request(rid=0, tokens=prompts[0], max_new_tokens=gens[0],
+                    temperature=temps[0], arrival=base_tick),
+            Request(rid=1, tokens=prompts[1], max_new_tokens=gens[1],
+                    temperature=temps[1], arrival=base_tick),
+            Request(rid=2, tokens=prompts[2], max_new_tokens=gens[2],
+                    arrival=base_tick + 1, priority=2)]
+
+
+def test_spill_restore_bit_identity_greedy():
+    """Tentpole acceptance: requests whose prefix pages were spilled to
+    host and restored produce tokens bit-identical to the unlimited-pool
+    engine — on the deterministic restore trace (spills AND restores must
+    actually fire) and on oversubscribed Poisson traces."""
+    eng = spill_engine()
+    before = dict(eng.pool.stats)
+    trace = spill_restore_trace()
+    got = H.run_trace(eng, trace)
+    H.audit(eng)
+    st = dict(eng.pool.stats)
+    assert st["spilled"] > before["spilled"], "trace never spilled"
+    assert st["restored"] > before["restored"], "trace never restored"
+    assert H.run_trace(H.paged_engine(), trace) == got
+    for seed in (0, 2, 3):
+        trace = random_greedy_trace(np.random.default_rng(seed))
+        assert H.run_trace(eng, trace) \
+            == H.run_trace(H.paged_engine(), trace), \
+            f"spill engine diverged on greedy seed {seed}"
+        H.audit(eng)
+
+
+def test_spill_restore_bit_identity_sampled():
+    """Same contract under mixed greedy/temperature/top-k traffic: the
+    per-(slot-key, position) sampling fold makes every draw independent
+    of physical page placement, so host round-trips must not perturb
+    sampled tokens either."""
+    eng = spill_engine()
+    for seed in (10, 12):
+        trace = random_mixed_trace(np.random.default_rng(seed))
+        assert H.run_trace(eng, trace) \
+            == H.run_trace(H.paged_engine(), trace), \
+            f"spill engine diverged on mixed seed {seed}"
+        H.audit(eng)
+
+
+def test_spill_restore_speculative_column():
+    """A speculative engine over the two-tier pool: restored pages feed
+    the draft and verify passes, tokens stay bit-equal to the unlimited
+    spec engine."""
+    spec = spill_engine(spec_k=TELEMETRY_SPEC_K)
+    before = dict(spec.pool.stats)
+    trace = spill_restore_trace()
+    got = H.run_trace(spec, trace)
+    H.audit(spec)
+    assert spec.pool.stats["spilled"] > before["spilled"]
+    assert spec.spec_stats["drafted"] > 0
+    assert H.run_trace(H.paged_engine(spec_k=TELEMETRY_SPEC_K), trace) == got
+
+
+def test_spill_preemption_mixed_priority():
+    """Priority preemption acceptance: a high-priority arrival preempts a
+    saturated engine's lowest-priority slot (pages + decode state swapped
+    to host); the victim resumes and every request — greedy and sampled —
+    emits exactly the tokens of a never-preempted run."""
+    for temps in ((0.0, 0.0), (0.9, 0.0)):
+        eng = spill_engine()
+        pre_before, res_before = eng.preempts, eng.resumes
+        reqs = priority_requests(eng.tick, temps)
+        got = {c.rid: c.tokens for c in eng.run(reqs)}
+        assert eng.preempts > pre_before, "high priority never preempted"
+        assert eng.resumes > res_before
+        H.audit(eng)
+        # the never-preempted twin: same requests, priorities stripped
+        # (FIFO admission -> no preemption), on the unlimited pool
+        base = H.paged_engine()
+        plain = [Request(rid=r.rid, tokens=r.tokens,
+                         max_new_tokens=r.max_new_tokens,
+                         temperature=r.temperature, top_k=r.top_k,
+                         seed=r.seed, arrival=base.tick + (r.arrival
+                                                           - reqs[0].arrival))
+                 for r in reqs]
+        exp = {c.rid: c.tokens for c in base.run(plain)}
+        assert got == exp, f"preemption changed tokens (temps={temps})"
+        H.audit(base)
+        for r in reqs:
+            if r.temperature == 0.0:
+                assert got[r.rid] == H.run_alone(r.tokens, r.max_new_tokens)
+
+
+def test_spill_preemption_speculative_column():
+    """Preempting a speculating slot: the drafted/accepted carry survives
+    the host round-trip, greedy outputs still match the oracle."""
+    spec = spill_engine(spec_k=TELEMETRY_SPEC_K)
+    pre_before = spec.preempts
+    reqs = priority_requests(spec.tick, lens=(7, 6, 6), gens=(6, 6, 3))
+    got = {c.rid: c.tokens for c in spec.run(reqs)}
+    assert spec.preempts > pre_before
+    H.audit(spec)
+    for r in reqs:
+        assert got[r.rid] == H.run_alone(r.tokens, r.max_new_tokens)
+
+
+def test_spill_telemetry_twin_stats_bit_identical():
+    """Fresh telemetry-on/off twins of the two-tier engine over the same
+    spill + preemption schedule: tokens, the full pool stats dict (both
+    tiers), and the spec acceptance counters must be bit-identical —
+    observation is never control flow — and the instrumented twin's trace
+    must actually record the new spill/restore/preempt/resume events."""
+    from repro.launch.engine import PagedServeEngine
+
+    def fresh(telemetry):
+        kw = H.engine_kwargs(page_size=H.PAGE, num_pages=SPILL_POOL,
+                             host_cache_pages=HOST_PAGES,
+                             spec_k=TELEMETRY_SPEC_K, spec_draft=H.WQ_DRAFT,
+                             telemetry=telemetry)
+        return PagedServeEngine(H.CFG, H.shared_params(), **kw)
+
+    outs, engines = [], []
+    for telemetry in (True, False):
+        eng = fresh(telemetry)
+        out = H.run_trace(eng, spill_restore_trace())
+        out.update({100 + c.rid: c.tokens
+                    for c in eng.run([Request(rid=r.rid + 100,
+                                              tokens=r.tokens,
+                                              max_new_tokens=r.max_new_tokens,
+                                              temperature=r.temperature,
+                                              priority=r.priority,
+                                              arrival=r.arrival)
+                                      for r in priority_requests(
+                                          eng.tick, lens=(7, 6, 6),
+                                          gens=(6, 6, 3))])})
+        H.audit(eng)
+        outs.append(out)
+        engines.append(eng)
+    on, off = engines
+    assert outs[0] == outs[1], "telemetry changed two-tier tokens"
+    assert dict(on.pool.stats) == dict(off.pool.stats)
+    assert (on.preempts, on.resumes) == (off.preempts, off.resumes)
+    assert on.spec_stats["drafted"] == off.spec_stats["drafted"]
+    assert on.spec_stats["accepted"] == off.spec_stats["accepted"]
+    assert on.pool.stats["spilled"] > 0 and on.pool.stats["restored"] > 0
+    kinds = {e["ev"] for e in on.telemetry.trace}
+    assert {"spill", "restore", "preempt", "resume"} <= kinds, kinds

@@ -262,3 +262,223 @@ def test_publish_committed_skips_already_published_prefix():
     pool.release(prompt_pages)
     pool.release(gen_pages)
     pool.check()
+
+
+# ---------------------------------------------------------------------------
+# host-RAM spill tier (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+def _spilling_pool(num_pages, page_size, host_pages, events=None):
+    """Pool with a recording spill hook: payload is an opaque marker list
+    (the real engine stores per-leaf numpy copies; the pool never looks
+    inside)."""
+    pool = PagePool(num_pages=num_pages, page_size=page_size,
+                    host_pages=host_pages)
+    if events is not None:
+        pool.on_spill = lambda p: (events.append(("spill", p,
+                                                  pool.free_pages)),
+                                   [("bytes-of", p)])[1]
+        pool.on_evict = lambda p: events.append(("evict", p,
+                                                 pool.free_pages))
+    else:
+        pool.on_spill = lambda p: [("bytes-of", p)]
+    return pool
+
+
+def test_spill_then_restore_round_trip():
+    pool = _spilling_pool(2, 1, host_pages=2)
+    a, b = pool.alloc(2)
+    pool.publish(FP, (1,), [a])
+    pool.publish(FP, (2,), [b])
+    pool.release([a, b])
+    c, d = pool.alloc(2)                 # evicts both -> demoted to host
+    assert pool.stats["spilled"] == 2 and pool.host_used == 2
+    assert pool.match(FP, (1,)) == []    # not device-resident any more
+    pool.release([c, d])
+    pages, sp = pool.match_tiers(FP, (1,))
+    assert pages == [] and len(sp) == 1 and sp[0].pinned
+    [p] = pool.alloc(1)
+    pool.restore(sp[0], p)               # engine injected the payload
+    assert pool.match(FP, (1,)) == [p]
+    assert pool.host_used == 1 and pool.stats["restored"] == 1
+    pool.release([p])
+    pool.check()
+
+
+def test_on_spill_fires_before_free_on_evict_after():
+    """Notification ordering contract: ``on_spill`` sees the page while
+    its device bytes are still resident (page not yet freed), ``on_evict``
+    fires after the free — on the spill path AND the declined path."""
+    events = []
+    pool = _spilling_pool(1, 1, host_pages=2, events=events)
+    [a] = pool.alloc(1)
+    pool.publish(FP, (1,), [a])
+    pool.release([a])
+    [b] = pool.alloc(1)                  # forces the spill eviction
+    spill_evts = [e for e in events if e[0] == "spill"]
+    evict_evts = [e for e in events if e[0] == "evict"]
+    assert [e[:2] for e in events[:2]] == [("spill", a), ("evict", a)]
+    assert spill_evts[0][2] == 0         # free list still empty at on_spill
+    # declined spill: hook says None -> destroy, but ordering is the same
+    events.clear()
+    pool.on_spill = lambda p: (events.append(("spill", p)), None)[1]
+    pool.publish(FP, (2,), [b])
+    pool.release([b])
+    [c] = pool.alloc(1)
+    assert [e[:2] for e in events] == [("spill", b), ("evict", b)]
+    assert pool.stats["spill_dropped"] == 1
+    assert pool.match_tiers(FP, (2,), peek=True) == ([], [])
+    pool.release([c])
+    pool.check()
+
+
+def test_spill_disabled_without_host_budget():
+    """host_pages=0 keeps the pre-tier destroy-on-evict behavior even if
+    a spill hook is installed."""
+    calls = []
+    pool = PagePool(num_pages=1, page_size=1, host_pages=0)
+    pool.on_spill = lambda p: calls.append(p) or [("x",)]
+    [a] = pool.alloc(1)
+    pool.publish(FP, (1,), [a])
+    pool.release([a])
+    [b] = pool.alloc(1)
+    assert calls == [] and pool.stats["spilled"] == 0
+    assert pool.match_tiers(FP, (1,), peek=True) == ([], [])
+    pool.release([b])
+    pool.check()
+
+
+def test_host_tier_lru_evicts_least_recently_matched_spill():
+    """Spilled-node LRU: a host-tier slot is reclaimed from the spilled
+    node least recently touched by match_tiers, leaf-first."""
+    pool = _spilling_pool(1, 1, host_pages=2)
+    [p] = pool.alloc(1)
+    for tok in (10, 20):
+        pool.publish(FP, (tok,), [p])
+        pool.release([p])
+        [p] = pool.alloc(1)              # spills (tok,)
+    assert pool.host_used == 2
+    _, sp = pool.match_tiers(FP, (10,))  # (10,) is now most recent
+    pool.unpin(sp)
+    pool.publish(FP, (30,), [p])
+    pool.release([p])
+    [p] = pool.alloc(1)                  # host full -> (20,) destroyed
+    assert pool.stats["host_evicted"] == 1
+    assert pool.match_tiers(FP, (20,), peek=True) == ([], [])
+    assert len(pool.match_tiers(FP, (10,), peek=True)[1]) == 1
+    pool.release([p])
+    pool.check()
+
+
+def test_pinned_spilled_nodes_survive_host_pressure():
+    """A spilled node an in-flight admission matched (pinned) must not be
+    destroyed by host-tier eviction; the incoming victim is dropped
+    instead (spill declined for lack of a host slot)."""
+    pool = _spilling_pool(1, 1, host_pages=1)
+    [p] = pool.alloc(1)
+    pool.publish(FP, (1,), [p])
+    pool.release([p])
+    [p] = pool.alloc(1)                  # spill (1,) -> host 1/1
+    _, sp = pool.match_tiers(FP, (1,))   # pin it
+    pool.publish(FP, (2,), [p])
+    pool.release([p])
+    [q] = pool.alloc(1)                  # (2,) evicted; host full + pinned
+    assert pool.stats["spill_dropped"] == 1
+    assert pool.stats["host_evicted"] == 0
+    assert pool.match_tiers(FP, (2,), peek=True) == ([], [])
+    pool.restore(sp[0], q)               # the pinned node restores fine
+    assert pool.match(FP, (1,)) == [q]
+    pool.release([q])
+    pool.check()
+
+
+def test_restore_validates_order_and_page_state():
+    """Restores must run top-down (no resident node below a spilled
+    parent) into a live, unpublished page."""
+    pool = _spilling_pool(2, 1, host_pages=2)
+    a, b = pool.alloc(2)
+    pool.publish(FP, (1, 2), [a, b])     # chain: (1,) -> (2,)
+    pool.release([a, b])
+    c, d = pool.alloc(2)                 # spills leaf (2,) then (1,)
+    assert pool.host_used == 2
+    pool.release([d])
+    _, sp = pool.match_tiers(FP, (1, 2))
+    parent, child = sp
+    with pytest.raises(ValueError, match="still-spilled parent"):
+        pool.restore(child, c)           # bottom-up restore is a bug
+    with pytest.raises(ValueError, match="dead page"):
+        pool.restore(parent, d)          # d went back to the free list
+    pool.restore(parent, c)
+    with pytest.raises(ValueError, match="not spilled"):
+        pool.restore(parent, c)          # already resident
+    with pytest.raises(ValueError, match="published page"):
+        pool.restore(child, c)           # c now belongs to the parent
+    [e] = pool.alloc(1)
+    pool.restore(child, e)
+    assert pool.match(FP, (1, 2)) == [c, e]
+    pool.release([c, e])
+    pool.check()
+
+
+def test_publish_readopts_spilled_chunk():
+    """A slot that re-prefilled a spilled prompt publishes its own device
+    page: the spilled node adopts it (bytes are deterministic per
+    fingerprint+prefix) and the host payload is dropped."""
+    pool = _spilling_pool(2, 2, host_pages=2)
+    [a] = pool.alloc(1)
+    pool.publish(FP, (1, 2), [a])
+    pool.release([a])
+    b, c = pool.alloc(2)                 # spills the (1, 2) chunk
+    assert pool.host_used == 1
+    pool.publish(FP, (1, 2), [b])        # slot re-prefilled it into b
+    assert pool.stats["readopted"] == 1 and pool.host_used == 0
+    assert pool.match(FP, (1, 2)) == [b]
+    pool.release([b, c])
+    pool.check()
+
+
+def test_fingerprint_isolation_across_tiers():
+    """A spilled prefix cached under one NL-DPE fingerprint must never be
+    reported (or restored) for another fingerprint's identical tokens —
+    the host tier keys by the same roots as the device tier."""
+    other = nldpe_fingerprint(NLDPEConfig(enabled=True))
+    pool = _spilling_pool(1, 1, host_pages=2)
+    [p] = pool.alloc(1)
+    pool.publish(FP, (7,), [p])
+    pool.release([p])
+    [p] = pool.alloc(1)                  # FP's (7,) spilled
+    pool.publish(other, (7,), [p])
+    pool.release([p])
+    # resident hit under `other`, spilled hit under FP — never crossed
+    assert pool.match_tiers(other, (7,), peek=True) == ([p], [])
+    pages, sp = pool.match_tiers(FP, (7,), peek=True)
+    assert pages == [] and len(sp) == 1
+    _, sp = pool.match_tiers(FP, (7,))   # pin + restore FP's copy
+    [q] = pool.alloc(1)                  # spills `other`'s page
+    pool.restore(sp[0], q)
+    assert pool.match(FP, (7,)) == [q]
+    pages, sp2 = pool.match_tiers(other, (7,), peek=True)
+    assert pages == [] and len(sp2) == 1 and sp2[0] is not sp[0]
+    assert sp2[0].payload == [("bytes-of", p)]   # its own bytes, untouched
+    pool.release([q])
+    pool.check()
+
+
+def test_spilled_suffix_never_outlives_its_prefix():
+    """Destroying a device-tier victim drops its whole spilled subtree: a
+    host-tier suffix whose resident prefix is gone would restore K/V with
+    missing preceding positions."""
+    pool = _spilling_pool(2, 1, host_pages=1)
+    a, b = pool.alloc(2)
+    pool.publish(FP, (1, 2), [a, b])
+    pool.release([a, b])
+    [c] = pool.alloc(1)                  # leaf (2,) spilled -> host 1/1
+    assert pool.host_used == 1
+    pool.on_spill = lambda p: None       # engine declines further spills
+    [d] = pool.alloc(1)                  # (1,) destroyed -> its spilled
+    assert pool.stats["spill_dropped"] == 1      # subtree must die with it
+    assert pool.stats["host_evicted"] == 1
+    assert pool.host_used == 0
+    assert pool.match_tiers(FP, (1, 2), peek=True) == ([], [])
+    pool.release([c, d])
+    pool.check()
