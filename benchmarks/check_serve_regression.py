@@ -35,6 +35,9 @@ ROWS = ("serve/cb_tok_per_s[off]", "serve/lockstep_tok_per_s[off]",
         "serve/kvq_logits_rel_err[log8]",
         "serve/telemetry_tok_per_s[paged]",
         "serve/telemetry_off_tok_per_s[paged]",
+        "serve/async_tok_per_s[paged]",
+        "serve/async_sync_tok_per_s[paged]",
+        "serve/async_rel_x[paged]",
         "serve/spill_tok_per_s[two_tier]",
         "serve/spill_baseline_tok_per_s[two_tier]",
         "serve/spill_rel_x[two_tier]",
@@ -61,16 +64,18 @@ def main() -> int:
     with open(path) as f:
         baseline = {r["name"]: r for r in json.load(f)["rows"]}
 
-    from benchmarks.serve_bench import (bench_continuous, bench_fidelity,
-                                        bench_kv_quant, bench_latency,
-                                        bench_paged, bench_sharded,
-                                        bench_spec, bench_spill)
+    from benchmarks.serve_bench import (bench_async, bench_continuous,
+                                        bench_fidelity, bench_kv_quant,
+                                        bench_latency, bench_paged,
+                                        bench_sharded, bench_spec,
+                                        bench_spill)
     fresh = {r["name"]: r for r in bench_continuous("off")}
     fresh.update({r["name"]: r for r in bench_paged("shared_prefix")})
     fresh.update({r["name"]: r for r in bench_spec("k4")})
     fresh.update({r["name"]: r for r in bench_kv_quant("log8")})
     fresh.update({r["name"]: r for r in bench_fidelity("drift")})
     fresh.update({r["name"]: r for r in bench_latency("paged")})
+    fresh.update({r["name"]: r for r in bench_async("paged")})
     fresh.update({r["name"]: r for r in bench_spill("two_tier")})
     fresh.update({r["name"]: r for r in bench_sharded("4Lx256d")})
 
@@ -158,8 +163,16 @@ def main() -> int:
     # latency-percentile rows carry {p50, p90, p99} ms dicts in "derived":
     # warn on a p99 blow-up vs baseline (the disaggregated-serving
     # groundwork: tail latency at this offered load is the tracked number)
+    ar = float(fresh["serve/async_rel_x[paged]"]["derived"])
+    if ar < 0.5:
+        print(f"::warning::async pipeline throughput collapsed to "
+              f"{ar:.2f}x of the sync tick loop at the same offered load "
+              f"— the scheduler/drain handoff grew a stall (committed "
+              f"~0.9x on CPU hosts, where the overlap cannot win)")
     for nm, what in (("serve/telemetry_ttft_ms[paged]", "TTFT"),
-                     ("serve/telemetry_tpot_ms[paged]", "TPOT")):
+                     ("serve/telemetry_tpot_ms[paged]", "TPOT"),
+                     ("serve/async_ttft_ms[paged]", "async TTFT"),
+                     ("serve/async_tpot_ms[paged]", "async TPOT")):
         if nm not in baseline:
             print(f"::warning::row {nm} missing from committed baseline")
             continue

@@ -128,6 +128,15 @@ FID_POLICY = FidelityPolicy(window=4, ewma_alpha=0.5, soft_threshold=0.65,
                             reprogram_patience=1, max_reprograms=6)
 
 
+# Async-pipeline cell (ISSUE 10): the same offered load as the telemetry
+# cell (identical trace constants, so the TTFT/TPOT percentiles diff
+# directly against the PR 8 committed baselines) served through the
+# AsyncServeEngine — AOT prefill buckets + the background detokenize/drain
+# thread — vs the plain synchronous tick loop.  The bit-identity contract
+# (async tokens == sync tokens) is asserted in-bench on every measured
+# round, so the committed throughput numbers carry the proof.
+ASYNC_DEPTH = 4                     # in-flight device ticks before a drain
+
 # Telemetry/latency cell (ISSUE 8): the same paged Poisson serve with the
 # full observability stack (event trace, lifecycle records, phase timers,
 # percentile accumulators) attached and detached.  Two commitments ride on
@@ -798,6 +807,96 @@ def bench_latency(label: str):
     ]
 
 
+def bench_async(label: str):
+    """Async disaggregated serving vs the synchronous tick loop (ISSUE 10).
+
+    One paged engine behind the :class:`AsyncServeEngine` pipeline — AOT
+    prefill buckets compiled at construction, device ticks dispatched up
+    to ``ASYNC_DEPTH`` deep, a background drain thread materializing the
+    emitted-token buffers — and one plain engine stepping the classic
+    tick loop, serving the same decode-dominated Poisson trace at the
+    telemetry cell's offered load.  Every measured round asserts the
+    pipeline's tokens equal the sync engine's (the bit-identity
+    non-negotiable, live on the committed numbers).  Committed rows:
+    tokens/sec for both paths, TTFT / TPOT / queue-wait p50/p90/p99
+    through the ``Telemetry`` facade (diffable against the PR 8
+    ``telemetry_*`` baselines — same trace, same load), and the pipeline
+    shape (dispatched ticks, flushes, peak in-flight, bucket table, pad
+    chunks) as evidence the overlap actually happened."""
+    from repro.launch.async_engine import AsyncServeEngine
+    from repro.obs import Telemetry
+
+    cfg = _trace_cfg()
+    with param_dtype(jnp.float32):
+        params = lm.init_params(jax.random.key(0), cfg)
+    rng = np.random.default_rng(41)
+    reqs = fidelity_trace(rng, LAT_N)
+    useful = sum(r.max_new_tokens for r in reqs)
+    kw = dict(max_slots=LAT_SLOTS, max_len=LAT_MAX_LEN,
+              prefill_chunk=LAT_CHUNK, decode_block=LAT_BLOCK,
+              page_size=LAT_PAGE)
+
+    tel = Telemetry()
+    sync = PagedServeEngine(cfg, params, **kw)
+    eng = PagedServeEngine(cfg, params, telemetry=tel,
+                           prefill_buckets=True, **kw)
+    apipe = AsyncServeEngine(eng, drain_depth=ASYNC_DEPTH)
+    warm = fidelity_trace(rng, 3)
+    sync.run(_shift(warm, sync.tick))                # warm the jits (the
+    apipe.run(_shift(warm, apipe.tick))              # buckets are AOT, but
+    tel.reset()                                      # decode still warms)
+
+    def run_one(runner):
+        shifted = _shift(reqs, runner.tick)
+        t0 = time.perf_counter()
+        comps = runner.run(shifted)
+        dt = time.perf_counter() - t0
+        return dt, [c.tokens for c in sorted(comps, key=lambda c: c.rid)]
+
+    st0 = apipe.metrics.snapshot()["async"]
+    a_s, s_s = float("inf"), float("inf")
+    for _ in range(3):               # interleaved best-of-3 (host drift)
+        d_a, toks_a = run_one(apipe)
+        d_s, toks_s = run_one(sync)
+        assert toks_a == toks_s, \
+            "async pipeline changed emitted tokens — bucketed prefill or " \
+            "pipelined harvest broke bit-identity with the tick loop"
+        a_s, s_s = min(a_s, d_a), min(s_s, d_s)
+    st1 = apipe.metrics.snapshot()["async"]
+    apipe.close()
+
+    s = tel.summary()                # all 3 measured serves: 3 * LAT_N reqs
+    assert s["requests_finished"] == 3 * LAT_N
+
+    def ms(summary):
+        return {q: round(summary[q] * 1e3, 2) for q in ("p50", "p90", "p99")}
+
+    a_tps, s_tps = useful / a_s, useful / s_s
+    return [
+        row(f"serve/async_tok_per_s[{label}]", a_s / useful * 1e6,
+            round(a_tps, 1)),
+        row(f"serve/async_sync_tok_per_s[{label}]", s_s / useful * 1e6,
+            round(s_tps, 1)),
+        row(f"serve/async_rel_x[{label}]", 0.0,
+            round(a_tps / max(s_tps, 1e-9), 2)),
+        row(f"serve/async_ttft_ms[{label}]", 0.0, ms(s["ttft_s"])),
+        row(f"serve/async_tpot_ms[{label}]", 0.0, ms(s["tpot_s"])),
+        row(f"serve/async_queue_wait_ms[{label}]", 0.0,
+            ms(s["queue_wait_s"])),
+        row(f"serve/async_exact_match[{label}]", 0.0, 1.0),
+        row(f"serve/async_pipeline[{label}]", 0.0, {
+            "dispatched_ticks": st1["dispatched_ticks"]
+            - st0["dispatched_ticks"],
+            "pipeline_flushes": st1["pipeline_flushes"]
+            - st0["pipeline_flushes"],
+            "max_inflight": st1["max_inflight"],
+            "drain_depth": ASYNC_DEPTH,
+            "buckets": list(eng._bucket_sizes),
+            "pad_chunks": eng.prefill_pad_chunks,
+            "aot": bool(eng.aot_prefill)}),
+    ]
+
+
 def spill_prefix_trace(rng, n: int):
     """Alternating waves: shared-system-prompt requests, then a flood of
     four distinct near-max-length requests whose combined footprint is the
@@ -1028,6 +1127,7 @@ def main(verbose: bool = True):
     rows += bench_kv_quant("log8")
     rows += bench_fidelity("drift")
     rows += bench_latency("paged")
+    rows += bench_async("paged")
     rows += bench_spill("two_tier")
     rows += bench_sharded("4Lx256d")
     if verbose:

@@ -34,10 +34,23 @@ class CheckpointManager:
         self.keep = keep
         self.async_write = async_write
         self._pending: threading.Thread | None = None
+        # a failed async write must not vanish with its daemon thread:
+        # the writer parks the exception here and the next save()/wait()/
+        # close() re-raises it on the caller (ISSUE 10)
+        self._error: BaseException | None = None
+        self._error_step: int | None = None
         os.makedirs(directory, exist_ok=True)
+
+    def _check_error(self):
+        if self._error is not None:
+            err, step = self._error, self._error_step
+            self._error = self._error_step = None
+            raise RuntimeError(
+                f"async checkpoint write for step {step} failed") from err
 
     # -- save ----------------------------------------------------------------
     def save(self, tree, step: int, blocking: bool = True):
+        self._check_error()
         leaves, treedef = _flatten(tree)
         # np.array(copy=True), never np.asarray: asarray of a CPU jax
         # array can alias the device buffer, and a donating jit (in-place
@@ -67,15 +80,31 @@ class CheckpointManager:
 
         if self.async_write and not blocking:
             self.wait()
-            self._pending = threading.Thread(target=_write, daemon=True)
+
+            def _guarded():
+                try:
+                    _write()
+                except BaseException as exc:   # park it for the caller
+                    self._error, self._error_step = exc, step
+
+            self._pending = threading.Thread(target=_guarded, daemon=True)
             self._pending.start()
         else:
             _write()
 
     def wait(self):
+        """Join the in-flight async write, re-raising its failure (a
+        blocking barrier callers use before reading the checkpoint)."""
         if self._pending is not None:
             self._pending.join()
             self._pending = None
+        self._check_error()
+
+    def close(self):
+        """Shutdown: join any pending writer and surface its error.
+        Idempotent; after close the manager is still usable (close is a
+        barrier, not an invalidation)."""
+        self.wait()
 
     def _gc(self):
         steps = self.available_steps()

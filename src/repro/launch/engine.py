@@ -38,6 +38,16 @@ kernel dispatches per-shard via shard_map, and host-side scheduling stays
 global.  Under the default rules, sharded outputs are bit-identical to
 ``mesh=None`` (tests/test_engine_sharded.py).
 
+**Async serving** (DESIGN.md §14): both engines expose their decode tick
+as ``_dispatch_tick()`` — device dispatch only, returning the emitted-token
+device buffer plus a freshly allocated active-mask snapshot — so
+``launch/async_engine.AsyncServeEngine`` can run dispatch and host-side
+harvest on separate threads (device never blocks on detokenize-side work).
+With ``prefill_buckets`` set, admission-wave chunk prefill additionally
+runs as ONE per-bucket executable AOT-compiled at construction
+(``jax.jit(...).lower(...).compile()``), waves padded to the bucket edge
+with all-False write masks — bucket choice cannot change cache bytes.
+
 ``PagedServeEngine`` below replaces the per-slot worst-case cache rows
 with a paged pool + radix prefix sharing (DESIGN.md §7): same scheduler,
 same contracts, bit-exact outputs, but physical capacity decouples from
@@ -81,8 +91,17 @@ from .fidelity import DriftInjection, FidelityMonitor, FidelityPolicy
 from .kvpool import PagePool, nldpe_fingerprint
 from .sampling import TOP_K_CAP, request_key, sample_tokens, step_keys
 from .spec_decode import (batch_dim as _batch_dim, build_draft_scan_fn,
-                          build_verify_fn, clip_positions,
+                          build_verify_fn, clip_positions, emits_tick_major,
                           per_slot as _per_slot, quantize_draft_params)
+
+
+def _merge_last(last, lg, take, col):
+    """Running (S, V) last-logits merge: each chunk contributes only the
+    rows of slots whose last real prompt token lives in it, so wave memory
+    never scales with chunk count (full (S, C, V) logits would be
+    ~n_chunks x slots x chunk x vocab on a real vocabulary)."""
+    rows = lg[jnp.arange(lg.shape[0]), col]                # (S, V)
+    return jnp.where(take[:, None], rows, last)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -149,7 +168,8 @@ class ServeEngine:
                  batch_groups: int = 1, dtype=jnp.float32,
                  kv_quant: str | None = None,
                  mesh=None, rules=None,
-                 telemetry: "Telemetry | bool | None" = None):
+                 telemetry: "Telemetry | bool | None" = None,
+                 prefill_buckets=None):
         bad = [t for t in cfg.layer_pattern if t not in ATTN_TYPES]
         if bad:
             raise NotImplementedError(
@@ -240,14 +260,7 @@ class ServeEngine:
                                  donate_argnums=(0,))
         self._decode_fn = jax.jit(self._ctx(self._build_decode_fn()),
                                   donate_argnums=(0, 1, 2, 3, 4))
-        # running (S, V) last-logits merge: each chunk contributes only the
-        # rows of slots whose last real prompt token lives in it, so wave
-        # memory never scales with chunk count (full (S, C, V) logits would
-        # be ~n_chunks x slots x chunk x vocab on a real vocabulary)
-        def merge_last(last, lg, take, col):
-            rows = lg[jnp.arange(lg.shape[0]), col]            # (S, V)
-            return jnp.where(take[:, None], rows, last)
-        self._last_fn = jax.jit(self._ctx(merge_last), donate_argnums=(0,))
+        self._last_fn = jax.jit(self._ctx(_merge_last), donate_argnums=(0,))
         # first-token sampler, fixed (max_slots, V) shape so it compiles once
         self._sample_fn = jax.jit(self._ctx(
             lambda logits, keys, positions, temp, topk:
@@ -256,6 +269,19 @@ class ServeEngine:
         # eager scatters re-specialize on every distinct wave size)
         self._state_fn = jax.jit(self._ctx(self._build_state_fn()),
                                  donate_argnums=tuple(range(7)))
+        # post-tick active-mask snapshot in a FRESH buffer (no donation):
+        # the next tick's decode donates the live ``_active`` buffer, so a
+        # consumer materializing a tick's results after later dispatches
+        # (the async drain thread) must not share it
+        self._snap_fn = jax.jit(self._ctx(lambda a: jnp.logical_or(a, False)))
+        # AOT-bucketed prefill (DESIGN.md §14): opt-in, off by default —
+        # the per-chunk dispatch loop below stays the reference path
+        self.prefill_pad_chunks = 0
+        self._bucket_sizes: list[int] = []
+        self._bucket_fns: dict[int, object] = {}
+        self.aot_prefill = False
+        if prefill_buckets:
+            self._build_buckets(prefill_buckets)
 
     # ------------------------------------------------------------------
     # mesh placement (no-ops when mesh is None)
@@ -365,6 +391,120 @@ class ServeEngine:
             return logits, ServeEngine._clip_pos(cache, mask, limit)
 
         return chunk
+
+    def _chunk_base(self, reuse, i: int):
+        """Chunk ``i``'s base-position argument for the chunk fn: a shared
+        scalar for the slotted engine (every admitted slot prefills at the
+        same offsets; ``reuse`` is always zero).  The paged engine
+        overrides with per-slot reuse-shifted vectors.  Works on host
+        arrays and traced arrays alike, so the eager chunk loop and the
+        in-graph bucket fn share it."""
+        del reuse
+        return jnp.int32(i * self.prefill_chunk)
+
+    def _build_bucket_fn(self, n: int):
+        """One prefill bucket: a whole admission wave's ``n``-chunk
+        sequence as ONE traced computation.  The per-chunk write masks,
+        base offsets, and clip limits the host dispatch loop computes are
+        derived in-graph from the wave's (admit, reuse, plen) vectors, so
+        a single executable serves every wave padded to this bucket —
+        padded chunks carry all-False write masks and leave the cache
+        bit-unchanged (write_mask gates every K/V scatter and both
+        position clips are masked no-ops)."""
+        chunk = self._build_chunk_fn()
+        c, s, v = self.prefill_chunk, self.max_slots, self.cfg.vocab_size
+
+        def bucket(cache, tokens, admit, reuse, plen, ci, col):
+            suffix = plen - reuse
+            last = jnp.zeros((s, v), jnp.float32)
+            for i in range(n):
+                mask = admit & (i * c < suffix)
+                limit = jnp.minimum(plen, reuse + (i + 1) * c)
+                lg, cache = chunk(
+                    cache, jax.lax.slice_in_dim(tokens, i * c, (i + 1) * c,
+                                                axis=1),
+                    self._chunk_base(reuse, i), mask, limit)
+                last = _merge_last(last, lg, admit & (ci == i), col)
+            return last, cache
+
+        return bucket
+
+    def _build_buckets(self, spec) -> None:
+        """AOT-compile the prefill bucket table (DESIGN.md §14).
+
+        ``spec`` is True — power-of-two chunk counts up to
+        ceil(max_len / prefill_chunk) — or an iterable of chunk counts;
+        the maximal bucket is always appended so every wave fits.  Each
+        bucket compiles at construction via ``jit(...).lower().compile()``
+        so the first admission of any prompt length pays zero compile
+        latency.  Sharded engines keep lazily-compiled jits per bucket
+        (input placement is decided by the sharding context at the first
+        call); the bucket *padding* semantics are identical either way.
+        """
+        c, s = self.prefill_chunk, self.max_slots
+        n_max = -(-self.max_len // c)
+        if spec is True:
+            sizes, n = [], 1
+            while n < n_max:
+                sizes.append(n)
+                n *= 2
+            sizes.append(n_max)
+        else:
+            sizes = sorted({min(max(1, int(b)), n_max) for b in spec})
+            if not sizes or sizes[-1] != n_max:
+                sizes.append(n_max)
+        self._bucket_sizes = sizes
+        cache_avals = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), self.cache)
+        vec = jax.ShapeDtypeStruct((s,), jnp.int32)
+        adm = jax.ShapeDtypeStruct((s,), jnp.bool_)
+        self.aot_prefill = self.mesh is None
+        for n in sizes:
+            fn = jax.jit(self._ctx(self._build_bucket_fn(n)),
+                         donate_argnums=(0,))
+            if self.aot_prefill:
+                toks = jax.ShapeDtypeStruct((s, n * c), jnp.int32)
+                fn = fn.lower(cache_avals, toks, adm, vec, vec, vec,
+                              vec).compile()
+            self._bucket_fns[n] = fn
+
+    def _prefill_chunks(self, admit, plen_np, reuse_np, tokens,
+                        ci_np, col_np):
+        """Dispatch one admission wave's chunked prefill; returns the
+        merged (S, V) last-token logits and the dispatched chunk count.
+
+        Default: one jit dispatch per chunk (the reference path).  With
+        ``prefill_buckets`` the wave pads to the smallest covering bucket
+        and runs as a single AOT-compiled call — the padded chunks are
+        write-masked off for every slot, so cache bytes and sampled tokens
+        are bit-identical to the per-chunk loop."""
+        s, c = self.max_slots, self.prefill_chunk
+        suffix = plen_np - reuse_np
+        n_chunks = -(-int(suffix[admit].max()) // c)
+        if self._bucket_fns:
+            nb = min(b for b in self._bucket_sizes if b >= n_chunks)
+            pad = tokens
+            if nb * c > tokens.shape[1]:
+                pad = np.zeros((s, nb * c), np.int32)
+                pad[:, :tokens.shape[1]] = tokens
+            self.prefill_pad_chunks += nb - n_chunks
+            last, self.cache = self._bucket_fns[nb](
+                self.cache, jnp.asarray(pad), jnp.asarray(admit),
+                jnp.asarray(reuse_np), jnp.asarray(plen_np),
+                jnp.asarray(ci_np), jnp.asarray(col_np))
+            return last, nb
+        col_j = jnp.asarray(col_np)
+        last = jnp.zeros((s, self.cfg.vocab_size), jnp.float32)
+        for i in range(n_chunks):
+            mask = jnp.asarray(admit & (i * c < suffix))
+            limit = np.minimum(plen_np, reuse_np + (i + 1) * c)
+            lg, self.cache = self._chunk_fn(
+                self.cache, jnp.asarray(tokens[:, i * c:(i + 1) * c]),
+                self._chunk_base(reuse_np, i), mask,
+                jnp.asarray(limit.astype(np.int32)))
+            last = self._last_fn(last, lg,
+                                 jnp.asarray(admit & (ci_np == i)), col_j)
+        return last, n_chunks
 
     def _build_state_fn(self):
         def apply_state(tok, pos, active, gen_left, temp, topk, keys,
@@ -494,17 +634,9 @@ class ServeEngine:
             pos_np[sl] = len(r.tokens)
             temp_np[sl] = r.temperature
             topk_np[sl] = r.top_k
-        col_j = jnp.asarray(col_np)
 
-        last = jnp.zeros((s, self.cfg.vocab_size), jnp.float32)
-        for i in range(n_chunks):
-            mask = jnp.asarray(admit & (i * c < plen))
-            limit = np.minimum(plen, (i + 1) * c).astype(np.int32)
-            lg, self.cache = self._chunk_fn(
-                self.cache, jnp.asarray(tokens[:, i * c:(i + 1) * c]),
-                jnp.int32(i * c), mask, jnp.asarray(limit))
-            last = self._last_fn(last, lg, jnp.asarray(admit & (ci_np == i)),
-                                 col_j)
+        last, n_disp = self._prefill_chunks(
+            admit, plen, np.zeros((s,), np.int32), tokens, ci_np, col_np)
 
         all_firsts = np.asarray(self._sample_fn(
             last, jnp.asarray(keys_np), jnp.asarray(pos_np),
@@ -515,7 +647,7 @@ class ServeEngine:
             # is already synchronized, so the bracket closes here for free
             wall = tel.phases.add("admission", t_wave)
             tel.event("admission_wave", self.tick, n_reqs=len(reqs),
-                      n_chunks=n_chunks, wall_s=wall)
+                      n_chunks=n_disp, wall_s=wall)
 
         done: list[Completion] = []
         sel = np.zeros((s,), bool)
@@ -637,7 +769,9 @@ class ServeEngine:
         return {"tick": self.tick, "free_slots": self.free_slots,
                 "active_slots": sum(o is not None
                                     for o in self._slot_owner),
-                "inflight": len(self._out)}
+                "inflight": len(self._out),
+                "prefill_buckets": len(self._bucket_sizes),
+                "prefill_pad_chunks": self.prefill_pad_chunks}
 
     def _tel_note_admit(self, r: Request, sl: int, *, reuse: int = 0,
                         pages_held: int = 0) -> None:
@@ -656,10 +790,19 @@ class ServeEngine:
         # admission wave — this call sits right after that sample
         tel.first_token(r.rid, self.tick)
 
-    def step(self) -> list[Completion]:
-        """One decode tick: ``decode_block`` scanned steps over all slots.
-        Returns the requests that finished during the tick."""
+    def _dispatch_tick(self):
+        """Device work of one decode tick, no host-side harvest.
+
+        Dispatches the scanned decode jit and returns ``(emits, active,
+        fin)``: the (T, S) emitted-token buffer, the post-tick active mask
+        in a freshly allocated buffer (the next tick donates the live
+        one), and ``fin`` — a host callback closing the tick's telemetry
+        bracket once a consumer has materialized ``emits`` (None when that
+        already happened, or with telemetry off).  :meth:`step`
+        materializes inline; the async engine hands the triple to its
+        drain thread so device dispatch never blocks on host work."""
         tel = self.telemetry
+        t0 = 0.0
         if tel is not None:
             tel.tick_boundary(self.tick)
             t0 = tel.phases.now()
@@ -668,19 +811,36 @@ class ServeEngine:
                                   self._active, self._gen_left, self._temp,
                                   self._topk, self._keys)
         self.tick += self.decode_block
-        emits = np.asarray(emits)       # the tick's one existing host sync
-        if tel is not None:
-            wall = tel.phases.add("decode", t0)
-            tel.event("decode_block", self.tick,
-                      n_active=sum(o is not None
-                                   for o in self._slot_owner),
-                      block=self.decode_block, wall_s=wall)
-        return self._harvest(emits)
+        active = self._snap_fn(self._active)
+        if tel is None:
+            return emits, active, None
+        tick_after = self.tick
+        n_active = sum(o is not None for o in self._slot_owner)
 
-    def _harvest(self, emits: np.ndarray) -> list[Completion]:
+        def fin():
+            wall = tel.phases.add("decode", t0)
+            tel.event("decode_block", tick_after, n_active=n_active,
+                      block=self.decode_block, wall_s=wall)
+
+        return emits, active, fin
+
+    def step(self) -> list[Completion]:
+        """One decode tick: ``decode_block`` scanned steps over all slots.
+        Returns the requests that finished during the tick."""
+        emits, active, fin = self._dispatch_tick()
+        emits = np.asarray(emits)       # the tick's one existing host sync
+        active = np.asarray(active)
+        if fin is not None:
+            fin()
+        return self._harvest(emits, active)
+
+    def _harvest(self, emits: np.ndarray,
+                 active: np.ndarray) -> list[Completion]:
         """Fold one tick's emitted tokens (T, S), -1 = no token, into the
-        per-request outputs and retire slots that went inactive."""
-        active = np.asarray(self._active)
+        per-request outputs and retire slots that went inactive.  ``active``
+        is that tick's post-dispatch mask snapshot — passed in, not read
+        from ``self._active``, because under the async pipeline later
+        ticks may already have advanced (and donated) the live state."""
         done: list[Completion] = []
         for s, req in enumerate(self._slot_owner):
             if req is None:
@@ -710,26 +870,45 @@ class ServeEngine:
         completions: list[Completion] = []
         tel = self.telemetry
         while queue or waiting or self.any_active or self._preempted:
+            progressed = False
             while queue and queue[0].arrival <= self.tick:
                 r = queue.popleft()
                 if tel is not None:
                     tel.enqueue(r.rid, r.arrival)
                 waiting.append(r)
+                progressed = True
+            n_pre = len(self._preempted)
             self._resume_preempted(waiting)
+            progressed |= len(self._preempted) != n_pre
             if waiting and self._can_admit(waiting):
                 wave = self._select_wave(waiting)
                 if wave:
                     completions.extend(self._admit_wave(wave))
+                    progressed = True
             if not self.any_active:
-                if waiting:
+                if progressed:
                     continue        # instant finishes freed slots; re-admit
-                if queue:           # idle until the next arrival
+                if queue:
+                    # idle until the next arrival — this strictly advances
+                    # the tick (an arrival <= tick would have moved to
+                    # waiting above), so the loop cannot spin here even
+                    # with a non-empty waiting queue whose admission is
+                    # blocked: future arrivals still get their chance
                     self.tick = max(self.tick, queue[0].arrival)
                     continue
+                # nothing active, nothing arriving, and this iteration
+                # moved nothing: no future iteration can differ — a
+                # stall, not a schedule; never spin silently
+                if waiting:
+                    raise RuntimeError(
+                        f"scheduler deadlock: {len(waiting)} waiting and "
+                        f"{len(self._preempted)} preempted request(s), no "
+                        f"active slots, no future arrivals, and admission "
+                        f"made no progress (admission blocked or the pool "
+                        f"is too small for the requests)")
                 if self._preempted:
                     # resume into a fully idle engine just failed: the
-                    # pool cannot hold the preempted footprints — a
-                    # stall, not a schedule; never spin silently
+                    # pool cannot hold the preempted footprints
                     raise RuntimeError(
                         f"{len(self._preempted)} preempted request(s) "
                         f"cannot resume into an idle engine; the page "
@@ -800,7 +979,8 @@ class PagedServeEngine(ServeEngine):
                  fidelity: FidelityPolicy | None = None,
                  kv_quant: str | None = None,
                  mesh=None, rules=None,
-                 telemetry: "Telemetry | bool | None" = None):
+                 telemetry: "Telemetry | bool | None" = None,
+                 prefill_buckets=None):
         if "local" in cfg.layer_pattern:
             raise NotImplementedError(
                 "paged KV cache needs non-windowed attention layers: ring "
@@ -844,7 +1024,7 @@ class PagedServeEngine(ServeEngine):
                          decode_block=decode_block, eos_id=eos_id,
                          batch_groups=batch_groups, dtype=dtype,
                          kv_quant=kv_quant, mesh=mesh, rules=rules,
-                         telemetry=telemetry)
+                         telemetry=telemetry, prefill_buckets=prefill_buckets)
         self._setup_fn = jax.jit(self._ctx(self._build_setup_fn()),
                                  donate_argnums=(0,))
         self._copy_fn = jax.jit(self._ctx(self._build_copy_fn()),
@@ -1100,23 +1280,28 @@ class PagedServeEngine(ServeEngine):
                       spec_k=self.monitor.spec_k, ewma=self.monitor.ewma,
                       vclock_s=self.vclock)
 
-    def step(self) -> list[Completion]:
-        """One decode tick.  Non-speculative engines scan ``decode_block``
-        plain steps (base class); with ``spec_k`` set, a tick is ONE
-        speculative step — k analog drafts + one exact batched verify —
-        emitting 1..k+1 tokens per active slot.  Under the fidelity loop
-        ``k`` is the monitor's live depth, and ``k == 0`` (draft disabled)
-        falls back to the base exact scan: the drafter never owned
-        correctness, so disabling it moves throughput only."""
+    def _dispatch_tick(self):
+        """One decode tick's dispatch.  Non-speculative engines scan
+        ``decode_block`` plain steps (base class); with ``spec_k`` set, a
+        tick is ONE speculative step — k analog drafts + one exact batched
+        verify — emitting 1..k+1 tokens per active slot.  Under the
+        fidelity loop ``k`` is the monitor's live depth, and ``k == 0``
+        (draft disabled) falls back to the base exact scan: the drafter
+        never owned correctness, so disabling it moves throughput only.
+
+        Speculative ticks return already-materialized host arrays: draft
+        metering and the acceptance counters feeding the fidelity ladder
+        need the tick's results on host before the next dispatch, so spec
+        serving pipelines admission against decode only."""
         if not self.spec_k:
-            return super().step()
+            return super()._dispatch_tick()
         k = self.spec_k_live = (self.monitor.spec_k
                                 if self.monitor is not None else self.spec_k)
         if k == 0:
-            done = super().step()
+            out = super()._dispatch_tick()
             self._disabled_ticks += 1
             self._after_tick(drafted=0, accepted=0, k=0)
-            return done
+            return out
         tel = self.telemetry
         if tel is not None:
             tel.tick_boundary(self.tick)
@@ -1169,7 +1354,8 @@ class PagedServeEngine(ServeEngine):
                 else self._ewma_alpha * acc
                 + (1 - self._ewma_alpha) * self.ewma_acceptance)
         self._after_tick(drafted=d, accepted=a, k=k)
-        return self._harvest(np.asarray(emits).T)      # (S, k+1) -> (T, S)
+        # explicit copy again: the next verify donates this active buffer
+        return emits_tick_major(emits), np.array(self._active), None
 
     # ------------------------------------------------------------------
     # jit'd building blocks (paged variants)
@@ -1193,6 +1379,15 @@ class PagedServeEngine(ServeEngine):
             return logits, ServeEngine._clip_pos(cache, mask, limit)
 
         return chunk
+
+    def _chunk_base(self, reuse, i: int):
+        """Per-slot base positions: prefix hits shift each slot's suffix
+        independently, so chunk ``i`` starts at ``reuse + i * c`` per slot
+        (host or traced arrays alike)."""
+        if isinstance(reuse, np.ndarray):
+            return jnp.asarray((reuse + i * self.prefill_chunk)
+                               .astype(np.int32))
+        return (reuse + i * self.prefill_chunk).astype(jnp.int32)
 
     def _build_setup_fn(self):
         def setup(cache, mask, reuse, new_bt):
@@ -1707,18 +1902,9 @@ class PagedServeEngine(ServeEngine):
                 request_key(r.seed if r.seed is not None else r.rid))
             temp_np[sl] = r.temperature
             topk_np[sl] = r.top_k
-        col_j = jnp.asarray(col_np)
 
-        last = jnp.zeros((s, self.cfg.vocab_size), jnp.float32)
-        for i in range(n_chunks):
-            mask = jnp.asarray(admit & (i * c < suffix))
-            base = (reuse_np + i * c).astype(np.int32)
-            limit = np.minimum(plen_np, base + c).astype(np.int32)
-            lg, self.cache = self._chunk_fn(
-                self.cache, jnp.asarray(tokens[:, i * c:(i + 1) * c]),
-                jnp.asarray(base), mask, jnp.asarray(limit))
-            last = self._last_fn(last, lg, jnp.asarray(admit & (ci_np == i)),
-                                 col_j)
+        last, n_disp = self._prefill_chunks(
+            admit, plen_np, reuse_np, tokens, ci_np, col_np)
 
         all_firsts = np.asarray(self._sample_fn(
             last, jnp.asarray(keys_np), jnp.asarray(plen_np),
@@ -1727,7 +1913,7 @@ class PagedServeEngine(ServeEngine):
         if tel is not None:
             wall = tel.phases.add("admission", t_wave)
             tel.event("admission_wave", self.tick, n_reqs=len(reqs),
-                      n_chunks=n_chunks, wall_s=wall)
+                      n_chunks=n_disp, wall_s=wall)
 
         # Phase 5 — identical post-prefill bookkeeping to the slotted
         # engine: record first tokens, retire instant finishes (releasing

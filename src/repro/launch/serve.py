@@ -155,6 +155,29 @@ def python_loop_decode(decode_fn, params, cache, tok0, start_pos: int,
     return jnp.stack(out, axis=1), cache
 
 
+def _wrap_async(eng, args):
+    """--async-serve: run the demo through the dispatch/drain pipeline
+    (the engine was built with prefill_buckets=True, so admission waves go
+    through the AOT bucket executables)."""
+    if not args.async_serve:
+        return eng
+    from .async_engine import AsyncServeEngine
+    return AsyncServeEngine(eng)
+
+
+def _report_async(runner, eng, args) -> None:
+    if not args.async_serve:
+        return
+    a = eng.metrics.snapshot()["async"]
+    print(f"  async: {a['dispatched_ticks']} dispatched ticks, max "
+          f"inflight {a['max_inflight']}/{a['drain_depth']}, "
+          f"{a['pipeline_flushes']} pipeline flushes; prefill buckets "
+          f"{eng._bucket_sizes} (x{eng.prefill_chunk} tok), "
+          f"{eng.prefill_pad_chunks} pad chunks, "
+          f"AOT={'yes' if eng.aot_prefill else 'no (mesh)'}")
+    runner.close()
+
+
 def _report_obs(eng, args) -> None:
     """Print the telemetry story after an engine demo: latency percentile
     summaries, phase wall shares, optional JSONL trace / profiler output,
@@ -184,6 +207,46 @@ def _report_obs(eng, args) -> None:
                   f"{tel.profiler.logdir} (load in perfetto)")
     if args.metrics:
         print(eng.metrics.prometheus_text(), end="")
+
+
+def _validate_args(p, args) -> None:
+    """Fail fast on incoherent flag combinations instead of silently
+    ignoring them (ISSUE 10): every engine-only or paged-only flag that
+    moved off its default must actually reach a code path that reads it."""
+    engine = args.continuous or args.paged
+
+    def moved(name):
+        return getattr(args, name) != p.get_default(name)
+
+    if args.continuous and args.paged:
+        p.error("--continuous and --paged are mutually exclusive "
+                "(pick one engine demo)")
+    paged_only = ("page_size", "host_cache_pages", "priority", "num_pages",
+                  "system_prompt_len", "spec", "spec_full_analog", "drift",
+                  "fault_rate", "drift_dt", "kv_quant")
+    bad = [n for n in paged_only if moved(n)]
+    if bad and not args.paged:
+        p.error(f"--{bad[0].replace('_', '-')} requires --paged "
+                f"(the lockstep/--continuous paths ignore it)")
+    engine_only = ("slots", "requests", "mesh", "mesh_rules", "telemetry",
+                   "trace_out", "profile_ticks", "metrics", "async_serve")
+    bad = [n for n in engine_only if moved(n)]
+    if bad and not engine:
+        p.error(f"--{bad[0].replace('_', '-')} requires an engine demo "
+                f"(--continuous or --paged); the lockstep path ignores it")
+    if moved("mesh_rules") and not args.mesh:
+        p.error("--mesh-rules requires --mesh DP,TP")
+    if moved("profile_dir") and not args.profile_ticks:
+        p.error("--profile-dir requires --profile-ticks N")
+    if args.python_loop and engine:
+        p.error("--python-loop is a lockstep-path baseline; the engine "
+                "demos always use the scanned decode")
+    if moved("batch") and engine:
+        p.error("--batch sizes the lockstep path; engine demos size by "
+                "--slots/--requests")
+    if (args.drift is not None or args.fault_rate) and not args.spec:
+        p.error("--drift/--fault-rate need --spec K (they age the "
+                "analog draft path)")
 
 
 def run(argv=None):
@@ -286,8 +349,14 @@ def run(argv=None):
     p.add_argument("--metrics", action="store_true",
                    help="print the engine's unified metrics registry as "
                         "Prometheus text exposition after the run")
+    p.add_argument("--async-serve", action="store_true",
+                   help="drive the engine demo through the async "
+                        "dispatch/drain pipeline with AOT-compiled prefill "
+                        "length buckets (DESIGN.md §14); tokens are "
+                        "bit-identical to the tick loop")
     p.add_argument("--seed", type=int, default=0)
     args = p.parse_args(argv)
+    _validate_args(p, args)
 
     mesh = None
     if args.mesh:
@@ -333,9 +402,6 @@ def run(argv=None):
                       else NLDPEConfig(enabled=False))
         drift = None
         if args.drift is not None or args.fault_rate:
-            if not args.spec:
-                p.error("--drift/--fault-rate need --spec K (they age the "
-                        "analog draft path)")
             from ..core.drift import DriftModel
             from .fidelity import DriftInjection, FidelityPolicy
             drift = DriftInjection(
@@ -357,9 +423,11 @@ def run(argv=None):
                                          else None),
                                kv_quant=args.kv_quant,
                                mesh=mesh, rules=args.mesh_rules,
-                               telemetry=tel)
+                               telemetry=tel,
+                               prefill_buckets=args.async_serve or None)
+        runner = _wrap_async(eng, args)
         t0 = time.time()
-        comps = eng.run(reqs)
+        comps = runner.run(reqs)
         dt = time.time() - t0
         n_tok = sum(len(c.tokens) for c in comps)
         st = eng.stats
@@ -397,6 +465,7 @@ def run(argv=None):
                   f"({fs['downtime_s']:.0f}s downtime), "
                   f"{fs['fault_fraction']:.2%} cells stuck, live spec_k "
                   f"{fs['spec_k_live']}; events:{ev}")
+        _report_async(runner, eng, args)
         _report_obs(eng, args)
         for c in comps[:4]:
             print(f"  rid={c.rid} admitted@{c.admitted_tick} "
@@ -418,14 +487,17 @@ def run(argv=None):
                 for i in range(args.requests)]
         eng = ServeEngine(cfg, params, max_slots=args.slots, max_len=max_len,
                           nldpe=nldpe, mesh=mesh, rules=args.mesh_rules,
-                          telemetry=tel)
+                          telemetry=tel,
+                          prefill_buckets=args.async_serve or None)
+        runner = _wrap_async(eng, args)
         t0 = time.time()
-        comps = eng.run(reqs)
+        comps = runner.run(reqs)
         dt = time.time() - t0
         n_tok = sum(len(c.tokens) for c in comps)
         print(f"[serve] continuous: {len(comps)} requests, {n_tok} tokens "
               f"in {dt * 1e3:.0f} ms ({n_tok / max(dt, 1e-9):.1f} tok/s, "
               f"{args.slots} slots, {eng.tick} ticks)")
+        _report_async(runner, eng, args)
         _report_obs(eng, args)
         for c in comps[:4]:
             print(f"  rid={c.rid} admitted@{c.admitted_tick} "

@@ -52,6 +52,8 @@ equality, not just token equality.
 """
 from __future__ import annotations
 
+import numpy as np
+
 import jax
 import jax.numpy as jnp
 import jax.tree_util as jtu
@@ -104,6 +106,15 @@ def clip_positions(cache, mask, bound):
         return jnp.where(m & (leaf >= b), jnp.int32(-1), leaf)
 
     return jtu.tree_map_with_path(one, cache)
+
+
+def emits_tick_major(emits) -> np.ndarray:
+    """Materialize a verify step's per-slot emissions (S, k+1) into the
+    tick-major (T, S) host layout the engine harvest consumes (the plain
+    decode scan already emits tick-major).  One named place pins this
+    layout contract now that two consumers exist: the synchronous
+    ``step()`` and the async engine's drain path."""
+    return np.asarray(emits).T
 
 
 # ---------------------------------------------------------------------------

@@ -121,7 +121,10 @@ class MetricsRegistry:
 
     * ``counter/gauge/histogram(name)`` — directly-driven instruments the
       caller holds and updates on the hot path (attribute access + int add;
-      no locks, the engines are single-threaded per tick).
+      no locks: all engine-state mutation stays on one thread — the tick
+      loop, or the async pipeline's scheduler thread (DESIGN.md §14) —
+      and group collectors read plain ints/dicts, so a snapshot taken
+      from another thread is merely point-in-time, never corrupt).
     * ``register_group(name, fn)`` — a zero-argument closure returning a
       dict, evaluated only at snapshot time.  This is how the legacy stats
       dicts plug in without the engines paying anything per tick:

@@ -27,6 +27,13 @@ Three cooperating pieces, all host-side and allocation-bounded:
 :class:`TickProfiler` is the opt-in deep lens: capture N engine ticks with
 ``jax.profiler`` (perfetto-viewable trace) and stop — serving continues.
 
+The accumulators (:class:`BoundedLog`, :class:`Percentiles`,
+:class:`PhaseTimers`) are internally locked: the async serve pipeline
+(DESIGN.md §14) has its drain thread fold "drain" phase walls while the
+scheduler thread owns every other write, and a reader may snapshot
+mid-serve.  The locks bound tiny host-side critical sections — never a
+device sync — so the zero-behavioral-footprint bar is untouched.
+
 Nothing here imports from ``launch`` (the engines import *us*), and jax is
 imported only inside the profiler, so the module stays a pure host-side
 dependency.
@@ -35,6 +42,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import threading
 import time
 from collections import deque
 
@@ -101,24 +109,32 @@ class BoundedLog:
         self.capacity = capacity
         self._items: deque = deque(maxlen=capacity)
         self.dropped = 0
+        self._lock = threading.RLock()   # re-entrant: EventTrace.emit
+        #                                  holds it across seq-stamp+append
 
     def append(self, item) -> None:
-        if len(self._items) == self.capacity:
-            self.dropped += 1
-        self._items.append(item)
+        with self._lock:
+            if len(self._items) == self.capacity:
+                self.dropped += 1
+            self._items.append(item)
 
     def __len__(self) -> int:
         return len(self._items)
 
     def __iter__(self):
-        return iter(self._items)
+        # iterate a point-in-time copy: a concurrent append to a full ring
+        # mutates both ends and would invalidate a live deque iterator
+        with self._lock:
+            return iter(list(self._items))
 
     def __getitem__(self, i):
-        return self._items[i]
+        with self._lock:
+            return self._items[i]
 
     def clear(self) -> None:
-        self._items.clear()
-        self.dropped = 0
+        with self._lock:
+            self._items.clear()
+            self.dropped = 0
 
 
 class EventTrace(BoundedLog):
@@ -144,10 +160,11 @@ class EventTrace(BoundedLog):
             raise ValueError(
                 f"event {ev!r} fields {sorted(fields)} != schema "
                 f"{sorted(want)}")
-        rec = {"ev": ev, "t": self._clock(), "tick": int(tick),
-               "seq": self._seq, **fields}
-        self._seq += 1
-        self.append(rec)
+        with self._lock:
+            rec = {"ev": ev, "t": self._clock(), "tick": int(tick),
+                   "seq": self._seq, **fields}
+            self._seq += 1
+            self.append(rec)
         return rec
 
     def flush_jsonl(self, path) -> int:
@@ -155,10 +172,12 @@ class EventTrace(BoundedLog):
         version, drop count) followed by one line per event, oldest first.
         Returns the number of event lines written.  The buffer is left
         intact (flush is an observation too)."""
-        events = list(self._items)
+        with self._lock:
+            events = list(self._items)
+            dropped = self.dropped
         with open(path, "w") as f:
             meta = {"ev": "meta", "schema_version": SCHEMA_VERSION,
-                    "events": len(events), "dropped": self.dropped}
+                    "events": len(events), "dropped": dropped}
             f.write(json.dumps(meta) + "\n")
             for rec in events:
                 f.write(json.dumps(rec) + "\n")
@@ -190,21 +209,25 @@ class Percentiles:
         self._vals: deque[float] = deque(maxlen=window)
         self.count = 0
         self.total = 0.0
+        self._lock = threading.Lock()
 
     def add(self, v: float) -> None:
         v = float(v)
-        self._vals.append(v)
-        self.count += 1
-        self.total += v
+        with self._lock:
+            self._vals.append(v)
+            self.count += 1
+            self.total += v
 
     def summary(self) -> dict:
         """{count, mean, max, p50, p90, p99} — None-filled when empty."""
-        if not self._vals:
-            return {"count": 0, "mean": None, "max": None,
-                    **{f"p{int(q)}": None for q in self.QUANTILES}}
-        arr = np.asarray(self._vals, dtype=np.float64)
-        out = {"count": self.count,
-               "mean": float(self.total / self.count),
+        with self._lock:
+            if not self._vals:
+                return {"count": 0, "mean": None, "max": None,
+                        **{f"p{int(q)}": None for q in self.QUANTILES}}
+            arr = np.asarray(self._vals, dtype=np.float64)
+            count, total = self.count, self.total
+        out = {"count": count,
+               "mean": float(total / count),
                "max": float(arr.max())}
         ps = np.percentile(arr, self.QUANTILES)
         for q, p in zip(self.QUANTILES, ps):
@@ -212,9 +235,10 @@ class Percentiles:
         return out
 
     def reset(self) -> None:
-        self._vals.clear()
-        self.count = 0
-        self.total = 0.0
+        with self._lock:
+            self._vals.clear()
+            self.count = 0
+            self.total = 0.0
 
 
 class PhaseTimers:
@@ -231,6 +255,7 @@ class PhaseTimers:
         self._clock = clock
         self.seconds: dict[str, float] = {}
         self.calls: dict[str, int] = {}
+        self._lock = threading.Lock()
 
     def now(self) -> float:
         return self._clock()
@@ -241,18 +266,22 @@ class PhaseTimers:
     def record(self, phase: str, dt: float) -> float:
         """Fold an externally-measured duration (an engine that already
         metered the phase for its own stats hands the same value here,
-        instead of paying a second clock read)."""
-        self.seconds[phase] = self.seconds.get(phase, 0.0) + dt
-        self.calls[phase] = self.calls.get(phase, 0) + 1
+        instead of paying a second clock read).  This is the one telemetry
+        write the async drain thread performs, hence the lock."""
+        with self._lock:
+            self.seconds[phase] = self.seconds.get(phase, 0.0) + dt
+            self.calls[phase] = self.calls.get(phase, 0) + 1
         return dt
 
     def snapshot(self) -> dict:
-        return {p: {"seconds": self.seconds[p], "calls": self.calls[p]}
-                for p in self.seconds}
+        with self._lock:
+            return {p: {"seconds": self.seconds[p], "calls": self.calls[p]}
+                    for p in self.seconds}
 
     def reset(self) -> None:
-        self.seconds.clear()
-        self.calls.clear()
+        with self._lock:
+            self.seconds.clear()
+            self.calls.clear()
 
 
 # ---------------------------------------------------------------------------

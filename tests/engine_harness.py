@@ -33,6 +33,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.core.engine import NLDPEConfig
+from repro.launch.async_engine import AsyncServeEngine
 from repro.launch.engine import PagedServeEngine, Request, ServeEngine
 from repro.launch.mesh import serve_mesh
 from repro.launch.serve import build_decode_step, python_loop_decode
@@ -104,6 +105,27 @@ def paged_engine(spec_k: int = 0, mesh_shape=None, **over) -> PagedServeEngine:
             kw.update(spec_k=spec_k, spec_draft=WQ_DRAFT)
         _STATE[key] = PagedServeEngine(CFG, shared_params(), **kw,
                                        mesh=mesh_for(mesh_shape))
+    return _STATE[key]
+
+
+def async_engine(kind: str = "slotted", spec_k: int = 0, mesh_shape=None,
+                 *, drain_depth: int = 4, **over) -> AsyncServeEngine:
+    """Singleton async pipeline over the AOT-bucketed twin of a sync
+    engine singleton (ISSUE 10).  The wrapper reuses the underlying
+    engine's compile cache across traces exactly like the sync
+    singletons; ``run_trace`` works unchanged because the wrapper
+    delegates ``.tick`` and keeps ``run()`` as a compat shim.  The
+    differential column compares this against the PLAIN (unbucketed,
+    tick-loop) singletons, so one comparison covers both tentpole halves:
+    bucketed AOT prefill and the async dispatch/drain pipeline."""
+    key = ("async", kind, spec_k,
+           None if mesh_shape is None else tuple(mesh_shape),
+           drain_depth, tuple(sorted(over.items())))
+    if key not in _STATE:
+        over = dict(over, prefill_buckets=True)
+        eng = (slotted_engine(mesh_shape, **over) if kind == "slotted"
+               else paged_engine(spec_k, mesh_shape, **over))
+        _STATE[key] = AsyncServeEngine(eng, drain_depth=drain_depth)
     return _STATE[key]
 
 

@@ -141,6 +141,52 @@ def test_async_save_snapshot_immune_to_donated_update(tmp_path):
     np.testing.assert_array_equal(np.asarray(out["x"]), original)
 
 
+def test_async_save_failure_reraised_not_swallowed(tmp_path):
+    """Regression (ISSUE 10): a failed async write used to die with its
+    daemon thread — the loss surfaced only at restore time.  The writer
+    now parks the exception and the next ``wait()``/``save()``/``close()``
+    re-raises it on the caller, after which the manager keeps working."""
+    m = CheckpointManager(str(tmp_path), async_write=True)
+    tree = {"x": jnp.ones((8,))}
+    good = m.dir
+    m.dir = str(tmp_path / "missing" / "nope")       # forces mkdtemp to fail
+    m.save(tree, 1, blocking=False)
+    with pytest.raises(RuntimeError, match="step 1 failed"):
+        m.wait()
+    m.dir = good                     # error cleared: manager still usable
+    m.save(tree, 2, blocking=False)
+    m.close()
+    assert m.latest_step() == 2
+
+    # the save()-side re-raise: park a failure, then the NEXT save refuses
+    # to queue more work on a manager with a lost write
+    m.dir = str(tmp_path / "missing" / "nope")
+    m.save(tree, 3, blocking=False)
+    m._pending.join()                # deterministically park the error
+    m.dir = good
+    with pytest.raises(RuntimeError, match="step 3 failed"):
+        m.save(tree, 4, blocking=False)
+    m.save(tree, 5, blocking=False)  # cleared again
+    m.close()
+    assert m.latest_step() == 5
+
+
+def test_async_save_close_joins_pending_writer(tmp_path):
+    """close() is a shutdown barrier: it joins the in-flight writer (the
+    checkpoint is fully on disk when it returns) and surfaces a pending
+    failure exactly once."""
+    m = CheckpointManager(str(tmp_path), async_write=True)
+    m.save({"x": jnp.arange(4.0)}, 9, blocking=False)
+    m.close()
+    assert m._pending is None
+    assert m.latest_step() == 9
+    m.dir = str(tmp_path / "gone" / "dir")
+    m.save({"x": jnp.arange(4.0)}, 10, blocking=False)
+    with pytest.raises(RuntimeError, match="step 10 failed"):
+        m.close()
+    m.close()                        # idempotent after the error drained
+
+
 def test_resilient_loop_times_steps_with_perf_counter():
     """Regression: straggler timing must use the monotonic
     ``time.perf_counter`` — an NTP step during ``time.time()`` deltas

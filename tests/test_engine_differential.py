@@ -538,3 +538,131 @@ def test_spill_telemetry_twin_stats_bit_identical():
     assert on.pool.stats["spilled"] > 0 and on.pool.stats["restored"] > 0
     kinds = {e["ev"] for e in on.telemetry.trace}
     assert {"spill", "restore", "preempt", "resume"} <= kinds, kinds
+
+
+# ---------------------------------------------------------------------------
+# the async pipeline column (ISSUE 10): the dispatch/drain pipeline over
+# AOT-bucketed prefill vs the plain tick-loop engines.  Each comparison
+# covers BOTH tentpole halves at once — the async engines wrap bucketed
+# twins, the sync side stays unbucketed — so a divergence in either the
+# bucket executables or the pipeline's harvest ordering fails the column.
+# Every test name carries "async" for CI's async-interpret leg (-k async).
+# ---------------------------------------------------------------------------
+
+
+def test_async_bit_identity_greedy():
+    """Tentpole acceptance: the async pipeline emits exactly the tick
+    loop's tokens — slotted and paged — on seeded greedy Poisson traces."""
+    for seed in (0, 1, 2):
+        trace = random_greedy_trace(np.random.default_rng(seed))
+        for kind, sync in (("slotted", H.slotted_engine()),
+                           ("paged", H.paged_engine())):
+            a = H.async_engine(kind)
+            assert H.run_trace(a, trace) == H.run_trace(sync, trace), \
+                f"async {kind} diverged (seed {seed})"
+            if kind == "paged":
+                H.audit(a.engine)
+    assert a.engine.aot_prefill, "paged async engine lost AOT buckets"
+
+
+def test_async_bit_identity_sampled():
+    """Mixed greedy/temperature/top-k traffic: the position-folded sampling
+    makes every draw schedule-invariant, so pipelined dispatch must
+    reproduce each sampled token bit-for-bit too."""
+    for seed in (10, 11, 12):
+        trace = random_mixed_trace(np.random.default_rng(seed))
+        assert H.run_trace(H.async_engine("slotted"), trace) \
+            == H.run_trace(H.slotted_engine(), trace)
+        a = H.async_engine("paged")
+        assert H.run_trace(a, trace) == H.run_trace(H.paged_engine(), trace)
+        H.audit(a.engine)
+
+
+def test_async_speculative_column():
+    """Speculative ticks are host-synchronous inside the engine, so the
+    async wrapper pipelines only admission-vs-decode around them — outputs
+    must still match the sync spec engine exactly, shared-prefix COW trace
+    included."""
+    k = TELEMETRY_SPEC_K
+    for trace in (random_greedy_trace(np.random.default_rng(3)),
+                  H.shared_prefix_cow_trace()):
+        a = H.async_engine("paged", spec_k=k)
+        assert H.run_trace(a, trace) \
+            == H.run_trace(H.paged_engine(spec_k=k), trace)
+        H.audit(a.engine)
+    assert a.engine.spec_stats["drafted"] > 0
+
+
+def test_async_spill_preemption_column():
+    """The two-tier column through the pipeline: spill/restore traffic and
+    priority preemption — the flush-before-admission barrier must keep the
+    scheduler from preempting (or re-tenanting) slots whose finishes sit
+    un-harvested in the drain queue."""
+    a = H.async_engine("paged", num_pages=SPILL_POOL,
+                       host_cache_pages=HOST_PAGES)
+    trace = spill_restore_trace()
+    before = dict(a.engine.pool.stats)
+    got = H.run_trace(a, trace)
+    H.audit(a.engine)
+    assert a.engine.pool.stats["spilled"] > before["spilled"]
+    assert H.run_trace(spill_engine(), trace) == got
+    pre_before = a.engine.preempts
+    reqs = priority_requests(a.tick)
+    got = {c.rid: c.tokens for c in a.run(reqs)}
+    assert a.engine.preempts > pre_before, "high priority never preempted"
+    H.audit(a.engine)
+    sync = spill_engine()
+    reqs = priority_requests(sync.tick)
+    assert {c.rid: c.tokens for c in sync.run(reqs)} == got
+
+
+def test_async_telemetry_twin():
+    """An instrumented async engine reproduces the plain sync engine's
+    tokens (observation is never control flow, threads included) and its
+    trace carries the same lifecycle events the sync instrumented engine
+    records — plus the pipeline's own dispatch/drain phase walls."""
+    trace = random_greedy_trace(np.random.default_rng(4))
+    a = H.async_engine("paged", telemetry=True)
+    a.telemetry.reset()
+    got = H.run_trace(a, trace)
+    assert got == H.run_trace(H.paged_engine(), trace)
+    H.audit(a.engine)
+    s = a.telemetry.summary()
+    assert s["requests_finished"] == len(trace)
+    assert s["ttft_s"]["count"] == len(trace)
+    assert {"dispatch", "drain", "decode", "admission"} <= set(s["phases"])
+    kinds = {e["ev"] for e in a.telemetry.trace}
+    assert {"enqueue", "admit", "first_token", "finish",
+            "admission_wave", "decode_block"} <= kinds
+
+
+def test_async_sharded_column():
+    """A mesh-backed engine through the pipeline (dp=tp=1 runs on one
+    device in-process): sharded engines keep lazily-compiled bucket jits
+    (aot_prefill=False — AOT input-sharding matching is brittle) but the
+    padding semantics are identical, and tokens must match the unsharded
+    sync engine bit-for-bit under serve_exact rules."""
+    trace = random_greedy_trace(np.random.default_rng(5))
+    a = H.async_engine("paged", mesh_shape=(1, 1))
+    assert not a.engine.aot_prefill
+    assert a.engine._bucket_sizes, "mesh engine lost its bucket table"
+    assert H.run_trace(a, trace) == H.run_trace(H.paged_engine(), trace)
+    H.audit(a.engine)
+
+
+def test_async_bucketed_prefill_isolated_from_pipeline():
+    """The bucket half alone: a SYNC engine with prefill_buckets=True must
+    match the plain sync engine (isolates the AOT executables from any
+    pipeline effect), exercise padding, and report its bucket table."""
+    eng = H.paged_engine(prefill_buckets=True)
+    assert eng.aot_prefill
+    pad0 = eng.prefill_pad_chunks
+    for seed in (0, 6):
+        trace = random_greedy_trace(np.random.default_rng(seed))
+        assert H.run_trace(eng, trace) \
+            == H.run_trace(H.paged_engine(), trace)
+        H.audit(eng)
+    assert eng.prefill_pad_chunks >= pad0
+    st = eng._engine_stats()
+    assert st["prefill_buckets"] == len(eng._bucket_sizes) > 0
+    assert st["prefill_pad_chunks"] == eng.prefill_pad_chunks

@@ -210,6 +210,31 @@ def test_submit_rejects_degenerate_requests(engine_off):
     assert engine_off.free_slots == engine_off.max_slots
 
 
+def test_run_raises_on_admission_deadlock(engine_off, monkeypatch):
+    """Regression (ISSUE 10): with every remaining request in ``waiting``,
+    nothing active, and admission blocked, ``run()`` used to spin tick by
+    tick forever (the idle fast-forward only looked at *future* arrivals).
+    It must now raise a clear deadlock error instead of livelocking —
+    leaving the engine untouched (nothing was admitted)."""
+    monkeypatch.setattr(engine_off, "_can_admit", lambda waiting: False)
+    with pytest.raises(RuntimeError, match="scheduler deadlock"):
+        engine_off.run([Request(rid=60, tokens=(1, 2), max_new_tokens=2,
+                                arrival=engine_off.tick)])
+    # future arrivals still fast-forward the tick before the stall is
+    # declared (the non-livelock path), then deadlock fires all the same
+    t0 = engine_off.tick
+    with pytest.raises(RuntimeError, match="scheduler deadlock"):
+        engine_off.run([Request(rid=61, tokens=(3,), max_new_tokens=2,
+                                arrival=engine_off.tick + 7)])
+    assert engine_off.tick >= t0 + 7, "idle fast-forward regressed"
+    assert engine_off.free_slots == engine_off.max_slots
+    monkeypatch.undo()
+    # the engine survives: the same request admits and completes normally
+    [c] = engine_off.run([Request(rid=60, tokens=(1, 2), max_new_tokens=2,
+                                  arrival=engine_off.tick)])
+    assert c.rid == 60 and len(c.tokens) == 2
+
+
 def test_duplicate_rids_rejected(engine_off):
     """Two in-flight requests sharing a rid would clobber each other's
     output buffer — rejected at admission, same wave or later."""

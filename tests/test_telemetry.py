@@ -107,6 +107,72 @@ def test_percentiles_sliding_window_keeps_freshest():
                            "p50": None, "p90": None, "p99": None}
 
 
+def test_percentiles_buffer_bounded_with_bench_scale_equality():
+    """Satellite (ISSUE 10): the percentile state must hold at most
+    ``window`` floats no matter how long the serve runs, and at bench
+    scale (n <= window — every BENCH_serve latency cell) the bounded
+    summary equals unbounded ``np.percentile`` EXACTLY, so the committed
+    p50/p90/p99 baselines are untouched by the bound."""
+    p = Percentiles()
+    rng = np.random.default_rng(9)
+    vals = rng.exponential(size=3000)        # bench cells sit well under
+    for v in vals:                           # the 4096 default window
+        p.add(v)
+    assert p._vals.maxlen == p.window == 4096
+    assert len(p._vals) == 3000
+    s = p.summary()
+    for q in (50, 90, 99):
+        assert s[f"p{q}"] == float(np.percentile(vals, q))
+    # multi-hour serve: memory stays flat at the window, summaries track
+    # the freshest window exactly
+    more = rng.exponential(size=20_000)
+    for v in more:
+        p.add(v)
+    assert len(p._vals) == p.window
+    assert p.count == 23_000                 # lifetime accounting survives
+    tail = np.concatenate([vals, more])[-p.window:]
+    for q in (50, 90, 99):
+        assert p.summary()[f"p{q}"] == float(np.percentile(tail, q))
+
+
+def test_obs_accumulators_are_thread_safe():
+    """The async pipeline's drain thread folds phase walls while the
+    scheduler thread emits events and percentiles, and readers snapshot
+    mid-serve (ISSUE 10) — hammer every accumulator from threads and
+    assert nothing is lost (the pre-lock dict read-modify-write could
+    drop updates at bytecode boundaries)."""
+    import threading
+    timers = PhaseTimers()
+    perc = Percentiles(window=128)
+    trace = EventTrace(capacity=256)
+    N, T = 2000, 4
+    start = threading.Barrier(T)
+
+    def hammer(i):
+        start.wait()
+        for k in range(N):
+            timers.record("drain", 0.001)
+            perc.add(float(k))
+            trace.emit("enqueue", k, rid=i * N + k)
+            if k % 256 == 0:                 # concurrent readers
+                timers.snapshot()
+                perc.summary()
+
+    threads = [threading.Thread(target=hammer, args=(i,)) for i in range(T)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    snap = timers.snapshot()["drain"]
+    assert snap["calls"] == T * N
+    assert np.isclose(snap["seconds"], T * N * 0.001)
+    assert perc.count == T * N
+    assert np.isclose(perc.total, T * sum(range(N)))
+    assert len(trace) + trace.dropped == T * N
+    seqs = [e["seq"] for e in trace]
+    assert len(set(seqs)) == len(seqs), "racing emits burned a seq twice"
+
+
 def test_phase_timers_accumulate():
     clock = iter([0.0, 1.5, 2.0, 2.25]).__next__
     t = PhaseTimers(clock=clock)
@@ -326,7 +392,8 @@ def test_spec_draft_seconds_uses_monotonic_clock():
     import inspect
     import re
     from repro.launch import engine as E
-    src = inspect.getsource(E.PagedServeEngine.step)
+    # the spec tick body moved into _dispatch_tick (ISSUE 10 async split)
+    src = inspect.getsource(E.PagedServeEngine._dispatch_tick)
     assert not re.search(r"=\s*time\.time\(\)", src)
     assert "perf_counter" in src
     eng, _, _ = _served_telemetry()
